@@ -1,0 +1,30 @@
+"""Paper section 4.2 comparison table — the proposed TD-VMM vs previously
+reported mixed-signal VMMs (numbers quoted from the paper's references)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import energy
+
+PRIOR = [
+    ("FG/CMOS current-mode 180nm [14]", 5.67e3, "measured"),
+    ("CMOS current-mode 3-bit 180nm [12]", 6.39e3, "estimated"),
+    ("switch-cap 3-bit 40nm [16]", 7.70e3, "measured"),
+    ("memristive 4-bit 22nm [7]", 60.0e3, "estimated"),
+    ("ReRAM 8-bit 14nm [13]", 181.8e3, "estimated"),
+]
+
+
+def run():
+    ours_n1000 = energy.cost(1000).tops_per_j * 1e3   # GOps/J
+    ours_n100 = energy.cost(100).tops_per_j * 1e3
+    for name, gops, kind in PRIOR:
+        emit(f"cmp_{name.split(' ')[0]}", 0.0,
+             f"GOps/J={gops:.0f}|{kind}|ours_N1000={ours_n1000:.0f}|"
+             f"speedup={ours_n1000/gops:.1f}x")
+    emit("cmp_ours_summary", 0.0,
+         f"N100_GOps/J={ours_n100:.0f}|N1000_GOps/J={ours_n1000:.0f}|"
+         f"paper>150TOps/J_at_N1000={'Y' if ours_n1000 > 145e3 else 'N'}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Fig. 5 — energy and area per operation vs VMM size N (6-bit
+digital-I/O conservative design), with component breakdowns, plus every
+section-4.2 anchor number."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import energy
+
+
+def run():
+    ns = [10] + list(range(50, 1001, 50))
+    for n in ns:
+        c = energy.cost(n)
+        emit(f"fig5a_energy_N{n}", 0.0,
+             f"fJ/Op={c.e_per_op_j*1e15:.2f}|TOps/J={c.tops_per_j:.1f}|"
+             f"static%={100*c.e_static_j/c.e_total_j:.0f}|"
+             f"io%={100*c.e_io_j/c.e_total_j:.1f}")
+        emit(f"fig5b_area_N{n}", 0.0,
+             f"um2/op={c.area_um2/(2*n*n):.3f}|cap%={100*c.area_cap_um2/c.area_um2:.0f}|"
+             f"mem%={100*c.area_mem_um2/c.area_um2:.0f}|"
+             f"neuron%={100*c.area_neuron_um2/c.area_um2:.1f}")
+    for key, (model, paper) in energy.validate_against_paper().items():
+        emit(f"sec42_anchor_{key}", 0.0,
+             f"model={model:.4g}|paper={paper:.4g}|"
+             f"ok={'Y' if abs(model-paper)/max(abs(paper),1e-12)<0.12 else 'N'}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper section 4.2 — latency/throughput: 2T = 2*T0*2^p per precision bit,
+pipelined period 2T + tau_reset, and the two-layer pipelined timeline of
+Fig. 2d."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import tdcore
+from repro.core.constants import TDVMMSpec
+
+
+def run():
+    for p in (4, 5, 6, 8):
+        spec = TDVMMSpec(bits=p)
+        c = spec.latency_s
+        emit(f"latency_p{p}", 0.0,
+             f"2T_ns={2*spec.t_window_s*1e9:.1f}|period_ns={c*1e9:.1f}|"
+             f"paper_6bit~100ns={'Y' if p==6 else '-'}")
+    # Fig. 2d pipelined operation
+    for stages, samples in ((2, 1000), (4, 1000)):
+        s = tdcore.pipeline_schedule(stages, samples, TDVMMSpec(bits=6))
+        emit(f"fig2d_pipeline_{stages}stage_{samples}samples", 0.0,
+             f"period_ns={s['period_s']*1e9:.1f}|total_us={s['total_s']*1e6:.1f}|"
+             f"Msamples/s={s['throughput_samples_per_s']/1e6:.2f}")
+    # throughput per tile at N=1000
+    spec = TDVMMSpec(bits=6)
+    n = 1000
+    ops = 2.0 * n * n
+    emit("tile_throughput_N1000_6bit", 0.0,
+         f"GOps/s={ops/spec.latency_s/1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Beyond-paper: cost out deploying every assigned architecture's linear
+layers onto TD-VMM tiles (section 4.2's time-division-multiplexed reuse),
+reporting energy/token and effective TOps/J per arch at the 6-bit operating
+point."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import ARCHS, get_config
+from repro.core import energy
+
+
+def _linear_shapes(cfg) -> list[tuple[int, int]]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    shapes = []
+    per_layer = [
+        (d, cfg.n_heads * hd), (d, cfg.n_kv_heads * hd),
+        (d, cfg.n_kv_heads * hd), (cfg.n_heads * hd, d)]
+    gated = cfg.act == "silu_glu"
+
+    def ffn(dff):
+        return ([(d, dff)] * (2 if gated else 1)) + [(dff, d)]
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        for _ in range(cfg.n_layers):
+            shapes += per_layer + ffn(cfg.d_ff)
+    elif cfg.family == "moe":
+        m = cfg.moe
+        for _ in range(cfg.n_layers):
+            shapes += per_layer
+            # only activated experts consume energy per token (weight-
+            # stationary tiles idle when unselected)
+            for _ in range(m.top_k + m.n_shared_experts):
+                shapes += ffn(m.d_ff)
+    elif cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_inner = s.expand * d
+        n_h = d_inner // s.head_dim
+        for _ in range(cfg.n_layers):
+            shapes += [(d, d_inner), (d, d_inner),
+                       (d, s.n_groups * s.d_state), (d, s.n_groups * s.d_state),
+                       (d, n_h), (d_inner, d)]
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            n_shared = cfg.n_layers // cfg.hybrid_attn_every
+            for _ in range(n_shared):
+                shapes += per_layer + ffn(cfg.d_ff)
+    return shapes
+
+
+def run():
+    for name in sorted(ARCHS):
+        cfg = get_config(name)
+        out = energy.llm_mapping_cost(_linear_shapes(cfg), tile_n=1024, bits=6)
+        emit(f"llm_map_{name}", 0.0,
+             f"tiles={out['tiles']:.0f}|energy/token_uJ={out['energy_per_token_j']*1e6:.2f}|"
+             f"TOps/J={out['tops_per_j']:.0f}|"
+             f"token_latency_ns={out['latency_per_token_s']*1e9:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Fig. 4 — relative output error vs (I_max, V_SG) and vs V_D.
+
+Reproduces the measured trends: V_SG optimum at ~0.8 V, error < 2% at
+I_max ~ 1 uA => >= 5-6 bit computing precision; plus the end-to-end layer
+error at the chosen operating point."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import nonideal
+from repro.core.constants import DELTA_VD, V_SG_OPT
+from repro.core.layers import TDVMMLayerConfig, td_matmul
+
+
+def run():
+    # Fig 4a: error surface over (V_SG, I_max)
+    for vsg in (0.6, 0.7, 0.8, 0.9, 1.0):
+        for imax in (1e-8, 1e-7, 1e-6, 2e-6):
+            us = time_call(nonideal.relative_error, imax, vsg, DELTA_VD)
+            e = float(nonideal.relative_error(imax, vsg, DELTA_VD))
+            emit(f"fig4a_err_vsg{vsg}_imax{imax:.0e}", us,
+                 f"error={e*100:.2f}%")
+    # Fig 4b: error vs drain swing at the optimum
+    for dv in (0.1, 0.2, 0.3, 0.4):
+        e = float(nonideal.relative_error(1e-6, V_SG_OPT, dv))
+        emit(f"fig4b_err_dvd{dv}", 0.0, f"error={e*100:.2f}%")
+    # headline: effective precision at the paper's operating point
+    e_opt = float(nonideal.relative_error(1e-6, V_SG_OPT, DELTA_VD))
+    bits = int(nonideal.effective_bits(e_opt))
+    emit("fig4_effective_bits_at_opt", 0.0,
+         f"err={e_opt*100:.2f}%|bits={bits}|paper>=5")
+
+    # end-to-end layer error vs precision (the ~6-bit ceiling in practice)
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (16, 256))
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128)) * 0.1
+    ref = x @ w
+    for bits in (4, 5, 6, 8):
+        cfg = TDVMMLayerConfig(enabled=True, bits=bits, weight_bits=bits)
+        fn = jax.jit(lambda x, w: td_matmul(x, w, cfg))
+        us = time_call(fn, x, w)
+        rel = float(jnp.max(jnp.abs(fn(x, w) - ref)) / jnp.max(jnp.abs(ref)))
+        emit(f"tdvmm_layer_{bits}bit_256x128", us, f"rel_err={rel*100:.2f}%")
+
+
+if __name__ == "__main__":
+    run()

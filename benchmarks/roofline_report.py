@@ -1,0 +1,45 @@
+"""Roofline table generator: reads artifacts/dryrun/*.json into the
+EXPERIMENTS.md table and emits one CSV row per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def rows(pod: str = "pod1"):
+    out = []
+    for f in sorted(ART.glob(f"*__{pod}.json")):
+        d = json.loads(f.read_text())
+        tag = f.stem
+        if d["status"] != "ok":
+            out.append((tag, d))
+            continue
+        out.append((tag, d))
+    return out
+
+
+def run():
+    if not ART.exists():
+        emit("roofline_missing", 0.0, "run launch/dryrun.py first")
+        return
+    for pod in ("pod1", "pod2"):
+        for tag, d in rows(pod):
+            if d["status"] == "skipped":
+                emit(f"roofline_{tag}", 0.0, "SKIP|" + d["reason"][:60])
+                continue
+            if d["status"] != "ok":
+                emit(f"roofline_{tag}", 0.0, "ERROR")
+                continue
+            r = d["roofline"]
+            emit(f"roofline_{tag}", 0.0,
+                 f"dom={r['dominant']}|tc={r['t_compute_s']:.3e}|"
+                 f"tm={r['t_memory_s']:.3e}|tx={r['t_collective_s']:.3e}|"
+                 f"mfu={r['mfu_at_bound']:.4f}|useful={r['model_to_hlo_flops']:.3f}")
+
+
+if __name__ == "__main__":
+    run()

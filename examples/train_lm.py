@@ -1,0 +1,59 @@
+"""End-to-end LM training driver (example application).
+
+Default --quick profile trains a ~9M-param qwen-family model for 300 steps on
+CPU (~5 min) with TD-VMM quantized linears, exercising the full production
+path: sharding-aware state init, microbatched train step, deterministic data,
+atomic checkpoints + auto-resume, preemption guard, straggler monitor.
+
+    PYTHONPATH=src python examples/train_lm.py                # quick profile
+    PYTHONPATH=src python examples/train_lm.py --profile 100m # ~100M params
+"""
+import argparse
+import dataclasses
+
+from repro.configs import OptimizerConfig, RunConfig, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.layers import TDVMMLayerConfig
+from repro.launch.train import train_loop
+
+PROFILES = {
+    # (d_model, n_layers, n_heads, kv, d_ff, seq, batch, steps)
+    "quick": (256, 4, 4, 2, 1024, 256, 8, 300),
+    "20m": (384, 6, 6, 2, 1536, 512, 8, 300),
+    "100m": (768, 12, 12, 4, 3072, 1024, 16, 300),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--profile", default="quick", choices=sorted(PROFILES))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--tdvmm", action="store_true", default=True)
+    ap.add_argument("--no-tdvmm", dest="tdvmm", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    d, L, h, kv, ff, seq, batch, steps = PROFILES[args.profile]
+    steps = args.steps or steps
+    cfg = get_config("qwen1.5-0.5b").replace(
+        d_model=d, n_layers=L, n_heads=h, n_kv_heads=kv, head_dim=d // h,
+        d_ff=ff, vocab_size=8192, vocab_pad_multiple=16, dtype="float32",
+        remat_policy="none",
+        tdvmm=TDVMMLayerConfig(enabled=args.tdvmm, bits=6, weight_bits=6))
+    print(f"[config] {cfg.param_count()/1e6:.1f}M params, "
+          f"tdvmm={'6-bit' if args.tdvmm else 'off'}")
+    shape = ShapeConfig("example", seq_len=seq, global_batch=batch, kind="train",
+                        microbatch_per_shard=batch)
+    run = RunConfig(model=cfg, shape=shape,
+                    optimizer=OptimizerConfig(lr=1e-3, warmup_steps=30,
+                                              total_steps=steps),
+                    checkpoint_dir=args.ckpt_dir, checkpoint_every=100)
+    out = train_loop(run, steps, log_every=20)
+    first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
+    print(f"[done] loss {first:.3f} -> {last:.3f} over {out['step']} steps "
+          f"({out.get('total_s', 0):.0f}s, stragglers={out.get('stragglers')})")
+    assert last < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.configs.archs import ARCHS, get_config, smoke
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    RunConfig,
+    ShapeConfig,
+    SHAPES,
+    SSMConfig,
+)
+
+__all__ = [
+    "ARCHS", "get_config", "smoke", "ModelConfig", "MoEConfig",
+    "OptimizerConfig", "RunConfig", "ShapeConfig", "SHAPES", "SSMConfig",
+]

@@ -1,0 +1,5 @@
+"""Core time-domain VMM library (the paper's contribution)."""
+from repro.core.constants import TDVMMSpec
+from repro.core.layers import TDVMMLayerConfig, TDVMMLinear, td_matmul
+
+__all__ = ["TDVMMSpec", "TDVMMLayerConfig", "TDVMMLinear", "td_matmul"]

@@ -1,0 +1,103 @@
+"""Weight -> current-source programming (paper Eq. 5-7) and four-quadrant split.
+
+For an N-input column with weights w_i in [0, w_max], Eq. 6 programs
+
+    I_i = I_max * w_i / (2*w_max - mean(w))
+
+(derived from the paper's Eq. 6 after substituting Eq. 5,
+ C*V_TH = N*I_max*T), and Eq. 7 adds a bias source, always on from t=0:
+
+    I_0 = 1/2 * (N*I_max - sum_i I_i).
+
+With these, the crossing time of the charge threshold K = C*V_TH = N*I_max*T
+encodes exactly  y = sum_i w_i x_i / (N*w_max)  — weight-scale-free, which is
+what allows chaining VMMs in the time domain (section 2.2).
+
+Invariants (asserted in tests):
+    0 <= I_i <= I_max      (currents are realizable, Eq. 6 denominator > 0)
+    I_0 >= 0               (since sum I_i <= N*I_max)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def program_column(w: jax.Array, i_max: float, w_max: float) -> tuple[jax.Array, jax.Array]:
+    """Program one column of N non-negative weights.
+
+    Args:
+      w: (N,) weights in [0, w_max].
+      i_max: maximum source current.
+      w_max: weight bound.
+
+    Returns:
+      (currents (N,), bias_current scalar)
+    """
+    n = w.shape[0]
+    mean_w = jnp.mean(w)
+    denom = 2.0 * w_max - mean_w          # in [w_max, 2*w_max] -> always > 0
+    currents = i_max * w / denom
+    bias = 0.5 * (n * i_max - jnp.sum(currents))
+    return currents, bias
+
+
+def program_matrix(w: jax.Array, i_max: float, w_max: float) -> tuple[jax.Array, jax.Array]:
+    """Program a full (N_in, N_out) non-negative weight matrix column-wise.
+
+    Returns (currents (N_in, N_out), bias (N_out,)).
+    """
+    n_in = w.shape[0]
+    mean_w = jnp.mean(w, axis=0)          # (N_out,)
+    denom = 2.0 * w_max - mean_w
+    currents = i_max * w / denom[None, :]
+    bias = 0.5 * (n_in * i_max - jnp.sum(currents, axis=0))
+    return currents, bias
+
+
+def four_quadrant_weights(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Signed weight matrix -> (W_plus, W_minus), both >= 0, W = W_plus - W_minus.
+
+    In the circuit each weight owns four current sources: for w > 0,
+    I^{++} = I^{--} = program(w), I^{+-} = I^{-+} = 0; mirrored for w < 0
+    (section 2.2).  The rectified split realizes exactly that.
+    """
+    return jnp.maximum(w, 0.0), jnp.maximum(-w, 0.0)
+
+
+def four_quadrant_program(
+    w: jax.Array, i_max: float, w_max: float
+) -> dict[str, jax.Array]:
+    """Program the four current-source arrays for a signed (N_in, N_out) matrix.
+
+    The positive output wire integrates  x+ @ W+  +  x- @ W-   (2*N_in sources),
+    the negative output wire integrates  x+ @ W-  +  x- @ W+.
+
+    Each output wire therefore sees a single-quadrant dot product with an
+    effective input count of 2*N_in; the bias current is programmed for that
+    stacked column.
+
+    Returns dict with:
+      'pos': (2*N_in, N_out) currents feeding the + wire  [W+ stacked over W-]
+      'neg': (2*N_in, N_out) currents feeding the - wire  [W- stacked over W+]
+      'bias_pos', 'bias_neg': (N_out,) bias currents.
+    """
+    w_plus, w_minus = four_quadrant_weights(w)
+    stacked_pos = jnp.concatenate([w_plus, w_minus], axis=0)   # x+ rows, then x- rows
+    stacked_neg = jnp.concatenate([w_minus, w_plus], axis=0)
+    i_pos, b_pos = program_matrix(stacked_pos, i_max, w_max)
+    i_neg, b_neg = program_matrix(stacked_neg, i_max, w_max)
+    return {"pos": i_pos, "neg": i_neg, "bias_pos": b_pos, "bias_neg": b_neg}
+
+
+def quantize_weights(w: jax.Array, weight_bits: int, w_max: float) -> jax.Array:
+    """Model finite programming resolution of the FG current sources.
+
+    The tuning procedure of ref. [15] reaches a target current within a
+    relative tolerance; we model it as uniform quantization of the magnitude
+    to 2^weight_bits levels over [0, w_max] (per quadrant).
+    """
+    levels = (1 << weight_bits) - 1
+    mag = jnp.clip(jnp.abs(w) / w_max, 0.0, 1.0)
+    mag_q = jnp.round(mag * levels) / levels
+    return jnp.sign(w) * mag_q * w_max

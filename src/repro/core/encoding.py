@@ -1,0 +1,84 @@
+"""Time-domain encoding of values (paper Eq. 2-3 and the pulse-duration variant).
+
+Conventions
+-----------
+Normalized values live in [0, 1].  A value ``x`` is encoded as the turn-on time
+
+    t_on = T * (1 - x)            (rising-edge encoding, Eq. 2)
+
+inside the input window [0, T]: the largest value turns on at t=0, the smallest
+(zero) never contributes charge (turn-on at t=T, and V stays ON during [T, 2T]
+so every source contributes for the full readout phase regardless).
+
+The dot-product output is the latch crossing time ``T + t_sigma`` in [T, 2T]
+(Eq. 3), decoded as  y = (T - t_sigma) / T.
+
+Section 3.1's pulse-duration encoding (used between chained VMMs, where the
+ReLU AND-gate emits a pulse of duration d) is equivalent: charge contributed is
+I * d, so  x = d / T.  Both encodings are provided.
+
+Quantization: a p-bit digital I/O converter (shared counter + comparator-latch,
+section 4.2) realizes t_on on a grid of 2^p slots of width T/2^p == T0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_code(x: jax.Array, bits: int) -> jax.Array:
+    """Normalized value in [0,1] -> integer time code in {0, ..., 2^p - 1}.
+
+    Code k represents the value k / (2^p - 1); this is the digital word the
+    shared-counter DAC compares against.
+    """
+    levels = (1 << bits) - 1
+    x = jnp.clip(x, 0.0, 1.0)
+    return jnp.round(x * levels).astype(jnp.int32)
+
+
+def dequantize_code(code: jax.Array, bits: int) -> jax.Array:
+    levels = (1 << bits) - 1
+    return code.astype(jnp.float32) / levels
+
+
+def fake_quant(x: jax.Array, bits: int) -> jax.Array:
+    """Round-trip through the p-bit time grid (value domain)."""
+    return dequantize_code(quantize_code(x, bits), bits)
+
+
+def value_to_onset(x: jax.Array, t_window: float) -> jax.Array:
+    """x in [0,1] -> rising-edge time t_on in [0, T]  (Eq. 2: T - t_i ~ x_i)."""
+    return t_window * (1.0 - jnp.clip(x, 0.0, 1.0))
+
+
+def onset_to_value(t_on: jax.Array, t_window: float) -> jax.Array:
+    return 1.0 - t_on / t_window
+
+
+def crossing_to_value(t_cross: jax.Array, t_window: float) -> jax.Array:
+    """Latch crossing time (absolute, in [T, 2T]) -> output value (Eq. 3)."""
+    t_sigma = t_cross - t_window
+    return 1.0 - t_sigma / t_window
+
+
+def value_to_duration(x: jax.Array, t_window: float) -> jax.Array:
+    """Pulse-duration encoding (section 3.1): x in [0,1] -> pulse length in [0,T]."""
+    return t_window * jnp.clip(x, 0.0, 1.0)
+
+
+def duration_to_value(d: jax.Array, t_window: float) -> jax.Array:
+    return d / t_window
+
+
+def four_quadrant_split(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Signed value -> differential (positive-wire, negative-wire) pair.
+
+    x = x_plus - x_minus with both components in [0, |x|].  The circuit drives
+    both wires; here we use the canonical rectified split.
+    """
+    return jnp.maximum(x, 0.0), jnp.maximum(-x, 0.0)
+
+
+def four_quadrant_merge(x_plus: jax.Array, x_minus: jax.Array) -> jax.Array:
+    return x_plus - x_minus

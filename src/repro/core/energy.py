@@ -1,0 +1,206 @@
+"""Energy / latency / area cost model (paper section 4.2, Fig. 5).
+
+The paper reports, for a conservative 6-bit digital-input/digital-output
+four-quadrant N x N TD-VMM in 55 nm (C ~= 200*C_drain = 0.04 pF/input):
+
+    N = 10   : 5.44 pJ per VMM window  => 38.6 TOps/J   (static ~65%)
+    N = 100  : ~120 TOps/J
+    N = 1000 : ~150 TOps/J  (dynamic, dominated by the external caps)
+    N > 200  : ~7 fJ/Op including the digital<->time I/O conversion circuitry
+
+Counting 2*N^2 Ops per window (N^2 MAC = N^2 mult + N^2 add), the model
+
+    e_op(N, p=6) = alpha + (beta + gamma) / N           [J/Op]
+      alpha  : dynamic energy per op (external caps + CG lines + neuron CMOS)
+      beta/N : static leakage  (2N neuron blocks * P_leak * window) / (2N^2)
+      gamma/N: I/O conversion  (N DAC + N ADC slices per window)    / (2N^2)
+
+fits all four anchors with TWO free parameters:
+
+    beta + gamma = 195.2 fJ,  alpha = 6.38 fJ
+      -> e(10) = 25.9 fJ/Op (= 38.6 TOps/J, matches 5.44 pJ/window)
+      -> e(100) = 8.33 fJ/Op (= 120 TOps/J)
+      -> e(1000) = 6.58 fJ/Op (= 152 TOps/J vs ~150 reported)
+      -> e(200) = 7.36 fJ/Op (~7 fJ/Op, matches the N > 200 claim)
+
+beta is split from gamma via the "static ~= 65% at N=10" anchor:
+    beta = 0.65 * e(10) * 10 = 168.3 fJ   =>   gamma = 26.9 fJ.
+
+Precision scaling: static and counter-based I/O energies scale with the
+window length 2T = 2*T0*2^p; the dynamic (charge) component does not.
+
+Latency (section 4.2): 2T0 <= 1 ns per bit  =>  2T = 2T0 * 2^p  (~64-100 ns at
+p=6); pipelined period 2T + tau_reset.
+
+Area (Fig. 5b): external caps ~75% / memory array ~25% for N > 200; at N=10
+one neuron block is ~1.5x the area of the whole 10x20 supercell array (Fig. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.constants import (
+    A_SUPERCELL_UM2,
+    DEFAULT_BITS,
+    E_TOTAL_N10_J,
+    STATIC_FRACTION_N10,
+    T0_S,
+    TAU_RESET_S,
+    TOPS_PER_J_N10,
+    TOPS_PER_J_N100,
+    TOPS_PER_J_N1000,
+    TDVMMSpec,
+)
+
+# --- fitted model constants (derivation in module docstring) -----------------
+_E10 = 1.0 / (TOPS_PER_J_N10 * 1e12)          # 25.91 fJ/Op
+_E100 = 1.0 / (TOPS_PER_J_N100 * 1e12)        # 8.33 fJ/Op
+BETA_PLUS_GAMMA_J = (_E10 - _E100) / (1.0 / 10 - 1.0 / 100)   # 195.2 fJ
+ALPHA_J = _E100 - BETA_PLUS_GAMMA_J / 100.0                   # 6.38 fJ
+BETA_J = STATIC_FRACTION_N10 * _E10 * 10.0                    # 168.3 fJ (static)
+GAMMA_J = BETA_PLUS_GAMMA_J - BETA_J                          # 26.9 fJ (I/O)
+# alpha split: at N=1000 the paper says dynamic is dominated by the external
+# caps; we attribute 85% of alpha to caps, the rest to CG lines + neuron CMOS.
+ALPHA_CAP_FRACTION = 0.85
+
+# --- area model constants ----------------------------------------------------
+# One four-quadrant weight = 4 FG cells = 2 ESF3 supercells.
+A_WEIGHT_UM2 = 2.0 * A_SUPERCELL_UM2
+# [fitted] external-cap area per (input x output) cell such that the cap:memory
+# split is 75:25 at large N (Fig. 5b):  a_cap = 3 * a_weight.
+A_CAP_UM2 = 3.0 * A_WEIGHT_UM2
+# [Fig. 3 / section 4.2] neuron block ~1.5x the 10x20 supercell array area.
+A_NEURON_UM2 = 1.5 * 200.0 * A_SUPERCELL_UM2
+# I/O converter slice (counter share + comparator latch + register), per line.
+A_IO_UM2 = 60.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    n: int
+    bits: int
+    e_total_j: float
+    e_dynamic_j: float
+    e_static_j: float
+    e_io_j: float
+    e_per_op_j: float
+    tops_per_j: float
+    latency_s: float
+    period_s: float
+    throughput_ops: float
+    area_um2: float
+    area_mem_um2: float
+    area_cap_um2: float
+    area_neuron_um2: float
+    area_io_um2: float
+
+
+def ops_per_window(n: int) -> float:
+    """2*N^2: the paper counts multiply and add separately."""
+    return 2.0 * n * n
+
+
+def _p_scale(bits: int) -> float:
+    """Window-length scale factor vs the p=6 reference."""
+    return 2.0 ** (bits - DEFAULT_BITS)
+
+
+def energy_per_window(n: int, bits: int = DEFAULT_BITS) -> dict[str, float]:
+    ops = ops_per_window(n)
+    s = _p_scale(bits)
+    e_dyn = ALPHA_J * ops                    # charge/discharge: per-op, p-independent
+    e_static = BETA_J * 2.0 * n * s         # leakage * window, per 2N output lines
+    e_io = GAMMA_J * 2.0 * n * s            # counter-based converters, ~2N slices
+    return {
+        "dynamic": e_dyn,
+        "static": e_static,
+        "io": e_io,
+        "total": e_dyn + e_static + e_io,
+    }
+
+
+def cost(n: int, bits: int = DEFAULT_BITS, spec: TDVMMSpec | None = None) -> CostBreakdown:
+    spec = spec or TDVMMSpec(bits=bits)
+    e = energy_per_window(n, bits)
+    ops = ops_per_window(n)
+    t_window = T0_S * (2 ** bits)
+    period = 2.0 * t_window + TAU_RESET_S
+    a_mem = n * n * A_WEIGHT_UM2
+    a_cap = n * n * A_CAP_UM2
+    a_neuron = 2.0 * n * A_NEURON_UM2 / 20.0  # per differential line pair, scaled
+    a_io = 2.0 * n * A_IO_UM2
+    return CostBreakdown(
+        n=n,
+        bits=bits,
+        e_total_j=e["total"],
+        e_dynamic_j=e["dynamic"],
+        e_static_j=e["static"],
+        e_io_j=e["io"],
+        e_per_op_j=e["total"] / ops,
+        tops_per_j=1e-12 * ops / e["total"],
+        latency_s=2.0 * t_window,
+        period_s=period,
+        throughput_ops=ops / period,
+        area_um2=a_mem + a_cap + a_neuron + a_io,
+        area_mem_um2=a_mem,
+        area_cap_um2=a_cap,
+        area_neuron_um2=a_neuron,
+        area_io_um2=a_io,
+    )
+
+
+def validate_against_paper() -> dict[str, tuple[float, float]]:
+    """(model, paper) pairs for every anchor number in section 4.2 / Fig. 5."""
+    c10, c100, c1000, c200 = cost(10), cost(100), cost(1000), cost(200)
+    return {
+        "E_total_N10_pJ": (c10.e_total_j * 1e12, E_TOTAL_N10_J * 1e12),
+        "TOpsJ_N10": (c10.tops_per_j, TOPS_PER_J_N10),
+        "TOpsJ_N100": (c100.tops_per_j, TOPS_PER_J_N100),
+        "TOpsJ_N1000": (c1000.tops_per_j, TOPS_PER_J_N1000),
+        "fJ_per_op_N200": (c200.e_per_op_j * 1e15, 7.0),
+        "static_fraction_N10": (c10.e_static_j / c10.e_total_j, STATIC_FRACTION_N10),
+        "cap_area_fraction_largeN": (
+            c1000.area_cap_um2 / (c1000.area_cap_um2 + c1000.area_mem_um2),
+            0.75,
+        ),
+        "latency_6bit_ns": (c10.latency_s * 1e9, 64.0),  # 2T0*2^p, "~100 ns" class
+    }
+
+
+# --------------------------------------------------------------------------
+# Mapping full LM architectures onto TD-VMM tiles (section 4.2's TDM reuse)
+# --------------------------------------------------------------------------
+def llm_mapping_cost(
+    linear_shapes: list[tuple[int, int]],
+    tile_n: int = 1024,
+    bits: int = DEFAULT_BITS,
+) -> dict[str, float]:
+    """Cost of running all of a model's linear layers on tile_n x tile_n TD-VMM
+    tiles with time-division multiplexing (weights stationary, section 4.2).
+
+    linear_shapes: (d_in, d_out) of every weight matrix applied per token.
+    Returns energy/token, TOps/J, tile count, and per-token latency assuming
+    all tiles of one layer run in parallel and layers are pipelined.
+    """
+    c = cost(tile_n, bits)
+    total_tiles = 0
+    e_token = 0.0
+    macs = 0.0
+    chain_depth = 0
+    for d_in, d_out in linear_shapes:
+        tin = int(np.ceil(d_in / tile_n))
+        tout = int(np.ceil(d_out / tile_n))
+        total_tiles += tin * tout
+        e_token += tin * tout * c.e_total_j
+        macs += d_in * d_out
+        chain_depth += tin  # column-tile partial sums chain in time domain
+    return {
+        "tiles": float(total_tiles),
+        "energy_per_token_j": e_token,
+        "macs_per_token": macs,
+        "tops_per_j": 2.0 * macs / e_token / 1e12,
+        "latency_per_token_s": c.period_s,  # pipelined: one period per token
+        "area_mm2": total_tiles * c.area_um2 / (tile_n == tile_n) * 1e-6,
+    }

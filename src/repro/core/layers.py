@@ -1,0 +1,142 @@
+"""TDVMMLinear: the paper's multiplier as a drop-in linear layer for models.
+
+The fast path is the *closed form* of the four-quadrant TD-VMM (exact by
+Eq. 1-7, property-tested against the event-driven simulator in tdcore.py):
+
+    tile input   x -> x / s_x,   s_x = max|x|          (input range normalize)
+    time-encode  x+ , x-  each fake-quantized to p bits (counter DAC, Eq. 2)
+    program      W -> W+ - W-, each quantized to weight_bits levels (FG tuning)
+    integrate    z = xq @ wq                            (charge accumulation)
+    latch        y_norm = z / (2 N w_max)               (crossing time, Eq. 1)
+    read out     y_norm fake-quantized to p bits when the tile boundary is
+                 digital (shared-counter ADC); skipped when chained in time
+    rescale      y = y_norm * 2 N w_max * s_x
+
+Gradients: straight-through estimators on every quantizer (standard QAT), so
+the layer is trainable inside any JAX model.  Optional stochastic DIBL /
+tuning noise (core/nonideal.py) models deploy-time precision during training.
+
+On TPU the integer core is the Pallas kernel in kernels/tdvmm (ops.py); the
+jnp path below is numerically identical and is what the distributed dry-run
+lowers (same FLOPs/bytes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding as enc
+from repro.core import nonideal
+from repro.core.constants import TDVMMSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class TDVMMLayerConfig:
+    enabled: bool = False
+    bits: int = 6                 # time-code (input/output) precision p
+    weight_bits: int = 6          # FG programming precision
+    io_quantize: bool = True      # digital tile boundary (False = time-chained)
+    per_channel: bool = True      # per-output-column weight scale
+    output_calibration: bool = True  # scale weights so outputs fill the [T,2T]
+    # window (section 3.1: "slope ... controlled by appropriate scaling of VMM
+    # weights"); modeled as a stop-grad per-tensor output gain.
+    noise: bool = False           # stochastic DIBL + tuning noise (train-time)
+    spec: TDVMMSpec = dataclasses.field(default_factory=TDVMMSpec)
+
+    def replace(self, **kw) -> "TDVMMLayerConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _ste(x_quant: jax.Array, x: jax.Array) -> jax.Array:
+    """Straight-through: forward x_quant, backward identity."""
+    return x + jax.lax.stop_gradient(x_quant - x)
+
+
+def _fake_quant_signed(x: jax.Array, bits: int) -> jax.Array:
+    """Differential p-bit quantization: each wire of the (+,-) pair carries a
+    p-bit time code; values assumed pre-normalized to [-1, 1]."""
+    q = jnp.sign(x) * enc.fake_quant(jnp.abs(x), bits)
+    return _ste(q, x)
+
+
+def td_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: TDVMMLayerConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Four-quadrant TD-VMM fast path.  x: (..., N_in), w: (N_in, N_out)."""
+    if not cfg.enabled:
+        from repro.models import common as _c
+        pet = _c.matmul_out_dtype()
+        if pet is not None:
+            return jnp.dot(x, w, preferred_element_type=pet)
+        return x @ w
+
+    n_in = w.shape[0]
+    # ---- input range normalization (per example row; stop-grad scale) ----
+    s_x = jax.lax.stop_gradient(
+        jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-6)
+    )
+    xq = _fake_quant_signed(x / s_x, cfg.bits)
+
+    # ---- weight programming ----
+    axes = 0 if cfg.per_channel else None
+    w_max = jax.lax.stop_gradient(
+        jnp.maximum(jnp.max(jnp.abs(w), axis=axes, keepdims=True), 1e-6)
+    )
+    levels = (1 << cfg.weight_bits) - 1
+    wq = jnp.round(jnp.clip(w / w_max, -1.0, 1.0) * levels) / levels
+    wq = _ste(wq, w / w_max)  # normalized quantized weights in [-1, 1]
+
+    if cfg.noise and key is not None:
+        err = nonideal.relative_error(
+            cfg.spec.i_max, jnp.asarray(cfg.spec.v_sg), jnp.asarray(cfg.spec.delta_vd)
+        )
+        k1, k2 = jax.random.split(key)
+        u = jax.random.uniform(k1, wq.shape, minval=-1.0, maxval=1.0)
+        wq = wq * (1.0 + err * u)
+        wq = wq * jnp.exp(0.003 * jax.random.normal(k2, wq.shape))
+
+    # ---- charge integration + latch (normalized output in [-1, 1]) ----
+    z = (xq @ wq) / (2.0 * n_in)       # == y+ - y- of the differential pair
+    if cfg.io_quantize:
+        if cfg.output_calibration:
+            # weight-scaling calibration: amplify so the dot product spans the
+            # full output window before the p-bit readout (power is in s_y).
+            s_y = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(z)), 1e-9))
+        else:
+            s_y = 0.5  # raw differential range [-1/2, 1/2] -> [-1, 1]
+        z = _fake_quant_signed(z / s_y, cfg.bits) * s_y
+
+    # ---- digital rescale back to model units (keep activation dtype) ----
+    y = z * (2.0 * n_in) * w_max.reshape((w_max.shape[-1],)) * s_x
+    return y.astype(x.dtype)
+
+
+def init_linear(
+    key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None
+) -> jax.Array:
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+class TDVMMLinear:
+    """Functional linear layer: params = {'w': (d_in,d_out) [, 'b': (d_out,)]}"""
+
+    @staticmethod
+    def init(key, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32):
+        p = {"w": init_linear(key, d_in, d_out, dtype)}
+        if bias:
+            p["b"] = jnp.zeros((d_out,), dtype)
+        return p
+
+    @staticmethod
+    def apply(params, x, cfg: TDVMMLayerConfig, key=None):
+        y = td_matmul(x, params["w"], cfg, key)
+        if "b" in params:
+            y = y + params["b"]
+        return y

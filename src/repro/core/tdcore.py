@@ -1,0 +1,222 @@
+"""Event-driven time-domain VMM core (paper sections 2.1-2.2, 3.1).
+
+This module is the *behavioral oracle*: it simulates the physics of the
+circuit — charge integration on the output capacitor and the latch threshold
+crossing — exactly (piecewise-linear algebra), rather than assuming the
+closed-form result.  Property tests assert that this simulation reproduces the
+closed form  y = sum_i w_i x_i / (N w_max)  (Eq. 1), which is the paper's
+central claim (the Eq. 6-7 current programming makes the crossing time an
+exact, weight-scale-free encoding of the normalized dot product).
+
+The closed-form *fast path* used inside large models lives in layers.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import currents as cur
+from repro.core import encoding as enc
+from repro.core.constants import TDVMMSpec, TAU_RESET_S, TAU_F_S
+
+
+# --------------------------------------------------------------------------
+# Exact threshold-crossing solver
+# --------------------------------------------------------------------------
+def crossing_time(t_on: jax.Array, i_src: jax.Array, k_charge: jax.Array) -> jax.Array:
+    """Exact crossing time of  Q(t) = sum_i I_i * max(t - t_i, 0)  with Q(t*) = K.
+
+    Q is non-decreasing piecewise-linear with breakpoints at the (sorted) turn-on
+    times; between breakpoints the slope is the sum of all currents already on.
+    We locate the segment containing K by sorting + cumulative sums — the JAX
+    equivalent of the event-driven circuit simulation.
+
+    Args:
+      t_on:     (M,) turn-on times (absolute, >= 0).
+      i_src:    (M,) source currents (>= 0).
+      k_charge: scalar charge threshold K = C * V_TH.
+
+    Returns:
+      scalar crossing time t* (absolute).
+    """
+    order = jnp.argsort(t_on)
+    ts = t_on[order]
+    cs = i_src[order]
+    slope = jnp.cumsum(cs)                      # A_k: slope after k-th event
+    moment = jnp.cumsum(cs * ts)                # B_k: sum I_j t_j for j <= k
+    q_at_break = slope * ts - moment            # charge accumulated at each event
+    # last event with Q(t_event) <= K  (q_at_break is non-decreasing)
+    idx = jnp.clip(jnp.searchsorted(q_at_break, k_charge, side="right") - 1, 0, ts.shape[0] - 1)
+    a = jnp.maximum(slope[idx], 1e-30)
+    return (k_charge + moment[idx]) / a
+
+
+# vectorized: shared input times, per-column currents (N_in, N_out) + bias row
+def _column_crossings(
+    t_on: jax.Array, i_mat: jax.Array, i_bias: jax.Array, k_charge: jax.Array
+) -> jax.Array:
+    """Crossing times for every output column of a programmed array.
+
+    t_on: (N_in,) input turn-on times; i_mat: (N_in, N_out); i_bias: (N_out,)
+    (bias sources are always on from t=0, Eq. 7).  Returns (N_out,) times.
+    """
+    t_full = jnp.concatenate([t_on, jnp.zeros((1,), t_on.dtype)])
+    i_full = jnp.concatenate([i_mat, i_bias[None, :]], axis=0)   # (N_in+1, N_out)
+    return jax.vmap(lambda col: crossing_time(t_full, col, k_charge))(i_full.T)
+
+
+# --------------------------------------------------------------------------
+# Single-quadrant dot product / VMM (section 2.1)
+# --------------------------------------------------------------------------
+def td_vmm_single_quadrant(
+    x: jax.Array, w: jax.Array, spec: TDVMMSpec
+) -> jax.Array:
+    """Simulate the single-quadrant VMM: x in [0,1]^(N_in), w in [0,w_max]^(N_in,N_out).
+
+    Returns the decoded output  y = (w^T x) / (N_in * w_max)  as recovered from
+    the simulated crossing times (Eq. 1-7 all exercised for real).
+    """
+    n_in = x.shape[0]
+    t_window = spec.t_window_s
+    i_mat, i_bias = cur.program_matrix(w, spec.i_max, spec.w_max)
+    k_charge = spec.v_th_charge(n_in)           # K = N * I_max * T  (Eq. 5)
+    t_on = enc.value_to_onset(x, t_window)
+    t_cross = _column_crossings(t_on, i_mat, i_bias, k_charge)
+    return enc.crossing_to_value(t_cross, t_window)
+
+
+def ideal_single_quadrant(x: jax.Array, w: jax.Array, w_max: float) -> jax.Array:
+    """Closed-form Eq. 1 for the single-quadrant VMM."""
+    return (x @ w) / (x.shape[0] * w_max)
+
+
+# --------------------------------------------------------------------------
+# Four-quadrant VMM (section 2.2) and two-quadrant variant (section 3.1)
+# --------------------------------------------------------------------------
+def td_vmm_four_quadrant(
+    x: jax.Array, w: jax.Array, spec: TDVMMSpec, return_times: bool = False
+):
+    """Simulate the differential four-quadrant VMM.
+
+    x: (N_in,) signed, |x| <= 1.   w: (N_in, N_out) signed, |w| <= w_max.
+
+    Each output wire of the +/- pair integrates 2*N_in current sources
+    (W+ stacked over W- per section 2.2), so the decoded differential output is
+
+        y = (w^T x) / (2 * N_in * w_max).
+
+    Returns y (N_out,), and optionally the raw (t_plus, t_minus) crossing times
+    (used for chaining / the ReLU AND-gate).
+    """
+    n_in = x.shape[0]
+    t_window = spec.t_window_s
+    x_p, x_m = enc.four_quadrant_split(x)
+    prog = cur.four_quadrant_program(w, spec.i_max, spec.w_max)
+    k_charge = spec.v_th_charge(2 * n_in)
+    t_on = jnp.concatenate(
+        [enc.value_to_onset(x_p, t_window), enc.value_to_onset(x_m, t_window)]
+    )
+    t_plus = _column_crossings(t_on, prog["pos"], prog["bias_pos"], k_charge)
+    t_minus = _column_crossings(t_on, prog["neg"], prog["bias_neg"], k_charge)
+    y = enc.crossing_to_value(t_plus, t_window) - enc.crossing_to_value(t_minus, t_window)
+    if return_times:
+        return y, (t_plus, t_minus)
+    return y
+
+
+def ideal_four_quadrant(x: jax.Array, w: jax.Array, w_max: float) -> jax.Array:
+    return (x @ w) / (2.0 * x.shape[0] * w_max)
+
+
+def td_vmm_two_quadrant(x: jax.Array, w: jax.Array, spec: TDVMMSpec, return_times: bool = False):
+    """Two-quadrant VMM: non-negative inputs, signed weights (section 3.1 end).
+
+    Obtained from the four-quadrant design by removing the negative input
+    wires; each output wire integrates N_in sources, so
+
+        y = (w^T x) / (N_in * w_max).
+    """
+    n_in = x.shape[0]
+    t_window = spec.t_window_s
+    w_p, w_m = cur.four_quadrant_weights(w)
+    i_pos, b_pos = cur.program_matrix(w_p, spec.i_max, spec.w_max)
+    i_neg, b_neg = cur.program_matrix(w_m, spec.i_max, spec.w_max)
+    k_charge = spec.v_th_charge(n_in)
+    t_on = enc.value_to_onset(jnp.clip(x, 0.0, 1.0), t_window)
+    t_plus = _column_crossings(t_on, i_pos, b_pos, k_charge)
+    t_minus = _column_crossings(t_on, i_neg, b_neg, k_charge)
+    y = enc.crossing_to_value(t_plus, t_window) - enc.crossing_to_value(t_minus, t_window)
+    if return_times:
+        return y, (t_plus, t_minus)
+    return y
+
+
+def ideal_two_quadrant(x: jax.Array, w: jax.Array, w_max: float) -> jax.Array:
+    return (x @ w) / (x.shape[0] * w_max)
+
+
+# --------------------------------------------------------------------------
+# Time-domain ReLU (the AND gate of Fig. 2c) and chaining
+# --------------------------------------------------------------------------
+def relu_duration(t_plus: jax.Array, t_minus: jax.Array) -> jax.Array:
+    """The rectify-linear AND gate: a pulse of duration t_minus - t_plus when the
+    + latch fires first (positive output), zero otherwise (Fig. 1d / 2c)."""
+    return jnp.maximum(t_minus - t_plus, 0.0)
+
+
+def td_mlp_forward(
+    x: jax.Array, w1: jax.Array, w2: jax.Array, spec: TDVMMSpec
+) -> jax.Array:
+    """Two-layer perceptron computed fully in the time domain (Fig. 2).
+
+    Layer 1: four-quadrant VMM -> differential crossing times.
+    ReLU:    AND gate -> pulse-duration-encoded hidden activations (section 3.1).
+    Layer 2: two-quadrant VMM (inputs are non-negative pulse durations).
+
+    Returns the decoded output of layer 2.  The ideal reference is
+        h = relu(x @ w1) / (2 N_in w_max);  y = (h @ w2) / (N_h w_max).
+    """
+    t_window = spec.t_window_s
+    _, (t1p, t1m) = td_vmm_four_quadrant(x, w1, spec, return_times=True)
+    # AND-gate pulse duration encodes h in [0, T]; as charge it is equivalent
+    # to a rising-edge input of value h (section 3.1: equal total on-time).
+    h = enc.duration_to_value(relu_duration(t1p, t1m), t_window)
+    return td_vmm_two_quadrant(h, w2, spec)
+
+
+def ideal_mlp(x: jax.Array, w1: jax.Array, w2: jax.Array, w_max: float) -> jax.Array:
+    h = jax.nn.relu(ideal_four_quadrant(x, w1, w_max))
+    return ideal_two_quadrant(h, w2, w_max)
+
+
+# batched variants ----------------------------------------------------------
+td_vmm_four_quadrant_batched = jax.vmap(
+    lambda x, w, spec: td_vmm_four_quadrant(x, w, spec), in_axes=(0, None, None)
+)
+td_mlp_forward_batched = jax.vmap(td_mlp_forward, in_axes=(0, None, None, None))
+
+
+# --------------------------------------------------------------------------
+# Pipelined operation (Fig. 2d)
+# --------------------------------------------------------------------------
+def pipeline_schedule(
+    n_stages: int, n_samples: int, spec: TDVMMSpec
+) -> dict[str, float]:
+    """Timing of the two-phase pipelined schedule (Fig. 2d).
+
+    Each stage computes during phase I ([0,T]) and reads out during phase II
+    ([T,2T]); phase II of stage l *is* phase I of stage l+1 (the SET/OR gating
+    decouples adjacent VMMs).  New samples are admitted every 2T + tau_reset.
+    """
+    t = spec.t_window_s
+    period = 2.0 * t + TAU_RESET_S
+    first_out = (n_stages + 1) * t + n_stages * TAU_F_S
+    total = (n_samples - 1) * period + first_out
+    return {
+        "period_s": period,
+        "first_output_s": first_out,
+        "total_s": total,
+        "throughput_samples_per_s": 1.0 / period,
+    }

@@ -1,0 +1,38 @@
+"""jit'd wrapper: full TD-VMM column readout via the crossing kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossing.crossing import crossing_kernel
+from repro.kernels.crossing.ref import crossing_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k_charge", "t_window", "iters",
+                                              "interpret"))
+def crossing_times(
+    t_on: jax.Array,        # (B, K)
+    currents: jax.Array,    # (K, N)
+    k_charge: float,
+    t_window: float,
+    iters: int = 24,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Latch firing times in [0, 2T] for every (batch row, output column)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return crossing_kernel(
+        t_on, currents, k_charge,
+        t_lo=0.0, t_hi=2.0 * t_window, iters=iters,
+        interpret=bool(interpret))
+
+
+def crossing_times_exact(t_on, currents, k_charge):
+    """Sort-based exact solve (the oracle), exposed for convenience."""
+    return crossing_ref(t_on, currents, k_charge)

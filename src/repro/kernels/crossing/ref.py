@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the threshold-crossing kernel.
+
+Solves, per output column n and batch row b,
+
+    Q(t) = sum_k I[k, n] * max(t - t_on[b, k], 0)  =  K_charge
+
+i.e. the latch firing time of the charge-integration column (paper Eq. 4).
+Q is monotone piecewise-linear, so the exact answer comes from the sort-based
+event sweep (same math as core.tdcore.crossing_time, vectorized over (B, N)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def crossing_ref(t_on: jax.Array, currents: jax.Array, k_charge: float) -> jax.Array:
+    """t_on: (B, K); currents: (K, N); returns (B, N) crossing times."""
+
+    def one(t_row):
+        order = jnp.argsort(t_row)
+        ts = t_row[order]                       # (K,)
+        cs = currents[order, :]                 # (K, N)
+        slope = jnp.cumsum(cs, axis=0)          # (K, N)
+        moment = jnp.cumsum(cs * ts[:, None], axis=0)
+        q_at_break = slope * ts[:, None] - moment
+
+        def col(qb, sl, mo):
+            idx = jnp.clip(
+                jnp.searchsorted(qb, k_charge, side="right") - 1, 0, ts.shape[0] - 1)
+            return (k_charge + mo[idx]) / jnp.maximum(sl[idx], 1e-30)
+
+        return jax.vmap(col, in_axes=(1, 1, 1))(q_at_break, slope, moment)
+
+    return jax.vmap(one)(t_on)

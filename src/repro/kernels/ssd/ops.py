@@ -1,0 +1,27 @@
+"""jit'd wrapper for the SSD kernel with jnp fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_kernel
+from repro.models.ssm import ssd_chunked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a_log, b, c, chunk: int = 128, interpret: bool | None = None):
+    """Mamba-2 SSD scan: returns y (B, L, H, P).
+
+    Pallas kernel on TPU / interpret mode; chunked-jnp path elsewhere."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if _on_tpu() or interpret:
+        return ssd_kernel(x, dt, a_log, b, c, chunk=chunk,
+                          interpret=bool(interpret))
+    y, _ = ssd_chunked(x, dt, a_log, b, c, chunk)   # pragma: no cover
+    return y

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Mamba-2 SSD kernel.
+
+Two references:
+  * ssd_naive  — token-by-token recurrence (the definition; exact, slow)
+  * ssd_chunked_ref — the chunked algebra (models/ssm.ssd_chunked), already
+    validated against ssd_naive in tests/test_models_ssm.py
+
+The Pallas kernel must match ssd_naive to fp32 tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked as ssd_chunked_ref  # noqa: F401
+
+
+def ssd_naive(x, dt, a_log, b, c):
+    """x: (B,L,H,P); dt: (B,L,H); a_log: (H,); b,c: (B,L,G,S).
+    Returns (y (B,L,H,P), final_state (B,H,P,S))."""
+    B, L, H, Pd = x.shape
+    G, S = b.shape[2], b.shape[3]
+    rep = H // G
+    a = -jnp.exp(a_log)
+    bh = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P), (B,H), (B,H,S), (B,H,S)
+        decay = jnp.exp(dtt * a)[..., None, None]          # (B,H,1,1)
+        upd = jnp.einsum("bhs,bh,bhp->bhps", bt, dtt, xt.astype(jnp.float32))
+        state = state * decay + upd
+        y = jnp.einsum("bhs,bhps->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((B, H, Pd, S), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3), dt.astype(jnp.float32).transpose(1, 0, 2),
+          bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

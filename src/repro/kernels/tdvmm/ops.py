@@ -1,0 +1,42 @@
+"""jit'd public wrapper around the TD-VMM matmul kernel (+ scales epilogue)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tdvmm.tdvmm import tdvmm_matmul_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("gain", "out_bits", "interpret"))
+def tdvmm_matmul(
+    x_codes: jax.Array,
+    w_codes: jax.Array,
+    x_scale: jax.Array,
+    w_scale: jax.Array,
+    gain: float = 1.0,
+    out_bits: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Quantized four-quadrant TD-VMM: codes matmul + scale epilogue + optional
+    p-bit readout.  Uses the Pallas kernel on TPU (or interpret mode when
+    requested); falls back to jnp.dot elsewhere — numerics are identical."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if interpret or _on_tpu():
+        acc = tdvmm_matmul_kernel(
+            x_codes.astype(jnp.float32), w_codes.astype(jnp.float32),
+            interpret=bool(interpret))
+    else:  # pragma: no cover
+        acc = jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
+    y = acc * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1) * gain
+    if out_bits is not None:
+        levels = (1 << out_bits) - 1
+        s = jnp.maximum(jnp.max(jnp.abs(y)), 1e-9)
+        y = jnp.round(y / s * levels) / levels * s
+    return y

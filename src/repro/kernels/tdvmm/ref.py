@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the TD-VMM quantized matmul kernel.
+
+Semantics (integer-valued charge accumulation of the four-quadrant TD-VMM):
+
+    y[m, n] = (sum_k xc[m, k] * wc[k, n]) * x_scale[m] * w_scale[n] * gain
+
+where xc are signed p-bit time codes (integer-valued floats, the differential
+(+/-) wire pair folded into a sign) and wc are signed weight codes.  The
+optional output readout quantizes y to p bits over the calibrated output
+window (the shared-counter ADC of section 4.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tdvmm_matmul_ref(
+    x_codes: jax.Array,      # (M, K) float32, integer-valued in [-L, L]
+    w_codes: jax.Array,      # (K, N) float32, integer-valued in [-Lw, Lw]
+    x_scale: jax.Array,      # (M,) or (M, 1)
+    w_scale: jax.Array,      # (N,)
+    gain: float,
+    out_bits: int | None = None,
+) -> jax.Array:
+    acc = jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
+    y = acc * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1) * gain
+    if out_bits is not None:
+        levels = (1 << out_bits) - 1
+        s = jnp.maximum(jnp.max(jnp.abs(y)), 1e-9)
+        y = jnp.round(y / s * levels) / levels * s
+    return y

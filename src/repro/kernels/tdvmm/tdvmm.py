@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: TD-VMM quantized matmul (charge-accumulation core).
+
+The analog array integrates charge Q[n] = sum_k I[k,n] * on_time[k] — on TPU
+that inner product is the MXU's job.  Blocking: (bm x bk) time-code tiles and
+(bk x bn) current-code tiles stream HBM->VMEM; a (bm x bn) f32 accumulator
+lives in VMEM scratch across the K grid walk (the K axis is the
+'arbitrary'/sequential grid dim), so partial charges never round-trip to HBM
+— the digital analogue of the capacitor accumulating charge on-node.
+
+MXU alignment: all block dims default to multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def tdvmm_matmul_kernel(
+    x_codes: jax.Array,      # (M, K) f32, integer-valued signed time codes
+    w_codes: jax.Array,      # (K, N) f32, integer-valued signed weight codes
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_codes, w_codes)

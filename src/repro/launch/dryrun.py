@@ -1,0 +1,274 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines, before any jax import: jax locks the device count
+#   on first backend init.  (REPRO_XLA_FLAGS lets the perf loop add flags.)
+
+# Multi-pod dry-run: prove the distribution config is coherent without TPUs.
+#
+# For every (architecture x input shape x mesh) cell this lowers + compiles the
+# real train/prefill/decode step with sharded ShapeDtypeStructs (no
+# allocation), prints memory_analysis() (proves it fits) and cost_analysis()
+# (FLOPs/bytes for the roofline), parses per-device collective bytes out of
+# the optimized HLO, and writes a JSON artifact consumed by EXPERIMENTS.md.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+#   python -m repro.launch.dryrun --arch all --shape all            # single-pod
+#   python -m repro.launch.dryrun --arch all --shape all --multi-pod
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, OptimizerConfig, RunConfig, get_config
+from repro.launch import meshctx, roofline, sharding, steps
+from repro.launch.mesh import axis_info, make_production_mesh
+from repro.models import model
+from repro.optim.optimizer import make_optimizer
+
+
+def input_specs(cfg, shape, mesh):
+    """ShapeDtypeStruct stand-ins for every model input: weak-type-correct,
+    shardable, no device allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if kind == "decode":
+        s_in = 1
+    else:
+        s_in = s
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((b, s_in), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((b, s_in, cfg.d_model), jnp.bfloat16)
+    batch = {"inputs": inputs}
+    if kind == "train":
+        batch["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    specs = sharding.batch_specs(cfg, mesh, kind, b)
+    shardings = sharding.to_named(specs, mesh)
+    return sharding.sds_with_sharding(batch, shardings)
+
+
+def optimizer_for(cfg) -> OptimizerConfig:
+    """Adafactor + bf16 moments for ~T-param models (see DESIGN.md §6.4)."""
+    if cfg.param_count() > 4e11:
+        return OptimizerConfig(name="adafactor", moment_dtype="bfloat16")
+    return OptimizerConfig()
+
+
+def apply_opt_level(cfg, level: int):
+    """Perf-iteration config ladder (EXPERIMENTS.md §Perf).
+
+    0: baseline (GSPMD-placed f32 TP all-reduces, all-pairs flash, cf=1.25)
+    1: + explicit bf16 TP reductions via shard_map for attn-out / ffn-down
+       (preferred_element_type alone was REFUTED: XLA:CPU legalizes dots to
+       f32 regardless — see §Perf it.1)
+    2: + block-skipping flash attention (causal/SWA tile pairs only, shared
+       constant masks)
+    3: + MoE capacity_factor 1.0
+    """
+    import dataclasses as dc
+    import jax.numpy as jnp
+    from repro.models import common as mc
+    mc.set_matmul_out_dtype(jnp.bfloat16 if level >= 1 else None)
+    mc.set_tp_explicit(level >= 1)
+    from repro.models import attention as at
+    at.FLASH_BLOCK_SKIP = level >= 2
+    if level >= 3 and cfg.moe is not None:
+        cfg = cfg.replace(moe=dc.replace(cfg.moe, capacity_factor=1.0))
+    return cfg
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatch: int | None = None, donate: bool = True,
+               opt_level: int = 0, tdvmm: bool = False,
+               tdvmm_chained: bool = False):
+    cfg = get_config(arch)
+    if tdvmm:
+        from repro.core.layers import TDVMMLayerConfig
+        cfg = cfg.replace(tdvmm=TDVMMLayerConfig(
+            enabled=True, bits=6, weight_bits=6,
+            io_quantize=not tdvmm_chained))
+    cfg = apply_opt_level(cfg, opt_level)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"status": "skipped",
+                "reason": "pure full-attention arch; 524k dense KV cache is "
+                          "out of scope per DESIGN.md §5"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    info = axis_info(mesh)
+    meshctx.set_mesh(mesh, info["dp_axes"], info["tp_axis"])
+    try:
+        return _lower_cell_inner(cfg, shape, mesh, info, microbatch, donate)
+    finally:
+        meshctx.set_mesh(None)
+
+
+def _lower_cell_inner(cfg, shape, mesh, info, microbatch, donate):
+    opt_cfg = optimizer_for(cfg)
+    run = RunConfig(model=cfg, shape=shape, optimizer=opt_cfg)
+    optimizer = make_optimizer(opt_cfg)
+    t0 = time.time()
+
+    params_shape = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = sharding.param_specs(params_shape, cfg, mesh)
+    p_shardings = sharding.to_named(p_specs, mesh)
+
+    batch_sds = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        dp_size = 1
+        for a in info["dp_axes"]:
+            dp_size *= mesh.shape[a]
+        accum = microbatch if microbatch is not None else steps.grad_accum_steps(run, dp_size)
+        opt_shape = jax.eval_shape(optimizer.init, params_shape)
+        o_specs = sharding.opt_state_specs(opt_shape, p_specs)
+        state_shardings = steps.TrainState(p_shardings, sharding.to_named(o_specs, mesh))
+        state_sds = sharding.sds_with_sharding(
+            steps.TrainState(params_shape, opt_shape), state_shardings)
+        step_fn = steps.make_train_step(cfg, run, optimizer, accum)
+        jitted = jax.jit(step_fn, donate_argnums=(0,) if donate else (),
+                         out_shardings=(state_shardings, None))
+        with mesh:
+            lowered = jitted.lower(state_sds, batch_sds)
+    else:
+        caches_shape = jax.eval_shape(
+            lambda: model.init_caches(cfg, shape.global_batch, shape.seq_len))
+        c_specs = sharding.cache_specs(caches_shape, cfg, mesh)
+        c_shardings = sharding.to_named(c_specs, mesh)
+        caches_sds = sharding.sds_with_sharding(caches_shape, c_shardings)
+        if shape.kind == "prefill":
+            step_fn = steps.make_prefill_step(cfg)
+        else:
+            step_fn = steps.make_decode_step(cfg)
+        jitted = jax.jit(step_fn, donate_argnums=(2,) if donate else (),
+                         out_shardings=(None, c_shardings))
+        with mesh:
+            lowered = jitted.lower(sharding.sds_with_sharding(params_shape, p_shardings),
+                                   batch_sds, caches_sds)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    stats = roofline.analyze_hlo(hlo)   # loop-aware static profile of the HLO
+    coll = dict(stats.coll)
+    coll["total"] = stats.coll_total
+
+    chips = mesh.size
+    terms = roofline.RooflineTerms(
+        chips=chips,
+        flops_per_device=stats.flops,
+        bytes_per_device=stats.hbm_bytes,
+        coll_bytes_per_device=stats.coll_total,
+        model_flops=roofline.model_flops(cfg, shape),
+    )
+
+    def _mem_dict(m):
+        if m is None:
+            return {}
+        keys = ["generated_code_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "temp_size_in_bytes", "alias_size_in_bytes"]
+        return {k: getattr(m, k, None) for k in keys}
+
+    result = {
+        "status": "ok",
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": list(mesh.shape.values()),
+        "mesh_axes": list(mesh.axis_names),
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory_analysis": _mem_dict(mem),
+        # xla:cpu cost_analysis counts while bodies once — kept only as a
+        # cross-check against the loop-aware static profile in `roofline`.
+        "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))
+                              and k in ("flops", "bytes accessed", "transcendentals")},
+        "collective_bytes": coll,
+        "roofline": terms.as_dict(),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt-level", type=int, default=0,
+                    help="perf-iteration ladder (see apply_opt_level)")
+    ap.add_argument("--tdvmm", action="store_true",
+                    help="enable 6-bit TD-VMM linears (paper technique)")
+    ap.add_argument("--tdvmm-chained", action="store_true",
+                    help="paper section 2.2 chaining: skip per-layer output "
+                         "requantization (no DAC/ADC between chained tiles)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="perf it.9: int8 KV cache (decode bandwidth)")
+    args = ap.parse_args()
+    if args.kv_int8:
+        from repro.models import attention as _at
+        _at.set_kv_cache_int8(True)
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch}__{shape}__{'pod2' if multi_pod else 'pod1'}"
+                path = outdir / f"{tag}.json"
+                if path.exists() and not args.force:
+                    print(f"[skip cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                t0 = time.time()
+                try:
+                    result = lower_cell(arch, shape, multi_pod, args.microbatch,
+                                        opt_level=args.opt_level,
+                                        tdvmm=args.tdvmm,
+                                        tdvmm_chained=args.tdvmm_chained)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    result = {"status": "error", "arch": arch, "shape": shape,
+                              "multi_pod": multi_pod, "error": str(e),
+                              "traceback": traceback.format_exc()}
+                    failures += 1
+                path.write_text(json.dumps(result, indent=2))
+                status = result["status"]
+                extra = ""
+                if status == "ok":
+                    r = result["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" t=({r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+                             f"{r['t_collective_s']:.3e})s"
+                             f" compile={result['compile_s']}s")
+                elif status == "error":
+                    extra = " " + result["error"][:200]
+                print(f"[{status}] {tag}{extra}  ({time.time()-t0:.0f}s)", flush=True)
+    print(f"done, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Production mesh definitions.
+
+Kept as FUNCTIONS (not module-level constants) so importing this module never
+touches jax device state — required because tests run with 1 device while the
+dry-run forces 512 host devices via XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2):
+    """Small mesh for unit tests (run under forced host device count)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def axis_info(mesh) -> dict:
+    """dp/tp axis naming convention for a mesh."""
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    return {"dp_axes": dp, "tp_axis": "model" if "model" in names else None}

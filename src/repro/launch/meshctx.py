@@ -1,0 +1,48 @@
+"""Process-global mesh context.
+
+The model code is mesh-agnostic: it asks this module for the active mesh and
+the (dp_axes, tp_axis) names.  Single-device tests run with no mesh — model
+code then skips shard_map/collectives and uses the identical local math.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_MESH: Optional[Mesh] = None
+_DP_AXES: tuple[str, ...] = ()
+_TP_AXIS: Optional[str] = None
+
+
+def set_mesh(mesh: Optional[Mesh], dp_axes: tuple[str, ...] = (), tp_axis: Optional[str] = None):
+    global _MESH, _DP_AXES, _TP_AXIS
+    _MESH = mesh
+    _DP_AXES = dp_axes
+    _TP_AXIS = tp_axis
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def dp_axes() -> tuple[str, ...]:
+    return _DP_AXES
+
+
+def tp_axis() -> Optional[str]:
+    return _TP_AXIS
+
+
+class use_mesh:
+    """Context manager for tests."""
+
+    def __init__(self, mesh, dp_axes=(), tp_axis=None):
+        self.new = (mesh, dp_axes, tp_axis)
+
+    def __enter__(self):
+        self.old = (_MESH, _DP_AXES, _TP_AXIS)
+        set_mesh(*self.new)
+
+    def __exit__(self, *a):
+        set_mesh(*self.old)

@@ -1,0 +1,336 @@
+"""Roofline-term extraction: a static profiler over post-SPMD optimized HLO.
+
+Three terms (seconds) per (arch x shape x mesh), TPU v5e constants:
+
+    compute    = FLOPs_per_device   / 197e12
+    memory     = HBM_bytes_per_dev  / 819e9
+    collective = wire_bytes_per_dev / (50e9 * links)
+
+``compiled.cost_analysis()`` on the CPU backend counts while-loop bodies ONCE
+(not x trip count), so it undercounts scanned-layer models ~n_layers-fold.
+Instead we parse the optimized HLO text ourselves:
+
+  * computations are split at column-0 '%name (...) -> ... {' blocks;
+  * while-loop trip counts come from backend_config known_trip_count (with the
+    loop-condition constant as fallback), multipliers propagate down the call
+    graph (scan-over-layers x scan-over-microbatches nest correctly);
+  * FLOPs: every `dot` op contributes 2 * prod(result_dims) * contract_size,
+    with operand shapes resolved through a per-computation symbol table;
+    `convolution` contributes 2 * prod(result) * window / groups;
+  * HBM bytes: post-fusion, each top-level instruction is ~one kernel; we sum
+    result + operand bytes for every real instruction (bitcast /
+    get-tuple-element / tuple / parameter / constant are free);
+  * collective wire bytes: result bytes x ring factor (all-reduce 2x, others
+    1x) for all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute.
+
+Known bias (documented in EXPERIMENTS.md): XLA:CPU upcasts bf16 dots/gathers
+to f32, so byte counts are an upper bound (<= 2x) vs a real TPU lowering;
+FLOP counts are dtype-independent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.core.constants import TPU_HBM_BW, TPU_ICI_BW, TPU_PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_OPNAME_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],{}/*\s]*?))\s*([\w\-]+)\(")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*"n"\s*:\s*"(\d+)"')
+_WHILE_PARTS_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALLED_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_FGC_RE = re.compile(r"feature_group_count=(\d+)")
+_WINDOW_RE = re.compile(r"window=\{size=([\dx]+)")
+
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+             "after-all", "add-dependency", "partition-id", "replica-id",
+             "iota", "while", "conditional", "call"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[tuple[str, list[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d.strip()]
+    return m.group(1), dims
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    comps: dict[str, str] = {}
+    cur: Optional[str] = None
+    lines: list[str] = []
+    for line in hlo.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m and cur is None:
+            cur = m.group(2)
+            if m.group(1):
+                comps["__entry__"] = cur
+            lines = [line]
+            continue
+        if cur is not None:
+            lines.append(line)
+            if line.rstrip() == "}":
+                comps[cur] = "\n".join(lines)
+                cur, lines = None, []
+    if cur is not None:
+        comps[cur] = "\n".join(lines)
+    return comps
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _WIRE_FACTOR})
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def analyze_hlo(hlo: str) -> HLOStats:
+    comps = _split_computations(hlo)
+    entry = comps.pop("__entry__", None)
+
+    # --- per-computation static facts -------------------------------------
+    # symbol tables, per-computation local stats, call edges with trip counts.
+    # Edge kinds: control-flow (while body/condition — instructions run and
+    # touch HBM) vs inlined (fusion `calls=` / reduce `to_apply=` — their
+    # instructions are fused into the caller's kernel: FLOPs are real, bytes
+    # are NOT separate HBM traffic).
+    local: dict[str, HLOStats] = {}
+    edges: dict[str, list[tuple[str, int, bool]]] = {}
+
+    for name, body in comps.items():
+        syms: dict[str, str] = {}
+        st = HLOStats()
+        calls: list[tuple[str, int, bool]] = []
+        for line in body.splitlines()[1:]:
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            iname, rest = mi.group(1), mi.group(2)
+            mo = _OPNAME_RE.match(rest)
+            if not mo:
+                continue
+            type_str, op = mo.group(1), mo.group(2).lower()
+            syms[iname] = type_str
+            op_base = op.replace("-start", "").replace("-done", "")
+
+            # call edges
+            if op_base == "while":
+                mp = _WHILE_PARTS_RE.search(rest)
+                trip = 1
+                mt = _TRIP_RE.search(rest)
+                if mt:
+                    trip = int(mt.group(1))
+                elif mp and mp.group(1) in comps:
+                    consts = [int(c) for c in _CONST_RE.findall(comps[mp.group(1)])]
+                    trip = max(consts) if consts else 1
+                if mp:
+                    calls.append((mp.group(2), trip, False))      # body: control flow
+                    calls.append((mp.group(1), trip + 1, False))  # condition
+                continue
+            for c in _CALLED_RE.findall(rest):
+                if c in comps:
+                    calls.append((c, 1, True))   # fusion/apply body: inlined
+
+            if op_base in _FREE_OPS:
+                continue
+
+            result_bytes = _shape_bytes(type_str)
+            # operand bytes via symbol table (dedup repeated uses per op)
+            args = rest[rest.find("(") + 1:]
+            operand_names = _OPERAND_RE.findall(args.split("metadata=")[0])
+            operand_bytes = 0
+            seen = set()
+            for on in operand_names:
+                if on in syms and on not in seen:
+                    seen.add(on)
+                    operand_bytes += _shape_bytes(syms[on])
+            # in-place windowed ops: traffic is the slice, not the buffer
+            if op_base == "dynamic-update-slice":
+                upd = operand_names[1] if len(operand_names) > 1 else None
+                ub = _shape_bytes(syms.get(upd, "")) if upd else 0
+                st.hbm_bytes += 2.0 * ub
+            elif op_base == "dynamic-slice":
+                st.hbm_bytes += 2.0 * result_bytes
+            elif op_base == "broadcast":
+                st.hbm_bytes += result_bytes
+            else:
+                st.hbm_bytes += result_bytes + operand_bytes
+
+            if op_base in _WIRE_FACTOR and "-done" not in op:
+                st.coll[op_base] += result_bytes * _WIRE_FACTOR[op_base]
+            elif op_base == "dot":
+                fs = _first_shape_dims(type_str)
+                mc = _CONTRACT_RE.search(rest)
+                ops_list = _OPERAND_RE.findall(args.split("metadata=")[0])
+                if fs and mc is not None and ops_list:
+                    lhs = ops_list[0]
+                    lhs_dims = []
+                    if lhs in syms:
+                        lf = _first_shape_dims(syms[lhs])
+                        lhs_dims = lf[1] if lf else []
+                    csize = 1
+                    for ci in mc.group(1).split(","):
+                        if ci.strip() and lhs_dims:
+                            idx = int(ci)
+                            if idx < len(lhs_dims):
+                                csize *= lhs_dims[idx]
+                    rprod = 1
+                    for d in fs[1]:
+                        rprod *= d
+                    st.flops += 2.0 * rprod * csize
+            elif op_base == "convolution":
+                fs = _first_shape_dims(type_str)
+                mw = _WINDOW_RE.search(rest)
+                if fs and mw:
+                    w = 1
+                    for d in mw.group(1).split("x"):
+                        w *= int(d)
+                    rprod = 1
+                    for d in fs[1]:
+                        rprod *= d
+                    st.flops += 2.0 * rprod * w
+        local[name] = st
+        edges[name] = calls
+
+    # --- propagate multipliers from ENTRY down the call graph --------------
+    # flops multiplier flows through every edge; the bytes multiplier is cut
+    # at inlined (fusion/apply) edges — those instructions are part of the
+    # caller's kernel and their HBM traffic is already counted at the call.
+    mult_f: dict[str, float] = {}
+    mult_b: dict[str, float] = {}
+
+    def visit(name: str, mf: float, mb: float, depth: int = 0):
+        if name not in local or depth > 64:
+            return
+        if mf <= mult_f.get(name, 0.0) and mb <= mult_b.get(name, 0.0):
+            return
+        mult_f[name] = max(mult_f.get(name, 0.0), mf)
+        mult_b[name] = max(mult_b.get(name, 0.0), mb)
+        for child, trip, inlined in edges.get(name, []):
+            visit(child, mf * trip, 0.0 if inlined else mb * trip, depth + 1)
+
+    if entry is None and comps:
+        entry = next(iter(comps))
+    if entry:
+        visit(entry, 1.0, 1.0)
+
+    total = HLOStats()
+    for name, st in local.items():
+        mf = mult_f.get(name, 0.0)
+        mb = mult_b.get(name, 0.0)
+        total.flops += mf * st.flops
+        total.hbm_bytes += mb * st.hbm_bytes
+        for k in total.coll:
+            total.coll[k] += mf * st.coll[k]
+    return total
+
+
+def collective_bytes_per_device(hlo: str) -> dict[str, float]:
+    st = analyze_hlo(hlo)
+    out = dict(st.coll)
+    out["total"] = st.coll_total
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float
+    ici_links: int = 4          # v5e: 2D torus, 4 usable links/chip
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / TPU_PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / TPU_HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / (TPU_ICI_BW * self.ici_links)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        t = self.step_time_lower_bound
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.chips) / (t * TPU_PEAK_FLOPS_BF16)
+
+    @property
+    def flops_ratio(self) -> float:
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "step_time_lower_bound_s": self.step_time_lower_bound,
+            "mfu_at_bound": self.mfu,
+            "model_to_hlo_flops": self.flops_ratio,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D (train) / 2*N_active*D per token (inference) — the
+    standard decoder estimate used for the useful-FLOPs ratio."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,1 @@
+from repro.models import model, transformer, attention, ffn, moe, ssm, common  # noqa: F401

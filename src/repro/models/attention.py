@@ -1,0 +1,379 @@
+"""Multi-head attention: GQA/MHA, sliding-window, KV cache prefill/decode.
+
+Weights are stored flattened, (d_model, n_heads*head_dim), so the TP dimension
+divides evenly on a 16-way model axis for every assigned arch (e.g. yi-34b's
+56 heads x 128 = 7168); GSPMD handles the per-head einsum resharding.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_cache, n_kv, head_dim)  bf16 or int8
+    v: jax.Array          # (B, S_cache, n_kv, head_dim)
+    pos: jax.Array        # (B,) int32 — tokens absorbed per sequence (ragged
+    #                       decode: slots advance independently)
+    k_scale: jax.Array | None = None   # (B, S_cache, n_kv) — int8 mode only
+    v_scale: jax.Array | None = None
+
+
+# perf it.9 — int8 KV cache (decode is cache-bandwidth-bound; see
+# EXPERIMENTS.md §Roofline "what moves the dominant term" for decode rows).
+KV_CACHE_INT8 = False
+
+
+def set_kv_cache_int8(on: bool):
+    global KV_CACHE_INT8
+    KV_CACHE_INT8 = on
+
+
+def _kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(..., hd) -> int8 codes + per-(token, head) scale."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-6) / 127.0
+    codes = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return codes, scale.astype(jnp.float32)
+
+
+def _kv_dequantize(codes: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    bias = cfg.qkv_bias
+    return {
+        "wq": common.dense_init(kq, d, cfg.n_heads * hd, dtype, bias=bias),
+        "wk": common.dense_init(kk, d, cfg.n_kv_heads * hd, dtype, bias=bias),
+        "wv": common.dense_init(kv, d, cfg.n_kv_heads * hd, dtype, bias=bias),
+        "wo": common.dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    return x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
+
+
+FLASH_THRESHOLD = 2048   # use online-softmax blocked attention above this S
+FLASH_BLOCK_Q = 1024
+FLASH_BLOCK_KV = 1024
+FLASH_BLOCK_SKIP = False  # perf it.2: iterate only causal/in-window tile pairs
+
+
+def _attend_flash(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Array:
+    """Blocked causal attention with online softmax (flash-style).
+
+    Never materializes the (Sq, Skv) logits: a double lax.scan over
+    (q blocks, kv blocks) carries running (max, denom, acc) — the JAX-level
+    equivalent of the VMEM-resident blocking a Pallas kernel would use; XLA
+    keeps per-tile buffers at FLASH_BLOCK_Q x FLASH_BLOCK_KV.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Kv, D).  Causal + optional SWA mask,
+    with q global positions offset by q_offset.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    bq = min(FLASH_BLOCK_Q, sq)
+    bkv = min(FLASH_BLOCK_KV, skv)
+    nq, nkv = sq // bq, skv // bkv
+    assert sq % bq == 0 and skv % bkv == 0
+    scale = d ** -0.5
+    window = cfg.swa_window
+
+    qr = q.reshape(b, nq, bq, kvh, g, d).transpose(1, 0, 3, 4, 2, 5)  # (nq,b,kv,g,bq,d)
+    kr = k.reshape(b, nkv, bkv, kvh, d).transpose(1, 0, 3, 2, 4)      # (nkv,b,kv,bkv,d)
+    vr = v.reshape(b, nkv, bkv, kvh, d).transpose(1, 0, 3, 2, 4)
+
+    def q_block(_, qi_qb):
+        qi, qb = qi_qb                     # qb: (b, kv, g, bq, d)
+        q_pos = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_block(carry, ki_kb):
+            m, l, acc = carry
+            ki, kb, vb = ki_kb
+            k_pos = ki * bkv + jnp.arange(bkv)
+            logits = jnp.einsum("bkgqd,bktd->bkgqt", qb, kb).astype(jnp.float32)
+            logits *= scale
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_new = jnp.maximum(m, logits.max(-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nkv), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qr))
+    # outs: (nq, b, kv, g, bq, d) -> (b, sq, h, d)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+
+
+def _attend_flash_blocks(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Array:
+    """Perf it.2: flash attention that iterates ONLY the (q, kv) tile pairs the
+    causal/SWA structure makes non-empty, with the tile mask shared as a small
+    loop-invariant constant per pair class.
+
+    vs _attend_flash (which visits all nq x nkv pairs and materializes a mask
+    per pair): causal halves the tile count; a W-window sweep at length S
+    visits ~S*W/B^2 tiles instead of (S/B)^2 — an 8x FLOP cut for Mixtral's
+    32k prefill.  Pair classes (full / diagonal / window-edge) run as three
+    scans over STATIC index lists, so the HLO trip counts — and the roofline
+    terms derived from them — reflect the real work.  Online-softmax merging
+    is order-independent, so processing tiles class-by-class is exact."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    assert sq == skv and q_offset == 0, "block-skip path is for self-attention"
+    kvh = cfg.n_kv_heads
+    g = h // kvh
+    bs = min(FLASH_BLOCK_Q, sq)
+    nq = sq // bs
+    assert sq % bs == 0
+    scale = d ** -0.5
+    w = cfg.swa_window
+
+    qr = q.reshape(b, nq, bs, kvh, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nq, bs, kvh, d).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nq, bs, kvh, d).transpose(1, 0, 3, 2, 4)
+
+    # --- static tile-pair classification -----------------------------------
+    full, diag, edges = [], [], {}
+    for qi in range(nq):
+        for ki in range(qi + 1):
+            r = qi - ki
+            if w is not None and r * bs >= w + bs - 1:
+                continue                       # fully outside the window
+            if r == 0:
+                diag.append((qi, ki))
+            elif w is not None and (r + 1) * bs > w:
+                edges.setdefault(r, []).append((qi, ki))   # window boundary
+            else:
+                full.append((qi, ki))
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+    diag_mask = ii >= jj
+    if w is not None:
+        diag_mask &= (ii - jj) < w
+
+    def scan_pairs(carry, pairs, mask):
+        if not pairs:
+            return carry
+        idx = jnp.asarray(pairs, jnp.int32)
+
+        def step(c, p):
+            m, l, acc = c
+            qi, ki = p[0], p[1]
+            qb = jax.lax.dynamic_index_in_dim(qr, qi, 0, keepdims=False)
+            kb = jax.lax.dynamic_index_in_dim(kr, ki, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, ki, 0, keepdims=False)
+            logits = jnp.einsum("bkgqd,bktd->bkgqt", qb, kb,
+                                preferred_element_type=jnp.float32) * scale
+            if mask is not None:
+                logits = jnp.where(mask[None, None, None], logits, -1e30)
+            mi = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+            li = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+            ai = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+            m_new = jnp.maximum(mi, logits.max(-1))
+            p_ = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(mi - m_new)
+            l_new = li * corr + p_.sum(-1)
+            a_new = ai * corr[..., None] + jnp.einsum(
+                "bkgqt,bktd->bkgqd", p_.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0),
+                    jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0),
+                    jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)), None
+
+        carry, _ = jax.lax.scan(step, carry, idx)
+        return carry
+
+    m0 = jnp.full((nq, b, kvh, g, bs), -1e30, jnp.float32)
+    l0 = jnp.zeros((nq, b, kvh, g, bs), jnp.float32)
+    a0 = jnp.zeros((nq, b, kvh, g, bs, d), jnp.float32)
+    carry = (m0, l0, a0)
+    carry = scan_pairs(carry, full, None)
+    carry = scan_pairs(carry, diag, diag_mask)
+    for r, pairs in edges.items():
+        edge_mask = (r * bs + ii - jj) < w
+        carry = scan_pairs(carry, pairs, edge_mask)
+    m, l, acc = carry
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _flash(q, k, v, cfg: ModelConfig) -> jax.Array:
+    if FLASH_BLOCK_SKIP and q.shape[1] == k.shape[1]:
+        return _attend_flash_blocks(q, k, v, cfg)
+    return _attend_flash(q, k, v, cfg)
+
+
+def _attend(q, k, v, mask, cfg: ModelConfig) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Skv,Kv,D); mask: (B,1,Sq,Skv) or broadcastable."""
+    hd = q.shape[-1]
+    groups = cfg.n_heads // cfg.n_kv_heads
+    b, sq, h, _ = q.shape
+    skv = k.shape[1]
+    q = q.reshape(b, sq, cfg.n_kv_heads, groups, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    logits = logits * (hd ** -0.5)
+    logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _causal_mask(sq: int, skv: int, offset: int, window: Optional[int]) -> jax.Array:
+    """(1, 1, sq, skv) boolean mask.  offset = absolute position of query 0."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def apply_train(params, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+                key=None) -> jax.Array:
+    """Full-sequence causal (optionally sliding-window) attention."""
+    td = cfg.tdvmm
+    hd = cfg.resolved_head_dim
+    q = _split_heads(common.dense(params["wq"], x, td, key), cfg.n_heads, hd)
+    k = _split_heads(common.dense(params["wk"], x, td, key), cfg.n_kv_heads, hd)
+    v = _split_heads(common.dense(params["wv"], x, td, key), cfg.n_kv_heads, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    s = x.shape[1]
+    if s > FLASH_THRESHOLD:
+        out = _flash(q, k, v, cfg)
+    else:
+        mask = _causal_mask(s, s, 0, cfg.swa_window)
+        out = _attend(q, k, v, mask, cfg)
+    return common.dense_tp_reduce(params["wo"], _merge_heads(out), td, key)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    """Rolling cache of size min(max_len, window) for SWA archs."""
+    size = max_len if cfg.swa_window is None else min(max_len, cfg.swa_window)
+    shape = (batch, size, cfg.n_kv_heads, cfg.resolved_head_dim)
+    if KV_CACHE_INT8:
+        sshape = shape[:-1]
+        return KVCache(jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                       jnp.zeros((batch,), jnp.int32),
+                       jnp.zeros(sshape, jnp.float32),
+                       jnp.zeros(sshape, jnp.float32))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def apply_prefill(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
+                  key=None) -> tuple[jax.Array, KVCache]:
+    """Process a full prompt, filling the cache (assumes cache.pos == 0)."""
+    td = cfg.tdvmm
+    hd = cfg.resolved_head_dim
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q = _split_heads(common.dense(params["wq"], x, td, key), cfg.n_heads, hd)
+    k = _split_heads(common.dense(params["wk"], x, td, key), cfg.n_kv_heads, hd)
+    v = _split_heads(common.dense(params["wv"], x, td, key), cfg.n_kv_heads, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    if s > FLASH_THRESHOLD:
+        out = _flash(q, k, v, cfg)
+    else:
+        mask = _causal_mask(s, s, 0, cfg.swa_window)
+        out = _attend(q, k, v, mask, cfg)
+
+    size = cache.k.shape[1]
+    k_store, v_store = k, v
+    k_sc = v_sc = None
+    if cache.k_scale is not None:
+        k_store, k_sc = _kv_quantize(k)
+        v_store, v_sc = _kv_quantize(v)
+    if size >= s:
+        new_k = jax.lax.dynamic_update_slice(
+            cache.k, k_store.astype(cache.k.dtype), (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache.v, v_store.astype(cache.v.dtype), (0, 0, 0, 0))
+        if k_sc is not None:
+            k_sc = jax.lax.dynamic_update_slice(cache.k_scale, k_sc, (0, 0, 0))
+            v_sc = jax.lax.dynamic_update_slice(cache.v_scale, v_sc, (0, 0, 0))
+    else:  # rolling SWA cache keeps the last `size` tokens, ring-aligned so that
+        # absolute position p lives at slot p % size (what decode expects).
+        shift = s % size
+        new_k = jnp.roll(k_store[:, -size:], shift, axis=1).astype(cache.k.dtype)
+        new_v = jnp.roll(v_store[:, -size:], shift, axis=1).astype(cache.v.dtype)
+        if k_sc is not None:
+            k_sc = jnp.roll(k_sc[:, -size:], shift, axis=1)
+            v_sc = jnp.roll(v_sc[:, -size:], shift, axis=1)
+    new_cache = KVCache(new_k, new_v, jnp.full((b,), s, jnp.int32), k_sc, v_sc)
+    return common.dense(params["wo"], _merge_heads(out), td, key), new_cache
+
+
+def apply_decode(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
+                 key=None) -> tuple[jax.Array, KVCache]:
+    """One-token decode step.  x: (B, 1, d)."""
+    td = cfg.tdvmm
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    pos = cache.pos                                      # (B,) int32
+    positions = pos[:, None]                             # (B, 1)
+    q = _split_heads(common.dense(params["wq"], x, td, key), cfg.n_heads, hd)
+    k = _split_heads(common.dense(params["wk"], x, td, key), cfg.n_kv_heads, hd)
+    v = _split_heads(common.dense(params["wv"], x, td, key), cfg.n_kv_heads, hd)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    size = cache.k.shape[1]
+    slot = pos % size if cfg.swa_window is not None else jnp.minimum(pos, size - 1)
+    rows = jnp.arange(b)
+    k_sc = v_sc = None
+    if cache.k_scale is not None:
+        k_q, k_s1 = _kv_quantize(k)
+        v_q, v_s1 = _kv_quantize(v)
+        new_k = cache.k.at[rows, slot].set(k_q[:, 0])
+        new_v = cache.v.at[rows, slot].set(v_q[:, 0])
+        k_sc = cache.k_scale.at[rows, slot].set(k_s1[:, 0])
+        v_sc = cache.v_scale.at[rows, slot].set(v_s1[:, 0])
+        k_read = _kv_dequantize(new_k, k_sc, q.dtype)
+        v_read = _kv_dequantize(new_v, v_sc, q.dtype)
+    else:
+        new_k = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
+        new_v = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
+        k_read = new_k.astype(q.dtype)
+        v_read = new_v.astype(q.dtype)
+
+    kpos = jnp.arange(size)
+    if cfg.swa_window is not None:
+        # ring buffer: valid entries were written within the last `size` steps
+        age = (slot[:, None] - kpos[None, :]) % size
+        valid = age <= jnp.minimum(pos, size - 1)[:, None]
+    else:
+        valid = kpos[None, :] <= pos[:, None]
+    mask = valid[:, None, None, :]                       # (B, 1, 1, S)
+    out = _attend(q, k_read, v_read, mask, cfg)
+    y = common.dense(params["wo"], _merge_heads(out), td, key)
+    return y, KVCache(new_k, new_v, pos + 1, k_sc, v_sc)

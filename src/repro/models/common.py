@@ -1,0 +1,173 @@
+"""Shared model components: norms, rotary embeddings, initialized dense layers.
+
+All modules are functional pytrees: ``init(key, ...) -> params`` and
+``apply(params, x, ...) -> y``.  Every dense matmul goes through
+``core.layers.td_matmul`` so any linear can execute in TD-VMM mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import TDVMMLayerConfig, td_matmul
+
+
+def resolve_dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Anchor activations' batch dim to the DP axes (no-op without a mesh).
+
+    Batch size 1 (long_500k) stays replicated — GSPMD can't split it."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch import meshctx
+
+    mesh = meshctx.get_mesh()
+    if mesh is None:
+        return x
+    dp = meshctx.dp_axes()
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    if x.shape[0] % n != 0:
+        return x
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (rotate-half convention)
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Matmul output dtype control (perf knob; see EXPERIMENTS.md §Perf it.1)
+# --------------------------------------------------------------------------
+# When set to bf16, every dense matmul emits bf16 partial sums
+# (preferred_element_type), so GSPMD's tensor-parallel all-reduces move half
+# the bytes.  MXU still accumulates in f32 internally on TPU.
+_MATMUL_OUT_DTYPE = None
+
+
+def set_matmul_out_dtype(dtype):
+    global _MATMUL_OUT_DTYPE
+    _MATMUL_OUT_DTYPE = dtype
+
+
+def matmul_out_dtype():
+    return _MATMUL_OUT_DTYPE
+
+
+# --------------------------------------------------------------------------
+# Dense (TD-VMM-aware)
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, bias: bool = False,
+               scale: float | None = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x: jax.Array, td: TDVMMLayerConfig, key=None) -> jax.Array:
+    y = td_matmul(x, params["w"], td, key)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Explicit-TP reduction matmul (perf it.1b — EXPERIMENTS.md §Perf)
+# --------------------------------------------------------------------------
+# GSPMD places the tensor-parallel all-reduce directly after the partial-sum
+# dot, which the CPU backend legalizes to f32 — and on TPU is also f32 when
+# the dot accumulates in f32.  For the two reduction matmuls of each block
+# (attn wo, ffn w_down) this wrapper makes the collective EXPLICIT: local
+# (f/tp) x (f/tp, d) matmul, cast to bf16, psum over the model axis — halving
+# the dominant wire bytes.  Weights arrive FSDP+TP sharded; the FSDP gather
+# over dp is explicit too (bf16).
+TP_EXPLICIT = False
+
+
+def set_tp_explicit(on: bool):
+    global TP_EXPLICIT
+    TP_EXPLICIT = on
+
+
+def dense_tp_reduce(params, x: jax.Array, td: TDVMMLayerConfig, key=None) -> jax.Array:
+    """x: (..., f) with f TP-shardable; w: (f, d).  Falls back to dense()
+    when explicit TP is off, no mesh is active, or TD-VMM mode is on."""
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import meshctx
+
+    mesh = meshctx.get_mesh()
+    if not TP_EXPLICIT or mesh is None or td.enabled:
+        return dense(params, x, td, key)
+    dp = meshctx.dp_axes()
+    tp = meshctx.tp_axis()
+    w = params["w"]
+    f, d_out = w.shape
+    tpn = mesh.shape[tp]
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    if f % tpn or x.shape[0] % dpn or w.shape[0] % tpn or d_out % dpn:
+        return dense(params, x, td, key)
+
+    def inner(x_loc, w_loc):
+        # w_loc: (f/tp, d/dp) -> gather FSDP shards (bf16 wire)
+        w_full = jax.lax.all_gather(w_loc, dp, axis=1, tiled=True)
+        y = jnp.dot(x_loc, w_full)                  # (..., f/tp) @ (f/tp, d)
+        y = jax.lax.psum(y.astype(jnp.bfloat16), tp)
+        return y
+
+    batch_spec = P(dp, *([None] * (x.ndim - 2)), tp)
+    y = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(batch_spec, P(tp, dp)),
+        out_specs=P(dp, *([None] * (x.ndim - 1))),
+        check_vma=False,
+    )(x, w)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def activation(name: str, x: jax.Array) -> jax.Array:
+    if name == "sq_relu":
+        r = jax.nn.relu(x)
+        return r * r
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)

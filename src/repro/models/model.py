@@ -1,0 +1,121 @@
+"""LM wrapper: embedding, stack, head, loss; train/prefill/decode entry points."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, ssm, transformer
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = common.resolve_dtype(cfg.dtype)
+    ke, kb, kh = jax.random.split(key, 3)
+    params: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = {
+            "table": (jax.random.normal(ke, (cfg.padded_vocab, cfg.d_model)) * 0.02
+                      ).astype(dtype)}
+    params["blocks"] = transformer.init(kb, cfg, dtype)
+    params["ln_f"] = common.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = common.dense_init(kh, cfg.d_model, cfg.padded_vocab, dtype,
+                                           scale=cfg.d_model ** -0.5)
+    return params
+
+
+def _embed(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        return params["embed"]["table"][batch["inputs"]]
+    return batch["inputs"].astype(common.resolve_dtype(cfg.dtype))
+
+
+def _head(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["table"].T
+    return common.dense(params["head"], x, cfg.tdvmm)
+
+
+def forward(params, batch: dict, cfg: ModelConfig, key=None):
+    """Training forward: full-sequence causal.  Returns (logits, aux)."""
+    x = _embed(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _, aux = transformer.apply(params["blocks"], x, cfg, "train", None,
+                                  positions, embed0=x, key=key)
+    x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _head(params, x, cfg), aux
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, key=None,
+            lb_coef: float = 0.01, z_coef: float = 1e-3):
+    """Next-token cross-entropy with padding mask; targets: (B, S) int32,
+    positions with target < 0 are masked out."""
+    logits, aux = forward(params, batch, cfg, key)
+    targets = batch["targets"]
+    mask = (targets >= 0).astype(jnp.float32)
+    safe_t = jnp.maximum(targets, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_t[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    total = loss + lb_coef * aux["lb_loss"] + z_coef * aux["z_loss"]
+    metrics = {"loss": loss, "lb_loss": aux["lb_loss"], "z_loss": aux["z_loss"],
+               "tokens": mask.sum()}
+    return total, metrics
+
+
+# --------------------------------------------------------------------------
+# Serving
+# --------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = common.resolve_dtype(cfg.dtype)
+
+    def one_attn():
+        return attention.init_cache(cfg, batch, max_len, dtype)
+
+    def one_ssm():
+        return ssm.init_cache(cfg, batch, dtype)
+
+    def stack(mk, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[mk() for _ in range(n)])
+
+    caches: dict[str, Any] = {}
+    for i, (kind, n) in enumerate(transformer.segments(cfg)):
+        if kind in ("attn_ffn", "attn_moe"):
+            caches[f"seg{i}"] = stack(one_attn, n)
+        elif kind == "ssm":
+            caches[f"seg{i}"] = stack(one_ssm, n)
+        elif kind == "hybrid":
+            caches[f"seg{i}"] = stack(one_ssm, n)
+    if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        caches["shared_attn"] = stack(one_attn, n_groups)
+    return caches
+
+
+def prefill_step(params, batch: dict, caches: dict, cfg: ModelConfig):
+    """Absorb a prompt.  Returns (logits_last, new_caches)."""
+    x = _embed(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, new_caches, _ = transformer.apply(params["blocks"], x, cfg, "prefill",
+                                         caches, positions, embed0=x)
+    x = common.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    return _head(params, x, cfg), new_caches
+
+
+def decode_step(params, batch: dict, caches: dict, cfg: ModelConfig):
+    """One token for every sequence.  batch['inputs']: (B, 1) (or (B,1,d) for
+    embedding-input archs).  Returns (logits, new_caches)."""
+    x = _embed(params, batch, cfg)
+    b = x.shape[0]
+    positions = None  # decode blocks read positions from their caches
+    x, new_caches, _ = transformer.apply(params["blocks"], x, cfg, "decode",
+                                         caches, positions, embed0=x)
+    x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _head(params, x, cfg), new_caches

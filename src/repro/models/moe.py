@@ -1,0 +1,217 @@
+"""Mixture-of-Experts with sort-based capacity dispatch.
+
+Two distribution modes (cfg.moe.impl):
+
+  'local' — experts replicated across the DP axes, expert-FFN hidden dim
+            TP-sharded over `model` (fits small expert counts, e.g. Mixtral's
+            8 experts on a 16-wide model axis).  Tokens never leave their DP
+            shard; the only collective is the down-projection psum over
+            `model`.
+
+  'ep'    — expert tables sharded over the DP axes (E_loc = E / dp per shard;
+            Kimi-K2: 384/16 = 24 per shard single-pod), hidden dim TP-sharded
+            over `model`.  Tokens are routed to the shard owning their expert
+            via all_to_all over the DP axes and routed back after the expert
+            FFN — classic expert parallelism.
+
+Dispatch is sort-based (argsort by expert id + rank-in-group + scatter into an
+(E, capacity, d) buffer): no one-hot dispatch tensors, so it scales to E=384.
+Both modes run inside shard_map; on a single device (tests) the same math runs
+without collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import meshctx
+from repro.models import common
+
+
+def init(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    keys = jax.random.split(key, 5)
+    gated = cfg.act == "silu_glu"
+    scale = d ** -0.5
+
+    def expert_bank(k, n):
+        ks = jax.random.split(k, 3)
+        p = {
+            "w_up": (jax.random.normal(ks[0], (n, d, m.d_ff)) * scale).astype(dtype),
+            "w_down": (jax.random.normal(ks[1], (n, m.d_ff, d)) * (m.d_ff ** -0.5)).astype(dtype),
+        }
+        if gated:
+            p["w_gate"] = (jax.random.normal(ks[2], (n, d, m.d_ff)) * scale).astype(dtype)
+        return p
+
+    p = {
+        "router": common.dense_init(keys[0], d, m.n_experts, jnp.float32),
+        "experts": expert_bank(keys[1], m.n_experts),
+    }
+    if m.n_shared_experts:
+        p["shared"] = expert_bank(keys[2], m.n_shared_experts)
+    return p
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(n_tokens * top_k * factor / n_experts) + 1
+    return max(c, 4)
+
+
+def _expert_ffn(bank, x, cfg: ModelConfig, tp_axis: Optional[str]):
+    """x: (E, C, d) -> (E, C, d).  Hidden dim is TP-sharded when tp_axis given;
+    the down-projection partial sums are reduced over tp (in bf16 when the
+    matmul-out knob is set — halves the psum wire bytes)."""
+    pet = common.matmul_out_dtype()
+    kw = {"preferred_element_type": pet} if pet is not None else {}
+    if "w_gate" in bank:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, bank["w_gate"], **kw))
+        h = h * jnp.einsum("ecd,edf->ecf", x, bank["w_up"], **kw)
+    else:
+        h = common.activation(cfg.act, jnp.einsum("ecd,edf->ecf", x, bank["w_up"], **kw))
+    y = jnp.einsum("ecf,efd->ecd", h, bank["w_down"], **kw)
+    if tp_axis is not None:
+        y = jax.lax.psum(y, tp_axis)
+    return y
+
+
+def _route(params, x_flat, cfg: ModelConfig):
+    """Router: returns (ids (T,K), gates (T,K), aux losses)."""
+    m = cfg.moe
+    logits = (x_flat.astype(jnp.float32) @ params["router"]["w"])      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss + router z-loss.  Expert counts via
+    # scatter-add, NOT one_hot: a (T, K, E) one-hot is ~100 MB per layer per
+    # microbatch at kimi-k2 scale (perf it.4, EXPERIMENTS.md §Perf).
+    me = jnp.mean(probs, axis=0)                                       # (E,)
+    counts = jnp.zeros((m.n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    ce = counts / ids.shape[0]
+    lb_loss = m.n_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return ids, gates.astype(x_flat.dtype), {"lb_loss": lb_loss, "z_loss": z_loss}
+
+
+def _dispatch_indices(ids: jax.Array, top_k: int):
+    """Sort-based dispatch bookkeeping.
+
+    Returns (sorted_expert, pos_in_expert, order, token_idx): entry j of the
+    sorted stream goes to buffer slot [sorted_expert[j], pos_in_expert[j]] and
+    came from token token_idx[j]."""
+    flat = ids.reshape(-1)                                             # (T*K,)
+    order = jnp.argsort(flat)                                          # stable
+    sorted_expert = flat[order]
+    ranks = jnp.searchsorted(sorted_expert, sorted_expert, side="left")
+    pos = jnp.arange(flat.shape[0]) - ranks
+    token_idx = order // top_k
+    return sorted_expert, pos, order, token_idx
+
+
+def _scatter_to_buffer(x_flat, sorted_expert, pos, token_idx, n_experts, capacity):
+    buf = jnp.zeros((n_experts, capacity) + x_flat.shape[1:], x_flat.dtype)
+    return buf.at[sorted_expert, pos].set(x_flat[token_idx], mode="drop")
+
+
+def _gather_from_buffer(buf, sorted_expert, pos, order, gates, top_k):
+    """Inverse of the scatter; returns (T, d) combined output.
+
+    Unsorting uses the inverse permutation as a GATHER (perf it.4): a scatter
+    into a zeros buffer costs an extra zero-fill + random-write pass."""
+    vals = buf[sorted_expert, jnp.minimum(pos, buf.shape[1] - 1)]      # (T*K, d)
+    vals = jnp.where((pos < buf.shape[1])[:, None], vals, 0.0)
+    inv_order = jnp.argsort(order)
+    unsorted = vals[inv_order]
+    per_k = unsorted.reshape(-1, top_k, vals.shape[-1])
+    return jnp.sum(per_k * gates[..., None].astype(vals.dtype), axis=1)
+
+
+def _moe_local(params, x_flat, cfg: ModelConfig, tp_axis):
+    """Experts replicated over DP; only collective is the tp psum."""
+    m = cfg.moe
+    ids, gates, aux = _route(params, x_flat, cfg)
+    cap = _capacity(x_flat.shape[0], m.top_k, m.n_experts, m.capacity_factor)
+    se, pos, order, tok = _dispatch_indices(ids, m.top_k)
+    buf = _scatter_to_buffer(x_flat, se, pos, tok, m.n_experts, cap)
+    out = _expert_ffn(params["experts"], buf, cfg, tp_axis)
+    y = _gather_from_buffer(out, se, pos, order, gates, m.top_k)
+    return y, aux
+
+
+def _moe_ep(params, x_flat, cfg: ModelConfig, tp_axis, dp_axes, dp_size):
+    """Experts sharded over the DP axes; all_to_all routes tokens to owners."""
+    m = cfg.moe
+    e_loc = m.n_experts // dp_size
+    ids, gates, aux = _route(params, x_flat, cfg)
+    cap = _capacity(x_flat.shape[0], m.top_k, m.n_experts, m.capacity_factor)
+    se, pos, order, tok = _dispatch_indices(ids, m.top_k)
+    # send buffer grouped by destination shard: (E, C, d) == (dp, E_loc, C, d)
+    buf = _scatter_to_buffer(x_flat, se, pos, tok, m.n_experts, cap)
+    buf = buf.reshape(dp_size, e_loc, cap, -1)
+    buf = jax.lax.all_to_all(buf, dp_axes, split_axis=0, concat_axis=0, tiled=False)
+    # buf: (dp_src, E_loc, C, d) — tokens from every source shard for my experts
+    buf = buf.transpose(1, 0, 2, 3).reshape(e_loc, dp_size * cap, -1)
+    out = _expert_ffn(params["experts"], buf, cfg, tp_axis)
+    out = out.reshape(e_loc, dp_size, cap, -1).transpose(1, 0, 2, 3)
+    out = jax.lax.all_to_all(out, dp_axes, split_axis=0, concat_axis=0, tiled=False)
+    out = out.reshape(m.n_experts, cap, -1)
+    y = _gather_from_buffer(out, se, pos, order, gates, m.top_k)
+    return y, aux
+
+
+def apply(params, x: jax.Array, cfg: ModelConfig, key=None) -> tuple[jax.Array, dict]:
+    """x: (B, S, d) -> (y, aux_losses)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    mesh = meshctx.get_mesh()
+    shared_y = 0.0
+    if m.n_shared_experts:
+        flat = x.reshape(1, b * s, d)
+        shared_y = _expert_ffn(
+            {k: v for k, v in params["shared"].items()}, flat, cfg, None
+        ).reshape(b, s, d)
+        # NB: shared-expert tp reduction is handled by GSPMD outside shard_map.
+
+    if mesh is None:
+        y, aux = _moe_local(params, x.reshape(-1, d), cfg, None)
+        return y.reshape(b, s, d) + shared_y, aux
+
+    dp = meshctx.dp_axes()
+    tp = meshctx.tp_axis()
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    # batch=1 decode (long_500k) can't split over dp: run replicated (the
+    # dispatch is then redundant across dp shards but numerically identical).
+    batch_spec = P(dp, None, None) if b % dp_size == 0 else P(None, None, None)
+    e_ax = dp if m.impl == "ep" else None
+    expert_spec = {
+        k: (P(e_ax, tp, None) if k == "w_down" else P(e_ax, None, tp))
+        for k in params["experts"]
+    }
+    router_spec = jax.tree.map(lambda _: P(None, None), params["router"])
+
+    def inner(xb, experts, router):
+        p = {"experts": experts, "router": router}
+        flat = xb.reshape(-1, d)
+        if m.impl == "ep":
+            y, aux = _moe_ep(p, flat, cfg, tp, dp, dp_size)
+        else:
+            y, aux = _moe_local(p, flat, cfg, tp)
+        aux = jax.tree.map(lambda v: jax.lax.pmean(v, dp), aux)
+        return y.reshape(xb.shape), aux
+
+    y, aux = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(batch_spec, expert_spec, router_spec),
+        out_specs=(batch_spec, P()),
+        check_vma=False,
+    )(x, params["experts"], params["router"])
+    return y + shared_y, aux

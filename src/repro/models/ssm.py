@@ -1,0 +1,266 @@
+"""Mamba-2 blocks (state-space duality / SSD, arXiv:2405.21060).
+
+Recurrence (per head h, head channels P, state channels S):
+
+    H_t = exp(A * dt_t) * H_{t-1} + dt_t * B_t (x) x_t          H: (P, S)
+    y_t = C_t . H_t + D * x_t
+
+Training/prefill uses the chunked SSD form: an intra-chunk quadratic
+(attention-like) term plus an inter-chunk state recurrence over L/Q chunks —
+the TPU-friendly blocking of the scan (see kernels/ssd for the Pallas tiling;
+this module is the reference/pjit path, numerically identical).
+
+Weights are stored as separate projections (z, x, B, C, dt) rather than one
+fused in_proj so each output dim TP-shards cleanly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array      # (B, d_conv-1, conv_channels) — last conv inputs
+    state: jax.Array     # (B, H, P, S) — SSD recurrent state
+    pos: jax.Array       # (B,) int32 — per-sequence (ragged decode)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(
+        jax.random.uniform(ks[0], (n_heads,)) * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+        + jnp.log(s.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))       # inverse softplus
+    return {
+        "wz": common.dense_init(ks[1], d, d_inner, dtype),
+        "wx": common.dense_init(ks[2], d, d_inner, dtype),
+        "wB": common.dense_init(ks[3], d, s.n_groups * s.d_state, dtype),
+        "wC": common.dense_init(ks[4], d, s.n_groups * s.d_state, dtype),
+        "wdt": common.dense_init(ks[5], d, n_heads, dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[6], (s.d_conv, 1, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm": common.rmsnorm_init(d_inner, dtype),
+        "wo": common.dense_init(ks[7], d_inner, d, dtype),
+    }
+
+
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array, left_ctx: jax.Array | None = None):
+    """Causal depthwise conv.  x: (B, L, C); w: (width, 1, C).
+
+    left_ctx: (B, width-1, C) previous inputs (decode/chunked prefill), else zeros.
+    Returns (y, new_left_ctx)."""
+    width = w.shape[0]
+    if left_ctx is None:
+        left_ctx = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([left_ctx, x], axis=1)
+    y = jax.lax.conv_general_dilated(
+        xp, w.astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[2],
+    ) + b.astype(x.dtype)
+    new_ctx = xp[:, -(width - 1):, :] if width > 1 else left_ctx
+    return y, new_ctx
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P)   head inputs
+    dt: (B, L, H)      positive step sizes (post-softplus)
+    a_log: (H,)        A = -exp(a_log)
+    b, c: (B, L, G, S) input/output projections (G groups broadcast over heads)
+    Returns (y (B,L,H,P), final_state (B,H,P,S)).
+    """
+    bsz, L, H, Pd = x.shape
+    G = b.shape[2]
+    S = b.shape[3]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        # dt=0 padding is inert: decay exp(0)=1 keeps the state, update dt*B*x
+        # contributes nothing; padded outputs are sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L_pad = L + pad
+    nc = L_pad // Q
+    rep = H // G
+
+    a = -jnp.exp(a_log)                                    # (H,)
+    dta = dt.astype(jnp.float32) * a                       # (B, L, H) log decay
+    x_ = x.reshape(bsz, nc, Q, H, Pd)
+    dt_ = dt.reshape(bsz, nc, Q, H).astype(jnp.float32)
+    dta_ = dta.reshape(bsz, nc, Q, H)
+    b_ = b.reshape(bsz, nc, Q, G, S)
+    c_ = c.reshape(bsz, nc, Q, G, S)
+    # broadcast groups to heads
+    bh = jnp.repeat(b_, rep, axis=3)                       # (B,nc,Q,H,S)
+    ch = jnp.repeat(c_, rep, axis=3)
+
+    cum = jnp.cumsum(dta_, axis=2)                         # (B,nc,Q,H) L_i
+    total = cum[:, :, -1]                                  # (B,nc,H)
+
+    # ---- intra-chunk (quadratic in Q) ----
+    # M[i,j] = exp(L_i - L_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H) L_i - L_j
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    m = jnp.where(causal, jnp.exp(diff), 0.0)
+    g = jnp.einsum("bnihs,bnjhs->bnijh", ch.astype(jnp.float32), bh.astype(jnp.float32))
+    w = g * m * dt_[:, :, None, :, :]                      # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", w, x_.astype(jnp.float32))
+
+    # ---- per-chunk end state ----
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)     # (B,nc,Q,H)
+    sc = jnp.einsum(
+        "bnqhs,bnqh,bnqhp->bnhps",
+        bh.astype(jnp.float32), decay_to_end * dt_, x_.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence over nc ----
+    def step(carry, inp):
+        s_chunk, tot = inp                                 # (B,H,P,S), (B,H)
+        prev = carry
+        new = prev * jnp.exp(tot)[:, :, None, None] + s_chunk
+        return new, prev
+
+    init_state = jnp.zeros((bsz, H, Pd, S), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step,
+        init_state,
+        (sc.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,S)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(cum)                        # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bnqhs,bnhps,bnqh->bnqhp",
+        ch.astype(jnp.float32), prev_states, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(bsz, L_pad, H, Pd)[:, :L]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, a_log, b, c):
+    """Single-token recurrence.  x: (B,H,P); dt: (B,H); b,c: (B,G,S);
+    state: (B,H,P,S).  Returns (y (B,H,P), new_state)."""
+    H = x.shape[1]
+    G = b.shape[1]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=1).astype(jnp.float32)    # (B,H,S)
+    ch = jnp.repeat(c, rep, axis=1).astype(jnp.float32)
+    a = -jnp.exp(a_log)
+    dta = dt.astype(jnp.float32) * a                       # (B,H)
+    decay = jnp.exp(dta)[:, :, None, None]
+    upd = jnp.einsum("bhs,bh,bhp->bhps", bh, dt.astype(jnp.float32), x.astype(jnp.float32))
+    new_state = state * decay + upd
+    y = jnp.einsum("bhs,bhps->bhp", ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+def _project(params, u, cfg: ModelConfig, key):
+    td = cfg.tdvmm
+    z = common.dense(params["wz"], u, td, key)
+    xc = common.dense(params["wx"], u, td, key)
+    bc = common.dense(params["wB"], u, td, key)
+    cc = common.dense(params["wC"], u, td, key)
+    dt = common.dense(params["wdt"], u, td, key)
+    return z, xc, bc, cc, dt
+
+
+def apply_train(params, u: jax.Array, cfg: ModelConfig, key=None) -> jax.Array:
+    """Full-sequence Mamba-2 block.  u: (B, L, d)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    bsz, L, _ = u.shape
+    z, xc, bc, cc, dt = _project(params, u, cfg, key)
+    xbc = jnp.concatenate([xc, bc, cc], axis=-1)
+    xbc, _ = _conv1d(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xc, bc, cc = jnp.split(xbc, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xc.reshape(bsz, L, n_heads, s.head_dim)
+    bg = bc.reshape(bsz, L, s.n_groups, s.d_state)
+    cg = cc.reshape(bsz, L, s.n_groups, s.d_state)
+    y, _ = ssd_chunked(xh, dt, params["A_log"], bg, cg, s.chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, L, d_inner)
+    y = common.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return common.dense(params["wo"], y, cfg.tdvmm, key)
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def apply_prefill(params, u: jax.Array, cfg: ModelConfig, cache: SSMCache,
+                  key=None) -> tuple[jax.Array, SSMCache]:
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    bsz, L, _ = u.shape
+    z, xc, bc, cc, dt = _project(params, u, cfg, key)
+    xbc = jnp.concatenate([xc, bc, cc], axis=-1)
+    xbc, conv_ctx = _conv1d(xbc, params["conv_w"], params["conv_b"], cache.conv)
+    xbc = jax.nn.silu(xbc)
+    xc, bc, cc = jnp.split(xbc, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xc.reshape(bsz, L, n_heads, s.head_dim)
+    bg = bc.reshape(bsz, L, s.n_groups, s.d_state)
+    cg = cc.reshape(bsz, L, s.n_groups, s.d_state)
+    y, state = ssd_chunked(xh, dt, params["A_log"], bg, cg, s.chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, L, d_inner)
+    y = common.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = common.dense(params["wo"], y, cfg.tdvmm, key)
+    return out, SSMCache(conv_ctx, state, jnp.full((bsz,), L, jnp.int32))
+
+
+def apply_decode(params, u: jax.Array, cfg: ModelConfig, cache: SSMCache,
+                 key=None) -> tuple[jax.Array, SSMCache]:
+    """One-token step.  u: (B, 1, d)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = _dims(cfg)
+    bsz = u.shape[0]
+    z, xc, bc, cc, dt = _project(params, u, cfg, key)
+    xbc = jnp.concatenate([xc, bc, cc], axis=-1)           # (B, 1, conv_ch)
+    xbc, conv_ctx = _conv1d(xbc, params["conv_w"], params["conv_b"], cache.conv)
+    xbc = jax.nn.silu(xbc)[:, 0]
+    xc1, bc1, cc1 = jnp.split(xbc, [d_inner, d_inner + s.n_groups * s.d_state], axis=-1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    xh = xc1.reshape(bsz, n_heads, s.head_dim)
+    bg = bc1.reshape(bsz, s.n_groups, s.d_state)
+    cg = cc1.reshape(bsz, s.n_groups, s.d_state)
+    y, state = ssd_decode_step(cache.state, xh, dt1, params["A_log"], bg, cg)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner)
+    y = common.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = common.dense(params["wo"], y, cfg.tdvmm, key)
+    return out, SSMCache(conv_ctx, state, cache.pos + 1)

@@ -1,0 +1,153 @@
+"""Optimizers (pure-pytree, no optax dependency): AdamW and Adafactor.
+
+Adafactor (factored second moments + optional bf16 first moment) exists for
+the 1T-param kimi-k2 config: fp32 Adam moments for 1.03T params would need
+8.2 TB (> 16 GB/chip on 512 chips once params+grads are added); factored
+moments cut optimizer state to ~1 number per row+col plus a bf16 momentum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gnorm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+def _adamw_init(params, cfg: OptimizerConfig):
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def _adamw_update(grads, inner, params, cfg: OptimizerConfig, step, lr):
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32) + 1.0
+    corr = jnp.sqrt(1 - b2 ** t) / (1 - b1 ** t)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        v_new = b2 * v32 + (1 - b2) * g * g
+        u = corr * m_new / (jnp.sqrt(v_new) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, inner["m"], inner["v"], params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# --------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored v for >=2D params
+# --------------------------------------------------------------------------
+def _adafactor_init(params, cfg: OptimizerConfig):
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def per_param(p):
+        st = {"m": jnp.zeros(p.shape, mdt)}
+        if p.ndim >= 2:
+            st["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)
+            st["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            st["v"] = jnp.zeros(p.shape, jnp.float32)
+        return st
+
+    return jax.tree.map(per_param, params,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+
+
+def _adafactor_update(grads, inner, params, cfg: OptimizerConfig, step, lr):
+    b2 = cfg.b2
+    t = step.astype(jnp.float32) + 1.0
+    decay = 1.0 - t ** -0.8          # time-dependent decay (original paper)
+
+    def upd(g, st, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = decay * st["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * st["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            u = g / jnp.sqrt(vhat + 1e-30)
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            v = decay * st["v"] + (1 - decay) * g2
+            u = g / jnp.sqrt(v + 1e-30)
+            new_v = {"v": v}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        m = cfg.b1 * st["m"].astype(jnp.float32) + (1 - cfg.b1) * u
+        u = m
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return p_new, {"m": m.astype(st["m"].dtype), **new_v}
+
+    is_state = lambda x: isinstance(x, dict) and "m" in x
+    out = jax.tree.map(upd, grads, inner, params,
+                       is_leaf=lambda x: isinstance(x, jax.Array))
+    # out leaves are (p_new, state) tuples at param positions
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_s = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_s
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    cfg: OptimizerConfig
+
+    def init(self, params) -> OptState:
+        init = _adafactor_init if self.cfg.name == "adafactor" else _adamw_init
+        return OptState(step=jnp.zeros((), jnp.int32), inner=init(params, self.cfg))
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        grads, gnorm = clip_by_global_norm(grads, self.cfg.grad_clip)
+        lr = lr_schedule(self.cfg, state.step)
+        fn = _adafactor_update if self.cfg.name == "adafactor" else _adamw_update
+        new_params, new_inner = fn(grads, state.inner, params, self.cfg, state.step, lr)
+        return new_params, OptState(state.step + 1, new_inner), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    return Optimizer(cfg)

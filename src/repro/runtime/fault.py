@@ -1,0 +1,100 @@
+"""Fault-tolerance runtime: preemption handling, step retry, straggler watch.
+
+Designed for the 1000+-node regime where *something is always failing*:
+
+  * PreemptionGuard — SIGTERM/SIGINT handler: sets a flag the train loop polls
+    so it checkpoints and exits cleanly inside the eviction grace window.
+  * retry_step      — bounded retry with backoff for transient executor
+    failures (on real fleets: ICI timeouts, preempted remote workers).  A
+    persistent failure re-raises so the scheduler can reschedule the job;
+    restart then auto-resumes from the latest valid checkpoint.
+  * StragglerMonitor — per-step wall-time EWMA + threshold: logs and counts
+    outlier steps (on multi-host fleets this feeds the decision to evict a
+    slow host and re-shard — here it is the single-process analogue).
+  * heartbeat file  — liveness marker an external babysitter can watch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+
+class PreemptionGuard:
+    def __init__(self):
+        self.requested = False
+        self._installed = False
+
+    def install(self):
+        if self._installed:
+            return self
+        self._prev = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._prev[sig] = signal.signal(sig, self._handler)
+            except ValueError:  # non-main thread (tests)
+                pass
+        self._installed = True
+        return self
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def uninstall(self):
+        for sig, prev in getattr(self, "_prev", {}).items():
+            signal.signal(sig, prev)
+        self._installed = False
+
+
+def retry_step(fn: Callable, *args, retries: int = 2, backoff_s: float = 1.0,
+               on_retry: Optional[Callable[[int, Exception], None]] = None):
+    """Run fn(*args); retry transient failures with exponential backoff."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args)
+        except RuntimeError as e:   # JaxRuntimeError subclasses RuntimeError
+            attempt += 1
+            if attempt > retries:
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+            time.sleep(backoff_s * (2 ** (attempt - 1)))
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 2.0          # x median
+    ewma_alpha: float = 0.1
+    ewma: float = 0.0
+    n: int = 0
+    stragglers: int = 0
+    log: list = dataclasses.field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> bool:
+        """Returns True if this step was a straggler."""
+        is_straggler = self.n > 5 and dt > self.threshold * self.ewma
+        self.ewma = dt if self.n == 0 else \
+            (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * dt
+        self.n += 1
+        if is_straggler:
+            self.stragglers += 1
+            self.log.append({"step": step, "dt": dt, "ewma": self.ewma})
+        return is_straggler
+
+
+class Heartbeat:
+    def __init__(self, path: str | Path, every_s: float = 30.0):
+        self.path = Path(path)
+        self.every_s = every_s
+        self._last = 0.0
+
+    def beat(self, step: int):
+        now = time.time()
+        if now - self._last >= self.every_s:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self.path.write_text(json.dumps({"step": step, "t": now}))
+            self._last = now

@@ -1,0 +1,130 @@
+"""Per-kernel validation: shape/dtype sweeps + allclose vs pure-jnp oracles.
+
+Kernels run in interpret mode (Python execution of the kernel body) on CPU;
+on TPU the same pallas_call compiles to Mosaic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.crossing.crossing import crossing_kernel
+from repro.kernels.crossing.ref import crossing_ref
+from repro.kernels.ssd.ref import ssd_naive
+from repro.kernels.ssd.ssd import ssd_kernel
+from repro.kernels.tdvmm.ref import tdvmm_matmul_ref
+from repro.kernels.tdvmm.tdvmm import tdvmm_matmul_kernel
+from repro.models.ssm import ssd_chunked
+
+
+# --------------------------------------------------------------------------
+# tdvmm
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (128, 256, 128, 128, 128, 128),
+    (256, 1024, 256, 128, 512, 128),
+    (128, 128, 384, 64, 128, 128),
+    (512, 512, 128, 256, 256, 64),
+])
+def test_tdvmm_shapes(m, k, n, bm, bk, bn):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m + n))
+    xq = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
+    wq = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+    out = tdvmm_matmul_kernel(xq, wq, bm=bm, bk=bk, bn=bn, interpret=True)
+    ref = tdvmm_matmul_ref(xq, wq, jnp.ones((m,)), jnp.ones((n,)), 1.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_tdvmm_bit_widths(bits):
+    lv = (1 << bits) - 1
+    kx, kw = jax.random.split(jax.random.PRNGKey(bits))
+    xq = jnp.round(jax.random.uniform(kx, (128, 256), minval=-lv, maxval=lv))
+    wq = jnp.round(jax.random.uniform(kw, (256, 128), minval=-lv, maxval=lv))
+    out = tdvmm_matmul_kernel(xq, wq, interpret=True)
+    ref = jnp.dot(xq, wq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
+    # integer-exactness: charge sums are exact in f32 up to 2^24
+    assert float(jnp.max(jnp.abs(out - jnp.round(out)))) == 0.0
+
+
+# --------------------------------------------------------------------------
+# crossing
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("b,k,n", [(1, 32, 128), (4, 64, 128), (2, 128, 256)])
+def test_crossing_shapes(b, k, n):
+    kt, kc = jax.random.split(jax.random.PRNGKey(b * k + n))
+    t_on = jax.random.uniform(kt, (b, k), maxval=1.0)
+    cur = jax.random.uniform(kc, (k, n), minval=0.01, maxval=1.0)
+    charge = float(0.3 * k)
+    got = crossing_kernel(t_on, cur, charge, t_hi=2.0, iters=30, interpret=True)
+    ref = crossing_ref(t_on, cur, charge)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.floats(0.05, 0.9))
+def test_crossing_bisection_converges(seed, frac):
+    """Property: bisection resolves the exact (sort-based) crossing to the
+    bisection tolerance for random currents/charges."""
+    k, n = 32, 128
+    kt, kc = jax.random.split(jax.random.PRNGKey(seed))
+    t_on = jax.random.uniform(kt, (2, k), maxval=1.0)
+    cur = jax.random.uniform(kc, (k, n), minval=0.05, maxval=1.0)
+    charge = float(frac * 0.5 * k)
+    got = crossing_kernel(t_on, cur, charge, t_hi=2.0, iters=32, interpret=True)
+    ref = crossing_ref(t_on, cur, charge)
+    assert float(jnp.max(jnp.abs(got - ref))) < 2.0 / (1 << 30) + 1e-6
+
+
+# --------------------------------------------------------------------------
+# ssd
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("b,l,h,p,g,s,chunk", [
+    (2, 64, 4, 16, 2, 8, 16),
+    (1, 128, 2, 32, 1, 16, 32),
+    (2, 32, 8, 8, 8, 8, 8),     # G == H (no grouping)
+    (1, 64, 4, 64, 1, 64, 64),  # full-width tiles
+])
+def test_ssd_shapes(b, l, h, p, g, s, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(l + h), 5)
+    x = jax.random.normal(keys[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h))) * 0.1
+    a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+    bb = jax.random.normal(keys[2], (b, l, g, s)) * 0.3
+    cc = jax.random.normal(keys[3], (b, l, g, s)) * 0.3
+    yk = ssd_kernel(x, dt, a_log, bb, cc, chunk=chunk, interpret=True)
+    yn, _ = ssd_naive(x, dt, a_log, bb, cc)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yn),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_matches_chunked_jnp():
+    """Kernel vs the pjit-path chunked implementation (must be identical
+    algebra, so tolerance is tight)."""
+    b, l, h, p, g, s = 2, 128, 4, 16, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(keys[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h))) * 0.1
+    a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+    bb = jax.random.normal(keys[2], (b, l, g, s)) * 0.3
+    cc = jax.random.normal(keys[3], (b, l, g, s)) * 0.3
+    yk = ssd_kernel(x, dt, a_log, bb, cc, chunk=32, interpret=True)
+    yc, _ = ssd_chunked(x, dt, a_log, bb, cc, 32)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yc),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_state_carry_across_chunks():
+    """Chunk boundaries must be invisible: chunk=L vs chunk=L/4 agree."""
+    b, l, h, p, g, s = 1, 64, 2, 16, 1, 8
+    keys = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(keys[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h))) * 0.1
+    a_log = jnp.zeros((h,))
+    bb = jax.random.normal(keys[2], (b, l, g, s)) * 0.3
+    cc = jax.random.normal(keys[3], (b, l, g, s)) * 0.3
+    y1 = ssd_kernel(x, dt, a_log, bb, cc, chunk=64, interpret=True)
+    y2 = ssd_kernel(x, dt, a_log, bb, cc, chunk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,92 @@
+"""Tests for the DIBL precision model (Fig. 4) and the energy/area/latency
+model (Fig. 5, section 4.2) — every anchor number the paper reports."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, nonideal
+from repro.core.constants import DELTA_VD, I_MAX_OPT, V_SG_OPT
+from repro.core.layers import TDVMMLayerConfig, td_matmul
+
+
+# --- Fig. 4: DIBL error surface -------------------------------------------
+def test_vsg_optimum_at_0p8():
+    vsgs = np.linspace(0.5, 1.1, 25)
+    errs = [float(nonideal.relative_error(I_MAX_OPT, v, DELTA_VD)) for v in vsgs]
+    assert vsgs[int(np.argmin(errs))] == pytest.approx(V_SG_OPT, abs=0.05)
+
+
+def test_error_below_2pct_at_optimum():
+    e = float(nonideal.relative_error(I_MAX_OPT, V_SG_OPT, DELTA_VD))
+    assert e < 0.02
+
+
+def test_error_decreasing_with_current_then_bounded():
+    """Fig. 4a/b: error falls with I_max up to ~1-2 uA, then rises at the
+    subthreshold conduction edge."""
+    lo = float(nonideal.relative_error(1e-8, V_SG_OPT, DELTA_VD))
+    mid = float(nonideal.relative_error(1e-6, V_SG_OPT, DELTA_VD))
+    hi = float(nonideal.relative_error(5e-6, V_SG_OPT, DELTA_VD))
+    assert lo > mid and hi > mid
+
+
+def test_effective_bits_at_least_5():
+    e = nonideal.relative_error(I_MAX_OPT, V_SG_OPT, DELTA_VD)
+    assert int(nonideal.effective_bits(e)) >= 5
+
+
+def test_end_to_end_6bit_precision():
+    """~6-bit TD-VMM layer error should sit near the paper's 2% band."""
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (8, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64)) * 0.1
+    y6 = td_matmul(x, w, TDVMMLayerConfig(enabled=True, bits=6, weight_bits=6))
+    rel = float(jnp.max(jnp.abs(y6 - x @ w)) / jnp.max(jnp.abs(x @ w)))
+    assert rel < 0.05, rel
+
+
+# --- Fig. 5 / section 4.2: energy, latency, area ----------------------------
+def test_energy_anchors():
+    for key, (model, paper) in energy.validate_against_paper().items():
+        assert model == pytest.approx(paper, rel=0.12), (key, model, paper)
+
+
+def test_energy_efficiency_increases_with_n():
+    t10 = energy.cost(10).tops_per_j
+    t100 = energy.cost(100).tops_per_j
+    t1000 = energy.cost(1000).tops_per_j
+    assert t10 < t100 < t1000
+    assert t1000 > 145.0            # "potentially reaching 150 TOps/J"
+
+
+def test_io_overhead_amortizes():
+    """Fig. 5: I/O conversion share drops and becomes negligible for N>200."""
+    frac10 = energy.cost(10).e_io_j / energy.cost(10).e_total_j
+    frac500 = energy.cost(500).e_io_j / energy.cost(500).e_total_j
+    assert frac500 < frac10 and frac500 < 0.03
+
+
+def test_latency_scales_with_precision():
+    """2T = 2*T0*2^p (section 4.2)."""
+    assert energy.cost(100, bits=6).latency_s == pytest.approx(64e-9)
+    assert energy.cost(100, bits=8).latency_s == pytest.approx(256e-9)
+
+
+def test_area_split_large_n():
+    c = energy.cost(1000)
+    frac_cap = c.area_cap_um2 / (c.area_cap_um2 + c.area_mem_um2)
+    assert frac_cap == pytest.approx(0.75, abs=0.02)
+
+
+def test_peripheral_dominates_small_n():
+    """Fig. 3: at N=10 the neuron blocks dwarf the supercell array."""
+    c = energy.cost(10)
+    assert c.area_neuron_um2 > c.area_mem_um2
+
+
+def test_llm_mapping_reports():
+    shapes = [(4096, 4096)] * 4 + [(4096, 14336)] * 3
+    out = energy.llm_mapping_cost(shapes, tile_n=1024, bits=6)
+    assert out["tops_per_j"] > 100.0      # large-N regime of Fig. 5
+    assert out["tiles"] > 0
