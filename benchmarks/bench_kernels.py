@@ -3,18 +3,61 @@ timing only; Mosaic compilation happens on real TPUs) vs the jnp reference
 path, plus the arithmetic-intensity accounting that motivates each kernel."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
+from repro.core.layers import TDVMMLayerConfig, td_matmul
 from repro.kernels.crossing.ref import crossing_ref
 from repro.kernels.ssd.ref import ssd_naive
+from repro.kernels.tdvmm.ops import tdvmm_matmul
 from repro.kernels.tdvmm.ref import tdvmm_matmul_ref
 from repro.models.ssm import ssd_chunked
 
 
+def bench_tdvmm_backends():
+    """jnp vs Pallas parity + throughput at model shapes.
+
+    On CPU the Pallas path runs in interpret mode (Python-level grid walk):
+    the numbers quantify interpret overhead, not TPU performance — the point
+    of the row pair is the parity column (max |jnp - pallas|, must be 0) and
+    the jnp-path GFLOP/s at shapes a model actually emits.
+    """
+    for (m, k, n) in [(512, 1024, 4096), (256, 896, 896), (33, 300, 130)]:
+        kx, kw = jax.random.split(jax.random.PRNGKey(m + n))
+        xc = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
+        wc = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+        xs = jnp.ones((m,))
+        ws = jnp.ones((n,))
+        flops = 2 * m * k * n
+        outs = {}
+        for backend in ("jnp", "pallas"):
+            fn = jax.jit(functools.partial(
+                tdvmm_matmul, gain=1e-4, out_bits=6, backend=backend))
+            outs[backend] = fn(xc, wc, xs, ws)
+            us = time_call(fn, xc, wc, xs, ws, iters=3)
+            emit(f"tdvmm_{backend}_{m}x{k}x{n}", us,
+                 f"GFLOP/s={flops/us*1e-3:.1f}")
+        parity = float(jnp.max(jnp.abs(outs["jnp"] - outs["pallas"])))
+        emit(f"tdvmm_parity_{m}x{k}x{n}", 0.0, f"max_abs_diff={parity}")
+
+    # full layer path (encode -> integrate -> readout -> rescale)
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 1024))
+    w = jax.random.normal(jax.random.PRNGKey(2), (1024, 4096)) * 0.05
+    for backend in ("jnp", "pallas"):
+        cfg = TDVMMLayerConfig(enabled=True, backend=backend)
+        fn = jax.jit(lambda x, w, cfg=cfg: td_matmul(x, w, cfg))
+        us = time_call(fn, x, w, iters=3)
+        emit(f"td_matmul_layer_{backend}_256x1024x4096", us,
+             f"GFLOP/s={2*256*1024*4096/us*1e-3:.1f}")
+
+
 def run():
     k = jax.random.PRNGKey(0)
+
+    bench_tdvmm_backends()
 
     # tdvmm: jnp reference path (the kernel's oracle); AI accounting
     m, kk, n = 512, 2048, 512

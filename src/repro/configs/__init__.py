@@ -7,9 +7,11 @@ from repro.configs.base import (
     ShapeConfig,
     SHAPES,
     SSMConfig,
+    TDVMMLayerConfig,
 )
 
 __all__ = [
     "ARCHS", "get_config", "smoke", "ModelConfig", "MoEConfig",
     "OptimizerConfig", "RunConfig", "ShapeConfig", "SHAPES", "SSMConfig",
+    "TDVMMLayerConfig",
 ]

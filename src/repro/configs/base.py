@@ -4,11 +4,49 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.layers import TDVMMLayerConfig
-
-
 def pad_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def _default_spec():
+    # Deferred: configs must stay importable without pulling in repro.core
+    # (core.layers imports this module for TDVMMLayerConfig).
+    from repro.core.constants import TDVMMSpec
+    return TDVMMSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class TDVMMLayerConfig:
+    """Per-linear TD-VMM settings (consumed by core.layers.td_matmul).
+
+    The code-and-scale pipeline (core/quant.py) is encode -> program ->
+    integrate -> readout; ``backend`` picks who runs the integrate stage:
+
+      "pallas"  kernels/tdvmm Pallas kernel — Mosaic on TPU, interpret
+                (Python-level, slow but exact) elsewhere
+      "jnp"     jnp.dot on the same integer codes
+      "auto"    pallas on TPU, jnp elsewhere (default)
+
+    With integer codes (noise off) and |acc| < 2^24 (e.g. 6-bit codes up to
+    K = 4096) both backends accumulate exact integer arithmetic in f32, so
+    they are bit-for-bit identical (verified by tests/test_quant.py).  Noise
+    mode perturbs codes off the integer grid, where f32 summation order
+    matters — backends then agree only to float tolerance.
+    """
+    enabled: bool = False
+    bits: int = 6                 # time-code (input/output) precision p
+    weight_bits: int = 6          # FG programming precision
+    backend: str = "auto"         # integrate stage: auto | jnp | pallas
+    io_quantize: bool = True      # digital tile boundary (False = time-chained)
+    per_channel: bool = True      # per-output-column weight scale
+    output_calibration: bool = True  # scale weights so outputs fill the [T,2T]
+    # window (section 3.1: "slope ... controlled by appropriate scaling of VMM
+    # weights"); modeled as a stop-grad per-tensor output gain.
+    noise: bool = False           # stochastic DIBL + tuning noise (train-time)
+    spec: "object" = dataclasses.field(default_factory=_default_spec)  # TDVMMSpec
+
+    def replace(self, **kw) -> "TDVMMLayerConfig":
+        return dataclasses.replace(self, **kw)
 
 
 @dataclasses.dataclass(frozen=True)

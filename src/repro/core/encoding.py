@@ -47,6 +47,16 @@ def fake_quant(x: jax.Array, bits: int) -> jax.Array:
     return dequantize_code(quantize_code(x, bits), bits)
 
 
+def quantize_code_signed(x: jax.Array, bits: int) -> jax.Array:
+    """Signed value in [-1, 1] -> signed integer code in {-L, ..., L}.
+
+    The sign carries the differential (+,-) wire pair of the four-quadrant
+    multiplier (section 2); |code| is the unsigned p-bit time code.  Equal to
+    round(clip(x, -1, 1) * L) since round-half-even is symmetric.
+    """
+    return jnp.sign(x).astype(jnp.int32) * quantize_code(jnp.abs(x), bits)
+
+
 def value_to_onset(x: jax.Array, t_window: float) -> jax.Array:
     """x in [0,1] -> rising-edge time t_on in [0, T]  (Eq. 2: T - t_i ~ x_i)."""
     return t_window * (1.0 - jnp.clip(x, 0.0, 1.0))

@@ -1,65 +1,69 @@
 """TDVMMLinear: the paper's multiplier as a drop-in linear layer for models.
 
-The fast path is the *closed form* of the four-quadrant TD-VMM (exact by
-Eq. 1-7, property-tested against the event-driven simulator in tdcore.py):
+td_matmul is the *closed form* of the four-quadrant TD-VMM (exact by Eq. 1-7,
+property-tested against the event-driven simulator in tdcore.py), structured
+as the explicit code-and-scale pipeline of core/quant.py:
 
-    tile input   x -> x / s_x,   s_x = max|x|          (input range normalize)
-    time-encode  x+ , x-  each fake-quantized to p bits (counter DAC, Eq. 2)
-    program      W -> W+ - W-, each quantized to weight_bits levels (FG tuning)
-    integrate    z = xq @ wq                            (charge accumulation)
-    latch        y_norm = z / (2 N w_max)               (crossing time, Eq. 1)
-    read out     y_norm fake-quantized to p bits when the tile boundary is
-                 digital (shared-counter ADC); skipped when chained in time
-    rescale      y = y_norm * 2 N w_max * s_x
+    plan         flatten (..., N_in) to 2-D, resolve the integrate backend
+    encode       x -> p-bit signed time codes + per-row scale   (Eq. 2, DAC)
+    program      W -> signed current codes + per-channel scale  (FG tuning)
+    integrate    codes matmul — kernels/tdvmm (Pallas on TPU, interpret
+                 elsewhere) or jnp.dot; identical integer arithmetic
+    readout      latch normalization + p-bit ADC over the calibrated output
+                 window when the tile boundary is digital      (Eq. 3, §4.2)
+    rescale      digital per-row x per-channel rescale to model units
 
-Gradients: straight-through estimators on every quantizer (standard QAT), so
-the layer is trainable inside any JAX model.  Optional stochastic DIBL /
-tuning noise (core/nonideal.py) models deploy-time precision during training.
+Gradients: straight-through estimators on every quantizer (standard QAT) and
+a plain-matmul custom VJP on the integrate stage, so the layer is trainable
+inside any JAX model on either backend.  Optional stochastic DIBL / tuning
+noise (core/nonideal.py) models deploy-time precision during training.
 
-On TPU the integer core is the Pallas kernel in kernels/tdvmm (ops.py); the
-jnp path below is numerically identical and is what the distributed dry-run
-lowers (same FLOPs/bytes).
+Arbitrary leading batch dims and non-block-multiple shapes are supported:
+codes are flattened to (M, K) and zero-padded to the kernel's block multiples
+(a zero time code contributes zero charge, so padding is exact).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
+import warnings
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import encoding as enc
-from repro.core import nonideal
-from repro.core.constants import TDVMMSpec
+from repro.configs.base import TDVMMLayerConfig  # re-export (historic home)
+from repro.core import quant
+
+__all__ = ["TDVMMLayerConfig", "td_matmul", "TDVMMLinear", "init_linear"]
 
 
-@dataclasses.dataclass(frozen=True)
-class TDVMMLayerConfig:
-    enabled: bool = False
-    bits: int = 6                 # time-code (input/output) precision p
-    weight_bits: int = 6          # FG programming precision
-    io_quantize: bool = True      # digital tile boundary (False = time-chained)
-    per_channel: bool = True      # per-output-column weight scale
-    output_calibration: bool = True  # scale weights so outputs fill the [T,2T]
-    # window (section 3.1: "slope ... controlled by appropriate scaling of VMM
-    # weights"); modeled as a stop-grad per-tensor output gain.
-    noise: bool = False           # stochastic DIBL + tuning noise (train-time)
-    spec: TDVMMSpec = dataclasses.field(default_factory=TDVMMSpec)
-
-    def replace(self, **kw) -> "TDVMMLayerConfig":
-        return dataclasses.replace(self, **kw)
+class MatmulPlan(NamedTuple):
+    """Static shape/backend bookkeeping for one td_matmul call."""
+    batch_shape: tuple[int, ...]     # leading dims of x, flattened into M
+    m: int
+    k: int                           # N_in: sources per output column
+    n: int
+    backend: str                     # resolved: "jnp" | "pallas"
 
 
-def _ste(x_quant: jax.Array, x: jax.Array) -> jax.Array:
-    """Straight-through: forward x_quant, backward identity."""
-    return x + jax.lax.stop_gradient(x_quant - x)
-
-
-def _fake_quant_signed(x: jax.Array, bits: int) -> jax.Array:
-    """Differential p-bit quantization: each wire of the (+,-) pair carries a
-    p-bit time code; values assumed pre-normalized to [-1, 1]."""
-    q = jnp.sign(x) * enc.fake_quant(jnp.abs(x), bits)
-    return _ste(q, x)
+def plan_matmul(x_shape, w_shape, cfg: TDVMMLayerConfig) -> MatmulPlan:
+    k, n = w_shape
+    assert x_shape[-1] == k, (x_shape, w_shape)
+    batch_shape = tuple(x_shape[:-1])
+    m = 1
+    for d in batch_shape:
+        m *= d
+    # f32 integer-exactness envelope: the backend-parity guarantee (and exact
+    # charge accumulation) needs worst-case |acc| < 2^24.  6-bit codes are
+    # safe to K = 4096; 8-bit only to K ~ 258.
+    worst = ((1 << cfg.bits) - 1) * ((1 << cfg.weight_bits) - 1) * k
+    if worst >= (1 << 24):
+        warnings.warn(
+            f"TD-VMM accumulator may exceed f32 integer range: "
+            f"(2^{cfg.bits}-1)*(2^{cfg.weight_bits}-1)*K={worst} >= 2^24; "
+            "charge sums can round and jnp/pallas backends may diverge",
+            stacklevel=2)
+    from repro.kernels.tdvmm import ops
+    return MatmulPlan(batch_shape, m, k, n, ops.resolve_backend(cfg.backend))
 
 
 def td_matmul(
@@ -76,45 +80,36 @@ def td_matmul(
             return jnp.dot(x, w, preferred_element_type=pet)
         return x @ w
 
-    n_in = w.shape[0]
-    # ---- input range normalization (per example row; stop-grad scale) ----
-    s_x = jax.lax.stop_gradient(
-        jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-6)
-    )
-    xq = _fake_quant_signed(x / s_x, cfg.bits)
+    # ---- plan: shapes + backend ----
+    plan = plan_matmul(x.shape, w.shape, cfg)
 
-    # ---- weight programming ----
-    axes = 0 if cfg.per_channel else None
-    w_max = jax.lax.stop_gradient(
-        jnp.maximum(jnp.max(jnp.abs(w), axis=axes, keepdims=True), 1e-6)
-    )
-    levels = (1 << cfg.weight_bits) - 1
-    wq = jnp.round(jnp.clip(w / w_max, -1.0, 1.0) * levels) / levels
-    wq = _ste(wq, w / w_max)  # normalized quantized weights in [-1, 1]
-
+    # ---- encode inputs / program weights (core/quant.py stages) ----
+    qx = quant.encode_input(x, cfg.bits)
+    qw = quant.program_weights(w, cfg.weight_bits, cfg.per_channel)
     if cfg.noise and key is not None:
-        err = nonideal.relative_error(
-            cfg.spec.i_max, jnp.asarray(cfg.spec.v_sg), jnp.asarray(cfg.spec.delta_vd)
-        )
-        k1, k2 = jax.random.split(key)
-        u = jax.random.uniform(k1, wq.shape, minval=-1.0, maxval=1.0)
-        wq = wq * (1.0 + err * u)
-        wq = wq * jnp.exp(0.003 * jax.random.normal(k2, wq.shape))
+        qw = quant.program_noise(qw, cfg.spec, key)
 
-    # ---- charge integration + latch (normalized output in [-1, 1]) ----
-    z = (xq @ wq) / (2.0 * n_in)       # == y+ - y- of the differential pair
-    if cfg.io_quantize:
-        if cfg.output_calibration:
-            # weight-scaling calibration: amplify so the dot product spans the
-            # full output window before the p-bit readout (power is in s_y).
-            s_y = jax.lax.stop_gradient(jnp.maximum(jnp.max(jnp.abs(z)), 1e-9))
-        else:
-            s_y = 0.5  # raw differential range [-1/2, 1/2] -> [-1, 1]
-        z = _fake_quant_signed(z / s_y, cfg.bits) * s_y
-
-    # ---- digital rescale back to model units (keep activation dtype) ----
-    y = z * (2.0 * n_in) * w_max.reshape((w_max.shape[-1],)) * s_x
-    return y.astype(x.dtype)
+    # ---- integrate + readout + rescale (kernel epilogue) ----
+    # Latch gain: codes -> normalized differential output z = y+ - y- in
+    # [-1, 1]: divide out both code ranges and the 2*N_in charge headroom.
+    from repro.kernels.tdvmm import ops
+    gain = 1.0 / (float(qx.levels) * float(qw.levels) * 2.0 * plan.k)
+    # Digital rescale: per-row input range and per-channel 2*N_in*w_max.
+    w_scale = jnp.broadcast_to(
+        qw.scale.reshape(-1) * (2.0 * plan.k), (plan.n,))
+    y = ops.tdvmm_matmul(
+        qx.codes.reshape(plan.m, plan.k),
+        qw.codes,
+        qx.scale.reshape(plan.m),
+        w_scale,
+        gain=gain,
+        out_bits=cfg.bits if cfg.io_quantize else None,
+        # None -> calibrate the ADC window to the data (section 3.1); a fixed
+        # 0.5 window is the raw differential range of a normalized tile.
+        out_scale=None if cfg.output_calibration else 0.5,
+        backend=plan.backend,
+    )
+    return y.reshape(plan.batch_shape + (plan.n,)).astype(x.dtype)
 
 
 def init_linear(

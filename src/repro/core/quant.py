@@ -1,0 +1,157 @@
+"""Unified quantized-code subsystem: the one QuantizedTensor path from
+encoding to the TD-VMM kernel.
+
+The paper's multiplier is an *integer-code* machine: p-bit time codes in,
+current codes as weights, charge accumulation, p-bit readout.  Every
+quantization boundary in the repo routes through this module so that the jnp
+reference path, the Pallas kernel, and the event-driven simulator all agree on
+what the digital words are.
+
+Stage -> paper mapping (arXiv:1711.10673):
+
+    encode_input      Eq. 2 / section 4.2 — the shared-counter DAC converts a
+                      normalized activation into a p-bit rising-edge time code
+                      on the grid T0 = T / 2^p (sign = differential wire pair).
+    program_weights   sections 2, 4.1 — floating-gate tuning programs each
+                      cell's current to one of 2^p_w levels; per-output-column
+                      scaling is the "appropriate scaling of VMM weights" of
+                      section 3.1.
+    (integrate)       Eq. 1 — charge accumulation; lives in kernels/tdvmm
+                      (Pallas on TPU / interpret elsewhere) or jnp.dot.
+    readout           Eq. 3 / section 4.2 — the comparator-latch + shared
+                      counter reads the crossing time back out as a p-bit code
+                      over a calibrated output window.
+
+Codes are carried as *integer-valued float32* arrays (the MXU consumes f32;
+integer dot products are exact in f32 while |acc| < 2^24 — e.g. 6-bit codes up
+to K = 4096).  Every quantizer is wrapped in a straight-through estimator, so
+models stay trainable (standard QAT) no matter which backend integrates.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding as enc
+
+
+def ste(x_quant: jax.Array, x: jax.Array) -> jax.Array:
+    """Straight-through estimator: forward ``x_quant``, backward identity."""
+    return x + jax.lax.stop_gradient(x_quant - x)
+
+
+def signed_codes(x: jax.Array, bits: int) -> jax.Array:
+    """Value in [-1, 1] -> integer-valued signed code in [-L, L], L = 2^p - 1.
+
+    The sign folds the differential (+/-) wire pair of the four-quadrant
+    multiplier.  STE in the code domain: forward is the rounded code, backward
+    is d(code)/d(x) = L, so dequantizing (code * scale / L) has identity
+    gradient in the value domain — exactly the seed fake-quant STE.
+    """
+    levels = float((1 << bits) - 1)
+    q = enc.quantize_code_signed(x, bits).astype(jnp.float32)
+    return ste(q, x * levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """Integer codes + the scale that maps them back to model units.
+
+    codes:  f32, integer-valued in [-levels, levels] (STE-wrapped, so codes
+            are differentiable in the QAT sense).  Programming noise makes
+            them non-integer — that models analog current perturbation and is
+            still valid kernel input.
+    scale:  f32, broadcastable against the dequantized value — per-row
+            ``(..., 1)`` for activations, per-channel ``(1, N)`` or per-tensor
+            ``(1, 1)`` for weights.  Always stop-gradient.
+    bits:   static code width p.
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    bits: int
+
+    @property
+    def levels(self) -> int:
+        return (1 << self.bits) - 1
+
+    def dequantize(self) -> jax.Array:
+        """Back to model units: codes / L * scale."""
+        return self.codes * (self.scale / float(self.levels))
+
+
+jax.tree_util.register_dataclass(
+    QuantizedTensor, data_fields=["codes", "scale"], meta_fields=["bits"])
+
+
+def encode_input(x: jax.Array, bits: int, axis: int = -1) -> QuantizedTensor:
+    """Input stage (Eq. 2): per-row range normalization + p-bit time codes.
+
+    The scale is the per-example input range max|x| along ``axis`` (the analog
+    front-end normalizes each sample into the [0, T] window); it is
+    stop-gradient, matching the seed layer.
+    """
+    xf = x.astype(jnp.float32)
+    # initial=0.0 is an identity for |x| maxes and keeps zero-size batches
+    # (e.g. a serving batch filtered to nothing) from hitting the no-identity
+    # reduction error; the 1e-6 clamp then supplies the scale.
+    s = jax.lax.stop_gradient(jnp.maximum(
+        jnp.max(jnp.abs(xf), axis=axis, keepdims=True, initial=0.0), 1e-6))
+    return QuantizedTensor(codes=signed_codes(xf / s, bits), scale=s, bits=bits)
+
+
+def program_weights(
+    w: jax.Array, bits: int, per_channel: bool = True
+) -> QuantizedTensor:
+    """Weight stage (sections 2, 4.1): FG current codes + column scaling.
+
+    ``per_channel`` scales each output column independently (axis 0 of the
+    (N_in, N_out) matrix is reduced); otherwise one scale for the whole tile.
+    """
+    wf = w.astype(jnp.float32)
+    axes = 0 if per_channel else None
+    w_max = jax.lax.stop_gradient(jnp.maximum(
+        jnp.max(jnp.abs(wf), axis=axes, keepdims=True, initial=0.0), 1e-6))
+    # No explicit clip: signed_codes' forward already clips to the code range,
+    # and the STE linear term must stay unclipped — a clip here would halve
+    # the gradient of every per-channel max-magnitude weight (the clip
+    # boundary is a min/max tie at exactly |w| == w_max).
+    codes = signed_codes(wf / w_max, bits)
+    return QuantizedTensor(codes=codes, scale=w_max, bits=bits)
+
+
+def program_noise(qw: QuantizedTensor, spec, key: jax.Array) -> QuantizedTensor:
+    """Stochastic DIBL + FG tuning noise on programmed current codes.
+
+    Multiplicative, so it is identical in the code and value domains; the
+    perturbed codes are intentionally non-integer (analog currents).
+    """
+    from repro.core import nonideal
+
+    err = nonideal.relative_error(
+        spec.i_max, jnp.asarray(spec.v_sg), jnp.asarray(spec.delta_vd))
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, qw.codes.shape, minval=-1.0, maxval=1.0)
+    codes = qw.codes * (1.0 + err * u)
+    codes = codes * jnp.exp(0.003 * jax.random.normal(k2, qw.codes.shape))
+    return QuantizedTensor(codes=codes, scale=qw.scale, bits=qw.bits)
+
+
+def readout(
+    y: jax.Array, bits: int, scale: jax.Array | float | None = None
+) -> jax.Array:
+    """Readout stage (Eq. 3 / section 4.2): p-bit ADC over the output window.
+
+    ``scale=None`` calibrates the window to max|y| (stop-gradient) — the
+    section-3.1 weight-scaling calibration that fills [T, 2T] before the
+    shared-counter ADC samples it.  Pass an explicit ``scale`` for a fixed
+    window (e.g. 0.5 for the raw differential range of a normalized tile).
+    Forward is the quantized value, backward identity (STE).
+    """
+    if scale is None:
+        scale = jax.lax.stop_gradient(
+            jnp.maximum(jnp.max(jnp.abs(y), initial=0.0), 1e-9))
+    levels = float((1 << bits) - 1)
+    return signed_codes(y / scale, bits) * (scale / levels)

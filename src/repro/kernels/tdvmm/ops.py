@@ -1,4 +1,26 @@
-"""jit'd public wrapper around the TD-VMM matmul kernel (+ scales epilogue)."""
+"""jit'd public wrapper around the TD-VMM matmul kernel (+ scales epilogue).
+
+This is the *integrate + readout* tail of the code-and-scale pipeline
+(core/quant.py): integer code matrices in, model-unit outputs out.
+
+    acc = x_codes @ w_codes          charge accumulation (Eq. 1)
+    z   = acc * gain                 latch normalization (crossing time)
+    z   = readout(z, out_bits)       p-bit shared-counter ADC (Eq. 3, §4.2)
+    y   = z * x_scale[:, None] * w_scale[None, :]   digital rescale
+
+The readout happens on the latch-normalized accumulation — the ADC samples
+the crossing *time*, before any per-row/per-channel digital rescale — so the
+epilogue carries per-row input scales and per-channel weight scales through
+without changing what the hardware quantizes.
+
+Backends: ``"pallas"`` runs the Pallas kernel (Mosaic on TPU, interpret mode
+elsewhere), ``"jnp"`` runs jnp.dot, ``"auto"`` picks pallas on TPU.  For
+integer-valued codes within the f32 exactness envelope (|acc| < 2^24) both
+integrate exact integer arithmetic, so they are bit-for-bit identical;
+non-integer codes (programming noise) agree only to float tolerance, since
+summation order differs.  Gradients flow through a shared custom VJP (plain
+matmul cotangents on the STE-wrapped codes), so the Pallas path is trainable.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,37 +28,83 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tdvmm.tdvmm import tdvmm_matmul_kernel
+from repro.core import quant
+from repro.kernels.tdvmm.tdvmm import pad_to_blocks, tdvmm_matmul_kernel
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("gain", "out_bits", "interpret"))
+def resolve_backend(backend: str) -> str:
+    """'auto' | 'jnp' | 'pallas' -> concrete integrate implementation."""
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"unknown TD-VMM backend {backend!r}")
+    return backend
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def codes_matmul(
+    x_codes: jax.Array, w_codes: jax.Array, backend: str, interpret: bool
+) -> jax.Array:
+    """(M, K) @ (K, N) integer-valued-f32 charge accumulation, padded to the
+    kernel's block multiples and sliced back.  Differentiable on any backend
+    (custom VJP = plain matmul cotangents, matching jnp.dot autodiff)."""
+    return _codes_matmul_impl(x_codes, w_codes, backend, interpret)
+
+
+def _codes_matmul_impl(x_codes, w_codes, backend, interpret):
+    if backend == "jnp":
+        return jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
+    m, n = x_codes.shape[0], w_codes.shape[1]
+    xp, wp = pad_to_blocks(x_codes, w_codes)
+    out = tdvmm_matmul_kernel(xp, wp, interpret=interpret)
+    return out[:m, :n]
+
+
+def _codes_matmul_fwd(x_codes, w_codes, backend, interpret):
+    y = _codes_matmul_impl(x_codes, w_codes, backend, interpret)
+    return y, (x_codes, w_codes)
+
+
+def _codes_matmul_bwd(backend, interpret, res, g):
+    x_codes, w_codes = res
+    gx = jnp.dot(g, w_codes.T, preferred_element_type=jnp.float32)
+    gw = jnp.dot(x_codes.T, g, preferred_element_type=jnp.float32)
+    return gx, gw
+
+
+codes_matmul.defvjp(_codes_matmul_fwd, _codes_matmul_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gain", "out_bits", "out_scale", "backend", "interpret"))
 def tdvmm_matmul(
-    x_codes: jax.Array,
-    w_codes: jax.Array,
-    x_scale: jax.Array,
-    w_scale: jax.Array,
+    x_codes: jax.Array,      # (M, K) f32, integer-valued signed time codes
+    w_codes: jax.Array,      # (K, N) f32, integer-valued signed weight codes
+    x_scale: jax.Array,      # (M,) per-row input scales
+    w_scale: jax.Array,      # (N,) per-channel weight scales
     gain: float = 1.0,
     out_bits: int | None = None,
+    out_scale: float | None = None,
+    backend: str = "auto",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Quantized four-quadrant TD-VMM: codes matmul + scale epilogue + optional
-    p-bit readout.  Uses the Pallas kernel on TPU (or interpret mode when
-    requested); falls back to jnp.dot elsewhere — numerics are identical."""
+    """Quantized four-quadrant TD-VMM: codes matmul + readout + scale epilogue.
+
+    ``out_scale=None`` calibrates the readout window from the data (§3.1);
+    arbitrary M/K/N are handled by zero-padding to the kernel's block shape.
+    """
+    backend = resolve_backend(backend)
     if interpret is None:
         interpret = not _on_tpu()
-    if interpret or _on_tpu():
-        acc = tdvmm_matmul_kernel(
-            x_codes.astype(jnp.float32), w_codes.astype(jnp.float32),
-            interpret=bool(interpret))
-    else:  # pragma: no cover
-        acc = jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
-    y = acc * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1) * gain
+    acc = codes_matmul(
+        x_codes.astype(jnp.float32), w_codes.astype(jnp.float32),
+        backend, bool(interpret))
+    z = acc * gain
     if out_bits is not None:
-        levels = (1 << out_bits) - 1
-        s = jnp.maximum(jnp.max(jnp.abs(y)), 1e-9)
-        y = jnp.round(y / s * levels) / levels * s
-    return y
+        z = quant.readout(z, out_bits, scale=out_scale)
+    return z * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1)

@@ -1,13 +1,17 @@
 """Pure-jnp oracle for the TD-VMM quantized matmul kernel.
 
-Semantics (integer-valued charge accumulation of the four-quadrant TD-VMM):
+Semantics (integer-valued charge accumulation of the four-quadrant TD-VMM),
+mirroring ops.tdvmm_matmul stage for stage:
 
-    y[m, n] = (sum_k xc[m, k] * wc[k, n]) * x_scale[m] * w_scale[n] * gain
+    z[m, n] = (sum_k xc[m, k] * wc[k, n]) * gain          charge + latch
+    z       = readout(z, out_bits)                        p-bit ADC (§4.2)
+    y[m, n] = z[m, n] * x_scale[m] * w_scale[n]           digital rescale
 
 where xc are signed p-bit time codes (integer-valued floats, the differential
 (+/-) wire pair folded into a sign) and wc are signed weight codes.  The
-optional output readout quantizes y to p bits over the calibrated output
-window (the shared-counter ADC of section 4.2).
+readout quantizes the latch-normalized accumulation over the calibrated
+output window — before the per-row/per-channel digital rescale — exactly as
+the shared-counter ADC samples the crossing time.
 """
 from __future__ import annotations
 
@@ -22,11 +26,15 @@ def tdvmm_matmul_ref(
     w_scale: jax.Array,      # (N,)
     gain: float,
     out_bits: int | None = None,
+    out_scale: float | None = None,
 ) -> jax.Array:
     acc = jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
-    y = acc * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1) * gain
+    z = acc * gain
     if out_bits is not None:
+        # Deliberately inlined (NOT quant.readout): the oracle must stay
+        # independent of the implementation it validates.
         levels = (1 << out_bits) - 1
-        s = jnp.maximum(jnp.max(jnp.abs(y)), 1e-9)
-        y = jnp.round(y / s * levels) / levels * s
-    return y
+        s = out_scale if out_scale is not None else jnp.maximum(
+            jnp.max(jnp.abs(z)), 1e-9)
+        z = jnp.round(jnp.clip(z / s, -1.0, 1.0) * levels) / levels * s
+    return z * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1)

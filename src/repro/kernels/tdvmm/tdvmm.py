@@ -18,6 +18,54 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
+# Default MXU-aligned block shape; pad_to_blocks() aligns arbitrary model
+# shapes to these so the divisibility asserts below never constrain callers.
+BM, BK, BN = 128, 512, 128
+# Mosaic f32 tiling: sublane (second-to-last dim) x lane (last dim) minimums.
+SUBLANE, LANE = 8, 128
+
+
+def padded_size(size: int, block: int, tile: int) -> int:
+    """Smallest n >= max(size, 1) with n % tile == 0 and n % min(block, n) == 0.
+
+    Rounding to ``tile`` first keeps sub-block dims Mosaic-lowerable on real
+    TPUs (block sizes are tile multiples, so block-rounding preserves it).
+    Empty dims pad up to one tile — all-zero codes, zero charge — so the
+    sliced-back result is the correct empty (or zero) array instead of a
+    zero-size grid.
+    """
+    n = ((max(size, 1) + tile - 1) // tile) * tile
+    if n >= block:
+        n = ((n + block - 1) // block) * block
+    return n
+
+
+def pad_to_blocks(
+    x_codes: jax.Array,      # (M, K)
+    w_codes: jax.Array,      # (K, N)
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+) -> tuple[jax.Array, jax.Array]:
+    """Zero-pad code matrices up to block multiples (and MXU tile multiples).
+
+    A zero time code contributes zero charge (the source never turns on), so
+    padding is exact: slice the kernel output back to [:M, :N] and the result
+    is identical to the unpadded product.
+    """
+    m, k = x_codes.shape
+    _, n = w_codes.shape
+    mp = padded_size(m, bm, SUBLANE)
+    kp = padded_size(k, bk, LANE)
+    np_ = padded_size(n, bn, LANE)
+    if (mp, kp) != (m, k):
+        x_codes = jnp.pad(x_codes, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w_codes = jnp.pad(w_codes, ((0, kp - k), (0, np_ - n)))
+    return x_codes, w_codes
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
     @pl.when(pl.program_id(2) == 0)
@@ -58,7 +106,7 @@ def tdvmm_matmul_kernel(
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_codes, w_codes)

@@ -1,0 +1,35 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+``jax.shard_map`` (with ``check_vma`` / ``axis_names``) only exists in newer
+releases; jax 0.4.x ships it as ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` and the complementary ``auto`` axis set.  All shard_map call
+sites (models/common.py, models/moe.py, launch/pipeline.py) go through this
+wrapper so the repo runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    """New-style shard_map signature, lowered to whatever this jax has.
+
+    ``axis_names`` is the set of *manual* mesh axes (None = all manual); on
+    old jax ``check_vma`` maps to ``check_rep``.  Old jax's partial-auto mode
+    (``auto=...``) is unreliable — XLA dies on a fatal IsManualSubgroup check
+    when collectives mix with auto axes — so when ``axis_names`` asks for
+    partial-manual we fall back to fully-manual there: numerically identical
+    (unmentioned axes are replicated), it only forgoes GSPMD sharding of the
+    per-shard body over the would-be-auto axes.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -7,9 +7,10 @@ contiguous half of the layer stack; microbatches stream through, and the
 stage boundary is one collective_permute hop per microbatch — the only
 cross-pod traffic (cheap on data-center interconnect vs FSDP gathers).
 
-Implementation: `jax.shard_map` with `axis_names={'pod'}` — the pod axis is
-manual (explicit permutes), while `data`/`model` stay AUTO, so the FSDP+TP
-sharding of each stage's layers is still GSPMD's job inside the stage.
+Implementation: `launch.compat.shard_map` with `axis_names={'pod'}` — the pod
+axis is manual (explicit permutes), while `data`/`model` stay AUTO on new jax,
+so the FSDP+TP sharding of each stage's layers is still GSPMD's job inside the
+stage.  (jax 0.4.x runs the stage body fully manual instead — see compat.py.)
 
 Layer stacks are (n_layers, ...) pytrees; we reshape to (n_stages,
 layers_per_stage, ...) and shard dim 0 over `pod`.  Every pod executes the
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.launch import compat
 from repro.models import common, transformer
 
 
@@ -55,12 +57,15 @@ def pp_forward(params, batch_tokens, cfg: ModelConfig, mesh, n_micro: int = 8):
         x, _ = jax.lax.scan(layer, x, p_stage)
         return x
 
-    def pipelined(staged_local, x_mb):
+    def pipelined(staged_local, x_mb, stage_id):
         """staged_local: (1, L/stages, ...) this pod's layers;
         x_mb: (n_micro, mb, S, d) embedded microbatches (same on every pod —
-        only stage 0's compute consumes them)."""
+        only stage 0's compute consumes them);
+        stage_id: (1,) this pod's stage index, passed as pod-sharded data
+        because lax.axis_index lowers to PartitionId, which GSPMD rejects
+        inside a partially-auto shard_map on jax 0.4.x."""
         stage_params = jax.tree.map(lambda a: a[0], staged_local)
-        idx = jax.lax.axis_index("pod")
+        idx = stage_id[0]
         n_ticks = n_micro + n_stages - 1
 
         def tick(carry, t):
@@ -90,13 +95,13 @@ def pp_forward(params, batch_tokens, cfg: ModelConfig, mesh, n_micro: int = 8):
     x_mb = x.reshape(n_micro, b // n_micro, s, d)
 
     staged_specs = jax.tree.map(lambda _: P("pod"), staged)
-    outs = jax.shard_map(
+    outs = compat.shard_map(
         pipelined, mesh=mesh,
-        in_specs=(staged_specs, P()),
+        in_specs=(staged_specs, P(), P("pod")),
         out_specs=P(),
         axis_names={"pod"},
         check_vma=False,
-    )(staged, x_mb)
+    )(staged, x_mb, jnp.arange(n_stages, dtype=jnp.int32))
 
     h = outs.reshape(b, s, d)
     h = common.rmsnorm(params["ln_f"], h, cfg.norm_eps)

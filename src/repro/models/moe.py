@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.launch import meshctx
+from repro.launch import compat, meshctx
 from repro.models import common
 
 
@@ -207,7 +207,7 @@ def apply(params, x: jax.Array, cfg: ModelConfig, key=None) -> tuple[jax.Array, 
         aux = jax.tree.map(lambda v: jax.lax.pmean(v, dp), aux)
         return y.reshape(xb.shape), aux
 
-    y, aux = jax.shard_map(
+    y, aux = compat.shard_map(
         inner,
         mesh=mesh,
         in_specs=(batch_spec, expert_spec, router_spec),

@@ -1,0 +1,44 @@
+"""Shared test fixtures and dependency gating.
+
+``hypothesis`` is an optional test dependency (the ``test`` extra in
+pyproject.toml).  Environments without it — e.g. a bare container with only
+jax — would otherwise fail *collection* of every module that property-tests.
+This shim keeps those modules importable: ``@given`` tests skip cleanly,
+every plain test in the same module still runs.
+"""
+from __future__ import annotations
+
+import importlib.util
+import sys
+import types
+
+if importlib.util.find_spec("hypothesis") is None:
+    def _given(*_a, **_k):
+        def deco(fn):
+            # Zero-arg on purpose (and no functools.wraps: pytest would follow
+            # __wrapped__ back to the parametrized signature and demand
+            # fixtures for the strategy arguments).
+            def wrapper():
+                import pytest
+                pytest.skip("hypothesis not installed (pip install '.[test]')")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def _settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _Strategies(types.ModuleType):
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    _st = _Strategies("hypothesis.strategies")
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

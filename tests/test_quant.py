@@ -1,0 +1,242 @@
+"""Unified quantized-code subsystem (core/quant.py) + backend dispatch.
+
+The contract under test: one QuantizedTensor path from encoding to the Pallas
+TD-VMM kernel, with (a) the jnp and Pallas-interpret integrate backends
+bit-for-bit identical at model shapes, (b) exact padding round-trips for
+non-block-multiple shapes, and (c) STE gradients flowing through every stage
+so QAT works on either backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.layers import TDVMMLayerConfig, td_matmul
+from repro.kernels.tdvmm.ops import tdvmm_matmul
+from repro.kernels.tdvmm.ref import tdvmm_matmul_ref
+from repro.kernels.tdvmm.tdvmm import pad_to_blocks, padded_size
+
+
+# --------------------------------------------------------------------------
+# QuantizedTensor stages
+# --------------------------------------------------------------------------
+def test_encode_input_codes_and_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 7, 33)) * 3.0
+    qt = quant.encode_input(x, bits=6)
+    codes = np.asarray(qt.codes)
+    assert qt.bits == 6 and qt.levels == 63
+    assert codes.shape == x.shape and qt.scale.shape == (4, 7, 1)
+    # codes are exact integers on the signed p-bit grid
+    assert np.all(codes == np.round(codes))
+    assert np.max(np.abs(codes)) <= 63
+    # round-trip error bounded by half an LSB of the per-row range
+    err = np.abs(np.asarray(qt.dequantize()) - np.asarray(x))
+    bound = np.asarray(qt.scale) / (2 * 63) + 1e-6
+    assert np.all(err <= bound)
+
+
+def test_program_weights_per_channel_vs_per_tensor():
+    w = jax.random.normal(jax.random.PRNGKey(1), (40, 9))
+    q_pc = quant.program_weights(w, bits=6, per_channel=True)
+    q_pt = quant.program_weights(w, bits=6, per_channel=False)
+    assert q_pc.scale.shape == (1, 9) and q_pt.scale.shape == (1, 1)
+    np.testing.assert_allclose(
+        np.asarray(q_pc.scale[0]), np.abs(np.asarray(w)).max(axis=0))
+    for q in (q_pc, q_pt):
+        codes = np.asarray(q.codes)
+        assert np.all(codes == np.round(codes)) and np.max(np.abs(codes)) <= 63
+
+
+def test_readout_matches_inline_formula():
+    y = jax.random.normal(jax.random.PRNGKey(2), (13, 21)) * 4.0
+    for bits in (4, 6, 8):
+        levels = (1 << bits) - 1
+        s = float(jnp.max(jnp.abs(y)))
+        expect = jnp.round(y / s * levels) / levels * s
+        np.testing.assert_allclose(
+            np.asarray(quant.readout(y, bits)), np.asarray(expect),
+            rtol=1e-6, atol=1e-6)
+
+
+def test_quantized_tensor_is_a_pytree():
+    qt = quant.encode_input(jnp.ones((3, 5)), bits=6)
+    out = jax.jit(lambda t: t.dequantize())(qt)
+    assert out.shape == (3, 5)
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 2  # codes + scale; bits is static metadata
+
+
+# --------------------------------------------------------------------------
+# (a) jnp path == Pallas-interpret path, bit for bit
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [
+    ((2, 9, 200), (200, 120)),     # non-block-multiple model shape
+    ((8, 128), (128, 64)),         # the perceptron case-study shape
+    ((3, 256), (256, 512)),        # block-aligned K/N, tiny M
+])
+def test_backend_parity_bit_for_bit(shape):
+    x_shape, w_shape = shape
+    x = jax.random.normal(jax.random.PRNGKey(3), x_shape)
+    w = jax.random.normal(jax.random.PRNGKey(4), w_shape) * 0.2
+    cfg = TDVMMLayerConfig(enabled=True, bits=6, weight_bits=6, backend="jnp")
+    y_jnp = td_matmul(x, w, cfg)
+    y_pal = td_matmul(x, w, cfg.replace(backend="pallas"))
+    assert y_jnp.shape == x_shape[:-1] + (w_shape[1],)
+    assert np.array_equal(np.asarray(y_jnp), np.asarray(y_pal))
+
+
+def test_backend_parity_without_io_quantize():
+    """Time-chained tiles (no digital boundary) must agree too."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (5, 100))
+    w = jax.random.normal(jax.random.PRNGKey(6), (100, 30))
+    cfg = TDVMMLayerConfig(enabled=True, io_quantize=False, backend="jnp")
+    y_jnp = td_matmul(x, w, cfg)
+    y_pal = td_matmul(x, w, cfg.replace(backend="pallas"))
+    assert np.array_equal(np.asarray(y_jnp), np.asarray(y_pal))
+
+
+def test_ops_matches_ref_oracle():
+    """ops.tdvmm_matmul (both backends) vs the pure-jnp oracle, with readout."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    m, k, n = 150, 300, 70
+    xc = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
+    wc = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+    xs = jax.random.uniform(jax.random.PRNGKey(8), (m,), minval=0.5, maxval=2.0)
+    ws = jax.random.uniform(jax.random.PRNGKey(9), (n,), minval=0.5, maxval=2.0)
+    ref = tdvmm_matmul_ref(xc, wc, xs, ws, gain=1e-4, out_bits=6)
+    got = {}
+    for backend in ("jnp", "pallas"):
+        got[backend] = tdvmm_matmul(xc, wc, xs, ws, gain=1e-4, out_bits=6,
+                                    backend=backend)
+        # vs the (un-jitted) oracle: identical math, so only ulp-level slack
+        # for jit-vs-eager evaluation of the same expression
+        np.testing.assert_allclose(np.asarray(got[backend]), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+    # between backends (same jit context): bit for bit
+    np.testing.assert_array_equal(np.asarray(got["jnp"]),
+                                  np.asarray(got["pallas"]))
+
+
+# --------------------------------------------------------------------------
+# (b) padding round-trips for non-block-multiple shapes
+# --------------------------------------------------------------------------
+def test_empty_batch_both_backends():
+    """M=0 (e.g. a serving batch filtered to nothing) must not crash —
+    neither the ops layer nor the full td_matmul path (whose calibrated
+    readout takes a global max over the empty output)."""
+    xc = jnp.zeros((0, 64))
+    wc = jnp.ones((64, 8))
+    for backend in ("jnp", "pallas"):
+        y = tdvmm_matmul(xc, wc, jnp.zeros((0,)), jnp.ones((8,)),
+                         backend=backend)
+        assert y.shape == (0, 8)
+        cfg = TDVMMLayerConfig(enabled=True, backend=backend)
+        y2 = td_matmul(jnp.zeros((0, 64)), jnp.ones((64, 8)), cfg)
+        assert y2.shape == (0, 8)
+
+
+@pytest.mark.parametrize("m,k,n", [(300, 520, 130), (7, 100, 3), (129, 513, 257)])
+def test_padding_roundtrip_exact(m, k, n):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * n))
+    xc = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
+    wc = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+    got = tdvmm_matmul(xc, wc, jnp.ones((m,)), jnp.ones((n,)),
+                       backend="pallas")
+    expect = jnp.dot(xc, wc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+
+
+def test_pad_to_blocks_shapes():
+    xc = jnp.ones((300, 520))
+    wc = jnp.ones((520, 130))
+    xp, wp = pad_to_blocks(xc, wc)
+    assert xp.shape == (padded_size(300, 128, 8), padded_size(520, 512, 128))
+    assert wp.shape == (xp.shape[1], padded_size(130, 128, 128))
+    # every padded dim is kernel-divisible AND Mosaic-tileable
+    for dim, block, tile in [(xp.shape[0], 128, 8), (xp.shape[1], 512, 128),
+                             (wp.shape[1], 128, 128)]:
+        assert dim % min(block, dim) == 0 and dim % tile == 0
+    # padding is zeros => zero charge contribution
+    assert float(jnp.sum(xp)) == 300 * 520 and float(jnp.sum(wp)) == 520 * 130
+
+
+def test_accumulator_envelope_warning():
+    """8-bit codes past K ~ 258 leave the f32 integer-exact envelope."""
+    import warnings as w
+    x = jnp.ones((2, 1024))
+    wt = jnp.ones((1024, 8))
+    cfg = TDVMMLayerConfig(enabled=True, bits=8, weight_bits=8, backend="jnp")
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        td_matmul(x, wt, cfg)
+    assert any("2^24" in str(c.message) for c in caught)
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        td_matmul(x, wt, cfg.replace(bits=6, weight_bits=6))
+    assert not caught
+
+
+# --------------------------------------------------------------------------
+# (c) STE gradients flow through every stage
+# --------------------------------------------------------------------------
+def test_ste_gradient_through_encode_input():
+    x = jax.random.normal(jax.random.PRNGKey(10), (6, 50))
+    g = jax.grad(lambda x: jnp.sum(quant.encode_input(x, 6).dequantize()))(x)
+    # STE: dequantize(encode(x)) has identity gradient in the value domain
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g), rtol=1e-5)
+
+
+def test_ste_gradient_through_program_weights():
+    w = jax.random.normal(jax.random.PRNGKey(11), (50, 20))
+    g = np.asarray(jax.grad(
+        lambda w: jnp.sum(quant.program_weights(w, 6).dequantize()))(w))
+    # identity everywhere, including each column's max-magnitude weight (the
+    # seed STE'd against the *unclipped* w/w_max; a clip in the STE path
+    # would halve the gradient exactly at the scale-defining weights)
+    np.testing.assert_allclose(g, np.ones_like(g), rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_qat_gradients_through_td_matmul(backend):
+    cfg = TDVMMLayerConfig(enabled=True, bits=6, weight_bits=6, backend=backend)
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, 80))
+    w = jax.random.normal(jax.random.PRNGKey(13), (80, 24)) * 0.1
+
+    def loss(x, w):
+        return jnp.sum(jnp.square(td_matmul(x, w, cfg)))
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert float(jnp.linalg.norm(gx)) > 0 and float(jnp.linalg.norm(gw)) > 0
+    assert bool(jnp.all(jnp.isfinite(gx)) and jnp.all(jnp.isfinite(gw)))
+
+
+def test_qat_gradients_backend_identical():
+    """The custom VJP makes gradients backend-independent, exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(14), (2, 3, 90))
+    w = jax.random.normal(jax.random.PRNGKey(15), (90, 40))
+
+    def loss(cfg):
+        return lambda x, w: jnp.sum(jnp.square(td_matmul(x, w, cfg)))
+
+    base = TDVMMLayerConfig(enabled=True)
+    gj = jax.grad(loss(base.replace(backend="jnp")), argnums=(0, 1))(x, w)
+    gp = jax.grad(loss(base.replace(backend="pallas")), argnums=(0, 1))(x, w)
+    for a, b in zip(gj, gp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# end-to-end: precision of the refactored layer is unchanged
+# --------------------------------------------------------------------------
+def test_layer_precision_band():
+    """~6-bit TD-VMM error stays in the paper's ~2% band on both backends."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 64)) * 0.1
+    exact = x @ w
+    for backend in ("jnp", "pallas"):
+        cfg = TDVMMLayerConfig(enabled=True, bits=6, weight_bits=6,
+                               backend=backend)
+        y = td_matmul(x, w, cfg)
+        rel = float(jnp.max(jnp.abs(y - exact)) / jnp.max(jnp.abs(exact)))
+        assert rel < 0.05, (backend, rel)
