@@ -1,6 +1,10 @@
 """Kernel micro-benchmarks: Pallas (interpret mode on CPU — correctness-path
 timing only; Mosaic compilation happens on real TPUs) vs the jnp reference
-path, plus the arithmetic-intensity accounting that motivates each kernel."""
+path, plus the arithmetic-intensity accounting that motivates each kernel.
+
+Emits ``BENCH_kernels.json`` (bytes moved, GB/s, us per shape, op counts,
+jnp-vs-pallas speedups) so CI tracks the perf trajectory run over run.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,13 +12,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, save_json, time_call
 from repro.core.layers import TDVMMLayerConfig, td_matmul
 from repro.kernels.crossing.ref import crossing_ref
 from repro.kernels.ssd.ref import ssd_naive
 from repro.kernels.tdvmm.ops import tdvmm_matmul
 from repro.kernels.tdvmm.ref import tdvmm_matmul_ref
 from repro.models.ssm import ssd_chunked
+
+
+def _codes(key, shape, dtype):
+    c = jnp.round(jax.random.uniform(key, shape, minval=-63, maxval=63))
+    return c.astype(dtype)
 
 
 def bench_tdvmm_backends():
@@ -27,8 +36,8 @@ def bench_tdvmm_backends():
     """
     for (m, k, n) in [(512, 1024, 4096), (256, 896, 896), (33, 300, 130)]:
         kx, kw = jax.random.split(jax.random.PRNGKey(m + n))
-        xc = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
-        wc = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+        xc = _codes(kx, (m, k), jnp.float32)
+        wc = _codes(kw, (k, n), jnp.float32)
         xs = jnp.ones((m,))
         ws = jnp.ones((n,))
         flops = 2 * m * k * n
@@ -39,9 +48,12 @@ def bench_tdvmm_backends():
             outs[backend] = fn(xc, wc, xs, ws)
             us = time_call(fn, xc, wc, xs, ws, iters=3)
             emit(f"tdvmm_{backend}_{m}x{k}x{n}", us,
-                 f"GFLOP/s={flops/us*1e-3:.1f}")
+                 f"GFLOP/s={flops/us*1e-3:.1f}",
+                 data={"m": m, "k": k, "n": n,
+                       "gflops_per_s": round(flops / us * 1e-3, 1)})
         parity = float(jnp.max(jnp.abs(outs["jnp"] - outs["pallas"])))
-        emit(f"tdvmm_parity_{m}x{k}x{n}", 0.0, f"max_abs_diff={parity}")
+        emit(f"tdvmm_parity_{m}x{k}x{n}", 0.0, f"max_abs_diff={parity}",
+             data={"max_abs_diff": parity})
 
     # full layer path (encode -> integrate -> readout -> rescale)
     x = jax.random.normal(jax.random.PRNGKey(1), (256, 1024))
@@ -54,10 +66,135 @@ def bench_tdvmm_backends():
              f"GFLOP/s={2*256*1024*4096/us*1e-3:.1f}")
 
 
+def _iter_eqns(fn, args):
+    """Every equation in the traced program of fn(*args), recursing into
+    nested (pjit/scan/pallas) sub-jaxprs — one traversal shared by all the
+    jaxpr-derived bench metrics."""
+    eqns = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            eqns.append(eqn)
+            for val in eqn.params.values():
+                for sub in (val if isinstance(val, (list, tuple)) else [val]):
+                    if hasattr(sub, "eqns"):
+                        walk(sub)
+                    elif hasattr(sub, "jaxpr"):
+                        walk(sub.jaxpr)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return eqns
+
+
+def _matmul_operand_dtype(fn, args):
+    """The dtype actually reaching the codes matmul: the first contraction
+    (dot_general) in the traced program, by its LHS input dtype.  This keeps
+    the bytes-moved claim honest — if the int8 dispatch ever regressed to
+    f32, this (and the CI invariant built on it) would catch it, not just
+    the analytic itemsize arithmetic."""
+    for eqn in _iter_eqns(fn, args):
+        if eqn.primitive.name == "dot_general":
+            return str(eqn.invars[0].aval.dtype)
+    return "none"
+
+
+def bench_int8_vs_f32_codes():
+    """The headline bytes-moved win: int8 code storage streams the codes
+    matmul at a quarter of the f32 HBM bytes (and accumulates exactly in
+    int32, so there is no 2^24 envelope to respect).
+
+    ``bytes_hbm`` is the analytic HBM traffic of the codes matmul — code
+    reads + one f32 output write — cross-checked against the dtype the
+    traced dot_general actually consumes (``matmul_operand_dtype``); CPU
+    wall time is reported for trajectory tracking but XLA-CPU's int8 matmul
+    codegen is not the serving target.
+    """
+    byte_rows, op_dtypes = {}, {}
+    for (m, k, n) in [(512, 2048, 512), (512, 1024, 4096)]:
+        kx, kw = jax.random.split(jax.random.PRNGKey(k))
+        for name, dt in (("int8", jnp.int8), ("f32", jnp.float32)):
+            xc = _codes(kx, (m, k), dt)
+            wc = _codes(kw, (k, n), dt)
+            xs = jnp.ones((m,))
+            ws = jnp.ones((n,))
+            itemsize = jnp.dtype(dt).itemsize
+            bytes_hbm = (m * k + k * n) * itemsize + m * n * 4
+            fn = jax.jit(functools.partial(
+                tdvmm_matmul, gain=1e-4, out_bits=6, out_scale=0.5,
+                backend="jnp"))
+            us = time_call(fn, xc, wc, xs, ws, iters=3)
+            byte_rows[(m, k, n, name)] = bytes_hbm
+            op_dtypes[(m, k, n, name)] = _matmul_operand_dtype(
+                fn, (xc, wc, xs, ws))
+            emit(f"tdvmm_codes_{name}_{m}x{k}x{n}", us,
+                 f"HBM_MB={bytes_hbm/2**20:.2f}|GB/s={bytes_hbm/us*1e-3:.2f}",
+                 data={"m": m, "k": k, "n": n, "code_dtype": name,
+                       "matmul_operand_dtype": op_dtypes[(m, k, n, name)],
+                       "bytes_hbm": bytes_hbm,
+                       "gb_per_s": round(bytes_hbm / us * 1e-3, 2)})
+        ratio = byte_rows[(m, k, n, "f32")] / byte_rows[(m, k, n, "int8")]
+        int8_verified = op_dtypes[(m, k, n, "int8")] == "int8"
+        emit(f"tdvmm_codes_bytes_ratio_{m}x{k}x{n}", 0.0,
+             f"f32_bytes/int8_bytes={ratio:.2f}x|int8_dot={int8_verified}",
+             data={"bytes_reduction": round(ratio, 2),
+                   "int8_reduces_hbm_bytes": ratio > 1.0 and int8_verified})
+
+
+def _count_mn_materializations(fn, args, m, n):
+    """Count jaxpr equations that materialize an (M, N)-shaped array — each
+    one is an HBM round-trip of the full output tile before XLA fusion (the
+    fused kernel's guarantee is exactly one such write)."""
+    return sum(
+        any(getattr(v.aval, "shape", ())[-2:] == (m, n) for v in eqn.outvars)
+        for eqn in _iter_eqns(fn, args))
+
+
+def bench_fused_epilogue():
+    """Fused in-kernel epilogue (gain + p-bit readout over a fixed window +
+    per-row x per-channel rescale) vs the unfused jnp chain.
+
+    The interpret-measured metric is the count of (M, N) materializations in
+    the traced program: the unfused path builds the accumulator and then a
+    chain of full-size elementwise intermediates, while the fused kernel
+    finishes each tile in VMEM and writes HBM once.  On TPU that is the
+    wall-clock difference; on CPU wall time only tracks interpret overhead.
+    """
+    m, k, n = 256, 1024, 512
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    xc = _codes(kx, (m, k), jnp.int8)
+    wc = _codes(kw, (k, n), jnp.int8)
+    xs = jax.random.uniform(jax.random.PRNGKey(4), (m,), minval=0.5, maxval=2.0)
+    ws = jax.random.uniform(jax.random.PRNGKey(5), (n,), minval=0.5, maxval=2.0)
+    counts, times = {}, {}
+    for backend in ("jnp", "pallas"):
+        fn = jax.jit(functools.partial(
+            tdvmm_matmul, gain=1e-4, out_bits=6, out_scale=0.5,
+            backend=backend))
+        counts[backend] = _count_mn_materializations(fn, (xc, wc, xs, ws), m, n)
+        y = fn(xc, wc, xs, ws)
+        jax.block_until_ready(y)
+        times[backend] = time_call(fn, xc, wc, xs, ws, iters=3)
+        emit(f"tdvmm_epilogue_{backend}_{m}x{k}x{n}", times[backend],
+             f"MN_materializations={counts[backend]}",
+             data={"m": m, "k": k, "n": n,
+                   "mn_materializations": counts[backend],
+                   "fused": backend == "pallas"})
+    emit(f"tdvmm_fused_epilogue_opcount_{m}x{k}x{n}", 0.0,
+         f"unfused_jnp={counts['jnp']}|fused_pallas={counts['pallas']}",
+         data={"unfused_mn_ops": counts["jnp"],
+               "fused_mn_ops": counts["pallas"],
+               "fused_beats_unfused_opcount":
+                   counts["pallas"] < counts["jnp"],
+               "cpu_us_jnp": round(times["jnp"], 1),
+               "cpu_us_pallas_interpret": round(times["pallas"], 1)})
+
+
 def run():
     k = jax.random.PRNGKey(0)
 
     bench_tdvmm_backends()
+    bench_int8_vs_f32_codes()
+    bench_fused_epilogue()
 
     # tdvmm: jnp reference path (the kernel's oracle); AI accounting
     m, kk, n = 512, 2048, 512
@@ -93,6 +230,8 @@ def run():
     us_c = time_call(f_chunk, x, dt, a_log, bmat, cmat, iters=3)
     emit("ssd_naive_L512", us_n, "token-recurrence")
     emit("ssd_chunked_L512", us_c, f"speedup_vs_naive={us_n/us_c:.1f}x")
+
+    save_json("BENCH_kernels.json", meta={"suite": "kernels"})
 
 
 if __name__ == "__main__":

@@ -1,12 +1,13 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing + CSV row emission + JSON reports."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[dict] = []
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
@@ -24,6 +25,31 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str,
+         data: Optional[dict] = None):
+    """Record (and print) one benchmark row.  ``data`` carries structured
+    metrics (bytes moved, GB/s, speedups) into the JSON report."""
+    row = {"name": name, "us_per_call": round(us_per_call, 1),
+           "derived": derived}
+    if data:
+        row.update(data)
+    ROWS.append(row)
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(path: str, meta: Optional[dict] = None) -> str:
+    """Dump every row emitted since the last save (plus run metadata) as a
+    JSON report — the CI-tracked perf trajectory artifact
+    (e.g. BENCH_kernels.json).  Snapshots and clears the row buffer so each
+    suite's report contains only its own rows."""
+    rows, ROWS[:] = list(ROWS), []
+    doc = {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        **(meta or {}),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {path} ({len(rows)} rows)")
+    return path

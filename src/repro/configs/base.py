@@ -27,11 +27,19 @@ class TDVMMLayerConfig:
       "jnp"     jnp.dot on the same integer codes
       "auto"    pallas on TPU, jnp elsewhere (default)
 
-    With integer codes (noise off) and |acc| < 2^24 (e.g. 6-bit codes up to
-    K = 4096) both backends accumulate exact integer arithmetic in f32, so
-    they are bit-for-bit identical (verified by tests/test_quant.py).  Noise
-    mode perturbs codes off the integer grid, where f32 summation order
-    matters — backends then agree only to float tolerance.
+    Code storage is chosen per call (core/layers.plan_matmul): codes with
+    p <= 7 (incl. the default p = 6) store as int8 — quarter the HBM bytes,
+    MXU int8 path, *exact* int32 accumulation for any K, so both backends
+    are bit-for-bit identical with no envelope caveat.  p = 8 or noisy codes
+    fall back to integer-valued f32, exact while |acc| < 2^24 (6-bit codes
+    up to K = 4096; td_matmul warns past it).  Noise mode perturbs codes off
+    the integer grid, where f32 summation order matters — backends then
+    agree only to float tolerance.
+
+    ``out_scale`` caches a calibration-time readout window (see
+    ``TDVMMLinear.calibrate`` / ``calibrate_out_scale``): serving calls skip
+    the per-call max|z| reduction, and the Pallas backend fuses the whole
+    readout + rescale epilogue into the kernel.
     """
     enabled: bool = False
     bits: int = 6                 # time-code (input/output) precision p
@@ -42,6 +50,8 @@ class TDVMMLayerConfig:
     output_calibration: bool = True  # scale weights so outputs fill the [T,2T]
     # window (section 3.1: "slope ... controlled by appropriate scaling of VMM
     # weights"); modeled as a stop-grad per-tensor output gain.
+    out_scale: Optional[float] = None  # cached calibrated readout window
+    # (overrides output_calibration's per-call max; captured by calibrate())
     noise: bool = False           # stochastic DIBL + tuning noise (train-time)
     spec: "object" = dataclasses.field(default_factory=_default_spec)  # TDVMMSpec
 

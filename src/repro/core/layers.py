@@ -4,7 +4,10 @@ td_matmul is the *closed form* of the four-quadrant TD-VMM (exact by Eq. 1-7,
 property-tested against the event-driven simulator in tdcore.py), structured
 as the explicit code-and-scale pipeline of core/quant.py:
 
-    plan         flatten (..., N_in) to 2-D, resolve the integrate backend
+    plan         flatten (..., N_in) to 2-D, pick code storage (int8 when the
+                 signed code range fits — exact int32 accumulation, no 2^24
+                 envelope — else f32), resolve the integrate backend + block
+                 sizes from the autotune table
     encode       x -> p-bit signed time codes + per-row scale   (Eq. 2, DAC)
     program      W -> signed current codes + per-channel scale  (FG tuning)
     integrate    codes matmul — kernels/tdvmm (Pallas on TPU, interpret
@@ -13,10 +16,20 @@ as the explicit code-and-scale pipeline of core/quant.py:
                  window when the tile boundary is digital      (Eq. 3, §4.2)
     rescale      digital per-row x per-channel rescale to model units
 
+With a *fixed* readout window (``cfg.out_scale``, captured once by
+``calibrate_out_scale`` / ``TDVMMLinear.calibrate`` on the serving path) the
+Pallas backend fuses readout + rescale into the kernel's final K step, so
+each output tile is written to HBM exactly once.
+
+``td_expert_matmul`` is the batched (E, C, K) x (E, K, N) form for MoE
+expert banks: one analog tile per expert, per-expert scales, the expert dim
+mapped onto the kernel's batched grid axis.
+
 Gradients: straight-through estimators on every quantizer (standard QAT) and
 a plain-matmul custom VJP on the integrate stage, so the layer is trainable
 inside any JAX model on either backend.  Optional stochastic DIBL / tuning
-noise (core/nonideal.py) models deploy-time precision during training.
+noise (core/nonideal.py) models deploy-time precision during training (noisy
+codes are non-integer and force the f32 code path).
 
 Arbitrary leading batch dims and non-block-multiple shapes are supported:
 codes are flattened to (M, K) and zero-padded to the kernel's block multiples
@@ -33,37 +46,76 @@ import jax.numpy as jnp
 from repro.configs.base import TDVMMLayerConfig  # re-export (historic home)
 from repro.core import quant
 
-__all__ = ["TDVMMLayerConfig", "td_matmul", "TDVMMLinear", "init_linear"]
+__all__ = ["TDVMMLayerConfig", "td_matmul", "td_expert_matmul",
+           "calibrate_out_scale", "TDVMMLinear", "init_linear"]
 
 
 class MatmulPlan(NamedTuple):
-    """Static shape/backend bookkeeping for one td_matmul call."""
+    """Static shape/backend/storage bookkeeping for one td_matmul call."""
     batch_shape: tuple[int, ...]     # leading dims of x, flattened into M
     m: int
     k: int                           # N_in: sources per output column
     n: int
     backend: str                     # resolved: "jnp" | "pallas"
+    code_dtype: str                  # "int8" | "f32" code storage for K
+    blocks: tuple[int, int, int]     # autotuned (bm, bk, bn)
 
 
-def plan_matmul(x_shape, w_shape, cfg: TDVMMLayerConfig) -> MatmulPlan:
+def _plan_code_dtype(cfg: TDVMMLayerConfig, k: int, noisy: bool) -> str:
+    """Pick the code storage for a K-deep accumulation, warning only on the
+    f32 fallback (the int8/int32 path is exact, so it never warns)."""
+    lx = (1 << cfg.bits) - 1
+    lw = (1 << cfg.weight_bits) - 1
+    worst = lx * lw * max(k, 1)
+    # int8 storage: both code ranges fit int8 (quant.storage_dtype owns that
+    # rule), codes stay on the integer grid (no analog noise), and the
+    # worst-case |acc| fits int32 — then accumulation is exact for ANY K,
+    # no envelope to warn about.
+    fits_int8 = (quant.storage_dtype(cfg.bits) == jnp.int8
+                 and quant.storage_dtype(cfg.weight_bits) == jnp.int8)
+    if not noisy and fits_int8 and worst < (1 << 31):
+        return "int8"
+    # f32 integer-exactness envelope: the backend-parity guarantee (and exact
+    # charge accumulation) needs worst-case |acc| < 2^24.  6-bit codes are
+    # safe to K = 4096; 8-bit only to K ~ 258.
+    if worst >= (1 << 24):
+        warnings.warn(
+            f"TD-VMM f32 accumulator may exceed f32 integer range: "
+            f"(2^{cfg.bits}-1)*(2^{cfg.weight_bits}-1)*K={worst} >= 2^24; "
+            "charge sums can round and jnp/pallas backends may diverge",
+            stacklevel=3)
+    return "f32"
+
+
+def plan_matmul(x_shape, w_shape, cfg: TDVMMLayerConfig,
+                noisy: bool = False) -> MatmulPlan:
     k, n = w_shape
     assert x_shape[-1] == k, (x_shape, w_shape)
     batch_shape = tuple(x_shape[:-1])
     m = 1
     for d in batch_shape:
         m *= d
-    # f32 integer-exactness envelope: the backend-parity guarantee (and exact
-    # charge accumulation) needs worst-case |acc| < 2^24.  6-bit codes are
-    # safe to K = 4096; 8-bit only to K ~ 258.
-    worst = ((1 << cfg.bits) - 1) * ((1 << cfg.weight_bits) - 1) * k
-    if worst >= (1 << 24):
-        warnings.warn(
-            f"TD-VMM accumulator may exceed f32 integer range: "
-            f"(2^{cfg.bits}-1)*(2^{cfg.weight_bits}-1)*K={worst} >= 2^24; "
-            "charge sums can round and jnp/pallas backends may diverge",
-            stacklevel=2)
+    code_dtype = _plan_code_dtype(cfg, k, noisy)
     from repro.kernels.tdvmm import ops
-    return MatmulPlan(batch_shape, m, k, n, ops.resolve_backend(cfg.backend))
+    kp = ops.plan_kernel(cfg.backend, m, k, n, code_dtype)
+    return MatmulPlan(batch_shape, m, k, n, kp.backend, code_dtype, kp.blocks)
+
+
+def _readout_args(cfg: TDVMMLayerConfig) -> tuple[Optional[int], Optional[float]]:
+    """(out_bits, out_scale) for the kernel epilogue.  Priority: a cached
+    calibration window (cfg.out_scale) > data calibration (None, §3.1) > the
+    fixed 0.5 raw differential window of a normalized tile."""
+    if not cfg.io_quantize:
+        return None, None
+    if cfg.out_scale is not None:
+        return cfg.bits, float(cfg.out_scale)
+    return cfg.bits, (None if cfg.output_calibration else 0.5)
+
+
+def _latch_gain(levels_x: int, levels_w: int, k: int) -> float:
+    """Latch gain: codes -> normalized differential output z = y+ - y- in
+    [-1, 1]: divide out both code ranges and the 2*N_in charge headroom."""
+    return 1.0 / (float(levels_x) * float(levels_w) * 2.0 * max(k, 1))
 
 
 def td_matmul(
@@ -80,36 +132,117 @@ def td_matmul(
             return jnp.dot(x, w, preferred_element_type=pet)
         return x @ w
 
-    # ---- plan: shapes + backend ----
-    plan = plan_matmul(x.shape, w.shape, cfg)
+    noisy = cfg.noise and key is not None
+
+    # ---- plan: shapes + code storage + backend/blocks ----
+    plan = plan_matmul(x.shape, w.shape, cfg, noisy=noisy)
 
     # ---- encode inputs / program weights (core/quant.py stages) ----
     qx = quant.encode_input(x, cfg.bits)
     qw = quant.program_weights(w, cfg.weight_bits, cfg.per_channel)
-    if cfg.noise and key is not None:
+    if noisy:
         qw = quant.program_noise(qw, cfg.spec, key)
 
     # ---- integrate + readout + rescale (kernel epilogue) ----
-    # Latch gain: codes -> normalized differential output z = y+ - y- in
-    # [-1, 1]: divide out both code ranges and the 2*N_in charge headroom.
     from repro.kernels.tdvmm import ops
-    gain = 1.0 / (float(qx.levels) * float(qw.levels) * 2.0 * plan.k)
+    gain = _latch_gain(qx.levels, qw.levels, plan.k)
     # Digital rescale: per-row input range and per-channel 2*N_in*w_max.
     w_scale = jnp.broadcast_to(
         qw.scale.reshape(-1) * (2.0 * plan.k), (plan.n,))
+    out_bits, out_scale = _readout_args(cfg)
     y = ops.tdvmm_matmul(
-        qx.codes.reshape(plan.m, plan.k),
-        qw.codes,
+        qx.view().reshape(plan.m, plan.k),
+        qw.view(),
         qx.scale.reshape(plan.m),
         w_scale,
         gain=gain,
-        out_bits=cfg.bits if cfg.io_quantize else None,
-        # None -> calibrate the ADC window to the data (section 3.1); a fixed
-        # 0.5 window is the raw differential range of a normalized tile.
-        out_scale=None if cfg.output_calibration else 0.5,
+        out_bits=out_bits,
+        out_scale=out_scale,
         backend=plan.backend,
+        code_dtype=plan.code_dtype,
+        block_sizes=plan.blocks,
     )
     return y.reshape(plan.batch_shape + (plan.n,)).astype(x.dtype)
+
+
+def td_expert_matmul(
+    x: jax.Array,            # (E, C, N_in) expert-batched activations
+    w: jax.Array,            # (E, N_in, N_out) stacked expert weight bank
+    cfg: TDVMMLayerConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Batched four-quadrant TD-VMM: one analog tile per expert.
+
+    The MoE dispatch buffer multiplies against every expert's weight matrix
+    in one kernel launch — the expert dim rides the kernel's batched grid
+    axis, with per-expert-per-row input scales and per-expert-per-channel
+    weight scales.  Zero-padded (ragged) expert rows carry zero codes and
+    contribute zero charge, so capacity padding is exact.
+    """
+    if not cfg.enabled:
+        from repro.models import common as _c
+        pet = _c.matmul_out_dtype()
+        kw = {"preferred_element_type": pet} if pet is not None else {}
+        return jnp.einsum("eck,ekn->ecn", x, w, **kw)
+
+    e, c, k = x.shape
+    e2, k2, n = w.shape
+    assert e == e2 and k == k2, (x.shape, w.shape)
+    noisy = cfg.noise and key is not None
+    code_dtype = _plan_code_dtype(cfg, k, noisy)
+    from repro.kernels.tdvmm import ops
+    kp = ops.plan_kernel(cfg.backend, c, k, n, code_dtype)
+
+    qx = quant.encode_input(x, cfg.bits)                       # scale (E, C, 1)
+    qw = quant.program_weights(w, cfg.weight_bits, cfg.per_channel)
+    if noisy:
+        qw = quant.program_noise(qw, cfg.spec, key)
+
+    gain = _latch_gain(qx.levels, qw.levels, k)
+    # qw.scale is (E, 1, N) per-channel or (E, 1, 1) per-tensor; the explicit
+    # last dim (not -1) keeps E=0 expert stacks reshapeable.
+    w_scale = jnp.broadcast_to(
+        qw.scale.reshape(e, qw.scale.shape[-1]) * (2.0 * k), (e, n))
+    out_bits, out_scale = _readout_args(cfg)
+    y = ops.tdvmm_matmul(
+        qx.view(),
+        qw.view(),
+        qx.scale.reshape(e, c),
+        w_scale,
+        gain=gain,
+        out_bits=out_bits,
+        out_scale=out_scale,
+        backend=kp.backend,
+        code_dtype=code_dtype,
+        block_sizes=kp.blocks,
+    )
+    return y.astype(x.dtype)
+
+
+def calibrate_out_scale(
+    x: jax.Array, w: jax.Array, cfg: TDVMMLayerConfig
+) -> float:
+    """Serving-path readout calibration: capture the ADC window once.
+
+    Runs encode -> program -> integrate on a representative batch and returns
+    max|z| of the latch-normalized accumulation (the §3.1 output-window
+    calibration) as a Python float.  Store it on the config
+    (``cfg.replace(out_scale=...)``): per-call windows stop recomputing a
+    global max, and the Pallas backend's fused-epilogue kernel becomes
+    eligible (a fixed window is tile-local; a data-calibrated one is not).
+    """
+    if not cfg.enabled:
+        raise ValueError("calibrate_out_scale needs an enabled TD-VMM config")
+    plan = plan_matmul(x.shape, w.shape, cfg)
+    qx = quant.encode_input(x, cfg.bits)
+    qw = quant.program_weights(w, cfg.weight_bits, cfg.per_channel)
+    from repro.kernels.tdvmm import ops
+    acc = ops.codes_matmul(
+        qx.view().reshape(plan.m, plan.k), qw.view(), plan.backend,
+        code_dtype=plan.code_dtype)
+    gain = _latch_gain(qx.levels, qw.levels, plan.k)
+    z_max = jnp.max(jnp.abs(acc.astype(jnp.float32) * gain), initial=0.0)
+    return max(float(z_max), 1e-9)
 
 
 def init_linear(
@@ -135,3 +268,9 @@ class TDVMMLinear:
         if "b" in params:
             y = y + params["b"]
         return y
+
+    @staticmethod
+    def calibrate(params, x, cfg: TDVMMLayerConfig) -> TDVMMLayerConfig:
+        """Capture the readout window on a representative batch and return a
+        config whose ``out_scale`` pins it (serving-path calibration cache)."""
+        return cfg.replace(out_scale=calibrate_out_scale(x, params["w"], cfg))

@@ -22,19 +22,38 @@ Stage -> paper mapping (arXiv:1711.10673):
                       counter reads the crossing time back out as a p-bit code
                       over a calibrated output window.
 
-Codes are carried as *integer-valued float32* arrays (the MXU consumes f32;
-integer dot products are exact in f32 while |acc| < 2^24 — e.g. 6-bit codes up
-to K = 4096).  Every quantizer is wrapped in a straight-through estimator, so
-models stay trainable (standard QAT) no matter which backend integrates.
+Code storage: codes with |code| <= 127 (p <= 7, including the default p = 6)
+are stored as **int8** — the canonical digital word of the paper's machine.
+int8 codes stream from HBM at a quarter of the f32 bytes and take the MXU's
+int8 x int8 -> int32 path, where charge accumulation is *exact* for any K
+with |acc| < 2^31 (no 2^24 f32 envelope).  p = 8 codes (|code| <= 255) and
+noise-perturbed analog currents don't fit int8 and fall back to
+integer-valued float32 storage (exact while |acc| < 2^24 — e.g. 6-bit codes
+up to K = 4096).
+
+QAT still works on int8 storage: ``QuantizedTensor.view()`` returns the f32
+straight-through-estimator view (forward = the stored codes, backward =
+identity via the retained linear term), which is what ``dequantize`` and the
+kernel's gradient path consume.  Every quantizer is STE-wrapped, so models
+stay trainable (standard QAT) no matter which backend integrates.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import encoding as enc
+
+# Signed-magnitude codes span [-(2^p - 1), 2^p - 1]: int8 holds p <= 7.
+INT8_MAX_BITS = 7
+
+
+def storage_dtype(bits: int):
+    """Canonical code storage: int8 when the signed code range fits."""
+    return jnp.int8 if bits <= INT8_MAX_BITS else jnp.float32
 
 
 def ste(x_quant: jax.Array, x: jax.Array) -> jax.Array:
@@ -59,31 +78,60 @@ def signed_codes(x: jax.Array, bits: int) -> jax.Array:
 class QuantizedTensor:
     """Integer codes + the scale that maps them back to model units.
 
-    codes:  f32, integer-valued in [-levels, levels] (STE-wrapped, so codes
-            are differentiable in the QAT sense).  Programming noise makes
-            them non-integer — that models analog current perturbation and is
-            still valid kernel input.
+    codes:  int8 in [-levels, levels] when p <= 7 (the canonical storage —
+            quarter of the f32 HBM bytes, feeds the kernel's exact int32
+            accumulation path), else f32.  f32 codes are STE-wrapped and
+            directly differentiable in the QAT sense; they may also be
+            non-integer (programming noise models analog current
+            perturbation) and are still valid kernel input.
     scale:  f32, broadcastable against the dequantized value — per-row
             ``(..., 1)`` for activations, per-channel ``(1, N)`` or per-tensor
             ``(1, 1)`` for weights.  Always stop-gradient.
     bits:   static code width p.
+    ste:    optional f32 linear term (the unrounded ``x * levels``) retained
+            for QAT alongside int8 storage; ``view()`` splices it into a
+            straight-through estimator.  None on serving paths (and dead
+            code the compiler drops whenever gradients aren't taken).
     """
 
     codes: jax.Array
     scale: jax.Array
     bits: int
+    ste: Optional[jax.Array] = None
 
     @property
     def levels(self) -> int:
         return (1 << self.bits) - 1
 
+    def view(self) -> jax.Array:
+        """f32 STE view of the codes: forward = stored codes, backward =
+        identity (through ``ste`` when present).  This is what the compute
+        and gradient paths consume; ``codes`` itself is the storage word."""
+        if jnp.issubdtype(self.codes.dtype, jnp.floating):
+            return self.codes          # f32 codes already carry their STE
+        qf = self.codes.astype(jnp.float32)
+        if self.ste is None:
+            return qf
+        return self.ste + jax.lax.stop_gradient(qf - self.ste)
+
     def dequantize(self) -> jax.Array:
         """Back to model units: codes / L * scale."""
-        return self.codes * (self.scale / float(self.levels))
+        return self.view() * (self.scale / float(self.levels))
 
 
 jax.tree_util.register_dataclass(
-    QuantizedTensor, data_fields=["codes", "scale"], meta_fields=["bits"])
+    QuantizedTensor, data_fields=["codes", "scale", "ste"],
+    meta_fields=["bits"])
+
+
+def _store(normalized: jax.Array, bits: int) -> tuple[jax.Array, Optional[jax.Array]]:
+    """(codes, ste) for a normalized value in [-1, 1]: int8 storage + retained
+    f32 linear term when the code range fits int8, else STE-wrapped f32
+    (``signed_codes`` — the single source of the STE convention)."""
+    if storage_dtype(bits) == jnp.int8:
+        lin = normalized * float((1 << bits) - 1)
+        return enc.quantize_code_signed(normalized, bits).astype(jnp.int8), lin
+    return signed_codes(normalized, bits), None
 
 
 def encode_input(x: jax.Array, bits: int, axis: int = -1) -> QuantizedTensor:
@@ -99,7 +147,8 @@ def encode_input(x: jax.Array, bits: int, axis: int = -1) -> QuantizedTensor:
     # reduction error; the 1e-6 clamp then supplies the scale.
     s = jax.lax.stop_gradient(jnp.maximum(
         jnp.max(jnp.abs(xf), axis=axis, keepdims=True, initial=0.0), 1e-6))
-    return QuantizedTensor(codes=signed_codes(xf / s, bits), scale=s, bits=bits)
+    codes, lin = _store(xf / s, bits)
+    return QuantizedTensor(codes=codes, scale=s, bits=bits, ste=lin)
 
 
 def program_weights(
@@ -107,35 +156,45 @@ def program_weights(
 ) -> QuantizedTensor:
     """Weight stage (sections 2, 4.1): FG current codes + column scaling.
 
-    ``per_channel`` scales each output column independently (axis 0 of the
-    (N_in, N_out) matrix is reduced); otherwise one scale for the whole tile.
+    ``per_channel`` scales each output column independently (the N_in axis of
+    a (N_in, N_out) matrix — axis -2, so stacked (E, N_in, N_out) expert
+    banks get per-expert-per-column scales); otherwise one scale per weight
+    tile (per expert for stacked banks).
     """
     wf = w.astype(jnp.float32)
-    axes = 0 if per_channel else None
+    axes = (-2,) if per_channel else (-2, -1)
     w_max = jax.lax.stop_gradient(jnp.maximum(
         jnp.max(jnp.abs(wf), axis=axes, keepdims=True, initial=0.0), 1e-6))
-    # No explicit clip: signed_codes' forward already clips to the code range,
-    # and the STE linear term must stay unclipped — a clip here would halve
+    # No explicit clip: the stored code already clips to the code range, and
+    # the STE linear term must stay unclipped — a clip here would halve
     # the gradient of every per-channel max-magnitude weight (the clip
     # boundary is a min/max tie at exactly |w| == w_max).
-    codes = signed_codes(wf / w_max, bits)
-    return QuantizedTensor(codes=codes, scale=w_max, bits=bits)
+    codes, lin = _store(wf / w_max, bits)
+    return QuantizedTensor(codes=codes, scale=w_max, bits=bits, ste=lin)
 
 
 def program_noise(qw: QuantizedTensor, spec, key: jax.Array) -> QuantizedTensor:
     """Stochastic DIBL + FG tuning noise on programmed current codes.
 
     Multiplicative, so it is identical in the code and value domains; the
-    perturbed codes are intentionally non-integer (analog currents).
+    perturbed codes are intentionally non-integer (analog currents), so the
+    result always carries f32 codes — int8 storage (and the kernel's int
+    path) is for noise-free digital words only.
     """
     from repro.core import nonideal
 
     err = nonideal.relative_error(
         spec.i_max, jnp.asarray(spec.v_sg), jnp.asarray(spec.delta_vd))
     k1, k2 = jax.random.split(key)
-    u = jax.random.uniform(k1, qw.codes.shape, minval=-1.0, maxval=1.0)
-    codes = qw.codes * (1.0 + err * u)
-    codes = codes * jnp.exp(0.003 * jax.random.normal(k2, qw.codes.shape))
+    view = qw.view()
+    # Explicit f32 draws: the code pipeline is f32 end-to-end, independent of
+    # the process-wide jax_enable_x64 flag (which would silently promote the
+    # perturbed codes to f64).
+    u = jax.random.uniform(
+        k1, view.shape, jnp.float32, minval=-1.0, maxval=1.0)
+    codes = view * (1.0 + err.astype(jnp.float32) * u)
+    codes = codes * jnp.exp(
+        0.003 * jax.random.normal(k2, view.shape, jnp.float32))
     return QuantizedTensor(codes=codes, scale=qw.scale, bits=qw.bits)
 
 

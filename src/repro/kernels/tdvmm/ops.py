@@ -13,23 +13,43 @@ the crossing *time*, before any per-row/per-channel digital rescale — so the
 epilogue carries per-row input scales and per-channel weight scales through
 without changing what the hardware quantizes.
 
-Backends: ``"pallas"`` runs the Pallas kernel (Mosaic on TPU, interpret mode
-elsewhere), ``"jnp"`` runs jnp.dot, ``"auto"`` picks pallas on TPU.  For
-integer-valued codes within the f32 exactness envelope (|acc| < 2^24) both
-integrate exact integer arithmetic, so they are bit-for-bit identical;
-non-integer codes (programming noise) agree only to float tolerance, since
-summation order differs.  Gradients flow through a shared custom VJP (plain
-matmul cotangents on the STE-wrapped codes), so the Pallas path is trainable.
+Code dtypes (``code_dtype``): ``"int8"`` stores the codes as int8 in HBM
+(quarter the f32 bytes) and accumulates exactly in int32 on both backends —
+the MXU int8 path on TPU, an s8 x s8 -> s32 dot under XLA elsewhere — so the
+backends are bit-for-bit identical for *any* K with |acc| < 2^31, with no
+2^24 f32 envelope.  ``"f32"`` is the legacy float-code path (8-bit codes,
+noise-perturbed analog currents); exact only while |acc| < 2^24.  ``"auto"``
+follows the input arrays' dtypes.
+
+Epilogue placement: with a *fixed* readout window (``out_scale`` given, the
+serving-path calibration cache) or no readout at all, the Pallas backend runs
+the whole epilogue inside the kernel's final K step (tdvmm_fused_kernel) —
+each output tile is written to HBM exactly once, already in model units.  A
+data-calibrated window (``out_scale=None`` with ``out_bits``) needs a global
+max|z| and falls back to the unfused jnp epilogue after the codes matmul.
+Both epilogues evaluate the same expression term for term, so fused and
+unfused results are bit-for-bit identical.
+
+Batching: 3-D inputs (E, M, K) x (E, K, N) map the expert dim onto the
+kernel's batched grid axis (scales (E, M) / (E, N)); 2-D inputs run as E=1.
+
+Gradients flow through a shared custom VJP (plain matmul cotangents on the
+STE-wrapped codes, identity through the readout quantizer), so every backend
+x dtype x fusion combination is trainable and backend-independent in the
+backward pass.  Pass int arrays directly only on no-grad (serving) paths;
+the QAT path feeds the f32 STE view and lets the forward cast to int8.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
-from repro.kernels.tdvmm.tdvmm import pad_to_blocks, tdvmm_matmul_kernel
+from repro.kernels.tdvmm.tdvmm import (
+    acc_dtype_for, autotune_blocks, pad_to_blocks, tdvmm_fused_kernel,
+    tdvmm_matmul_kernel)
 
 
 def _on_tpu() -> bool:
@@ -37,7 +57,11 @@ def _on_tpu() -> bool:
 
 
 def resolve_backend(backend: str) -> str:
-    """'auto' | 'jnp' | 'pallas' -> concrete integrate implementation."""
+    """'auto' | 'jnp' | 'pallas' -> concrete integrate implementation.
+
+    Shape-aware form: ``plan_kernel`` additionally consults the block-size
+    autotune table (tdvmm.AUTOTUNE_TABLE) keyed on (M, K, N, dtype).
+    """
     if backend == "auto":
         return "pallas" if _on_tpu() else "jnp"
     if backend not in ("jnp", "pallas"):
@@ -45,66 +69,210 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+class KernelPlan(NamedTuple):
+    """Resolved backend + autotuned block sizes for one codes matmul."""
+    backend: str
+    bm: int
+    bk: int
+    bn: int
+
+    @property
+    def blocks(self) -> tuple[int, int, int]:
+        return (self.bm, self.bk, self.bn)
+
+
+def plan_kernel(backend: str, m: int, k: int, n: int,
+                code_dtype: str = "f32") -> KernelPlan:
+    """resolve_backend + the (M, K, N, dtype)-keyed block autotune table."""
+    dt = jnp.int8 if code_dtype == "int8" else jnp.float32
+    bm, bk, bn = autotune_blocks(m, k, n, dt)
+    return KernelPlan(resolve_backend(backend), bm, bk, bn)
+
+
+# ---------------------------------------------------------------------------
+# Epilogue (unfused form; the fused kernel mirrors this term for term)
+# ---------------------------------------------------------------------------
+def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale):
+    """gain -> optional p-bit readout -> per-row x per-channel rescale.
+
+    acc: (E, M, N) int32 or f32; x_scale: (E, M); w_scale: (E, N).
+    ``out_scale=None`` calibrates the ADC window to max|z| *per expert tile*
+    (each expert is its own analog array; E=1 reproduces the global window).
+    """
+    z = acc.astype(jnp.float32) * gain
+    if out_bits is not None:
+        s = out_scale
+        if s is None:
+            s = jax.lax.stop_gradient(jnp.maximum(jnp.max(
+                jnp.abs(z), axis=(-2, -1), keepdims=True, initial=0.0), 1e-9))
+        levels = float((1 << out_bits) - 1)
+        z = jnp.round(jnp.clip(z / s, -1.0, 1.0) * levels) / levels * s
+    return (z * x_scale[..., :, None]) * w_scale[..., None, :]
+
+
+def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
+                out_scale, backend, interpret, code_dtype, blocks):
+    e, m, k = x_codes.shape
+    n = w_codes.shape[-1]
+    if min(e, m, k, n) == 0:
+        # Empty expert batch / filtered serving batch / zero-width contraction:
+        # zero charge everywhere, and readout(0) * scales == 0 on every path.
+        return jnp.zeros((e, m, n), jnp.float32)
+    if code_dtype == "int8":
+        # Codes are integer-valued with |code| <= 127 by the caller's
+        # contract (p <= 7); the cast is exact and XLA fuses it into the
+        # producer, so the kernel streams 1-byte codes from HBM.
+        xi = x_codes.astype(jnp.int8)
+        wi = w_codes.astype(jnp.int8)
+    else:
+        xi = x_codes.astype(jnp.float32)
+        wi = w_codes.astype(jnp.float32)
+    if blocks is None:
+        blocks = autotune_blocks(m, k, n, xi.dtype)
+    bm, bk, bn = blocks
+
+    if backend == "jnp":
+        acc = jnp.einsum("emk,ekn->emn", xi, wi,
+                         preferred_element_type=acc_dtype_for(xi.dtype))
+        return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale)
+
+    xp, wp = pad_to_blocks(xi, wi, bm, bk, bn)
+    mp, np_ = xp.shape[-2], wp.shape[-1]
+    if out_bits is None or out_scale is not None:
+        # Fixed readout window (or no readout): fully fused epilogue — the
+        # (bm, bn) tile leaves VMEM exactly once, already in model units.
+        xsp = jnp.pad(x_scale, ((0, 0), (0, mp - m)))[..., :, None]
+        wsp = jnp.pad(w_scale, ((0, 0), (0, np_ - n)))[..., None, :]
+        y = tdvmm_fused_kernel(
+            xp, wp, xsp, wsp, gain=gain, out_bits=out_bits,
+            out_scale=out_scale, bm=bm, bk=bk, bn=bn, interpret=interpret)
+        return y[:, :m, :n]
+    # Data-calibrated readout window: needs a global (per-expert) max over
+    # the latch-normalized accumulation — integrate in the kernel, run the
+    # epilogue unfused.
+    acc = tdvmm_matmul_kernel(
+        xp, wp, bm=bm, bk=bk, bn=bn, interpret=interpret)[:, :m, :n]
+    return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale)
+
+
+# ---------------------------------------------------------------------------
+# Shared custom VJP (all backends / dtypes / fusion modes)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+def _tdvmm_core(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
+                out_scale, backend, interpret, code_dtype, blocks):
+    """Differentiable integrate+epilogue on canonical (E, M, K) shapes."""
+    return _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
+                       out_scale, backend, interpret, code_dtype, blocks)
+
+
+def _tdvmm_core_fwd(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
+                    out_scale, backend, interpret, code_dtype, blocks):
+    y = _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
+                    out_scale, backend, interpret, code_dtype, blocks)
+    return y, (x_codes, w_codes, x_scale, w_scale, y)
+
+
+def _tdvmm_core_bwd(gain, out_bits, out_scale, backend, interpret,
+                    code_dtype, blocks, res, g):
+    x_codes, w_codes, x_scale, w_scale, y = res
+    denom = x_scale[..., :, None] * w_scale[..., None, :]
+    # Recover the post-readout latch value z = y / (xs * ws); internal
+    # callers clamp scales >= 1e-6, so the where() only guards direct API
+    # calls with exact-zero scales (whose y, and scale grads, are both 0).
+    z = jnp.where(denom == 0.0, 0.0, y / denom)
+    # Identity through the readout quantizer (STE) and the latch gain:
+    dacc = g * denom * gain
+    xf = x_codes.astype(jnp.float32)
+    wf = w_codes.astype(jnp.float32)
+    gx = jnp.einsum("emn,ekn->emk", dacc, wf,
+                    preferred_element_type=jnp.float32)
+    gw = jnp.einsum("emk,emn->ekn", xf, dacc,
+                    preferred_element_type=jnp.float32)
+    gxs = jnp.sum(g * z * w_scale[..., None, :], axis=-1)
+    gws = jnp.sum(g * z * x_scale[..., :, None], axis=-2)
+    return gx, gw, gxs, gws
+
+
+_tdvmm_core.defvjp(_tdvmm_core_fwd, _tdvmm_core_bwd)
+
+
 def codes_matmul(
-    x_codes: jax.Array, w_codes: jax.Array, backend: str, interpret: bool
+    x_codes: jax.Array, w_codes: jax.Array, backend: str,
+    interpret: bool | None = None, code_dtype: str = "auto",
 ) -> jax.Array:
-    """(M, K) @ (K, N) integer-valued-f32 charge accumulation, padded to the
+    """Raw (.., M, K) @ (.., K, N) charge accumulation as f32, padded to the
     kernel's block multiples and sliced back.  Differentiable on any backend
     (custom VJP = plain matmul cotangents, matching jnp.dot autodiff)."""
-    return _codes_matmul_impl(x_codes, w_codes, backend, interpret)
+    squeeze = x_codes.ndim == 2
+    if squeeze:
+        x_codes, w_codes = x_codes[None], w_codes[None]
+    e, m, _ = x_codes.shape
+    n = w_codes.shape[-1]
+    if interpret is None:
+        interpret = not _on_tpu()
+    if code_dtype == "auto":
+        code_dtype = "int8" if jnp.issubdtype(
+            x_codes.dtype, jnp.integer) else "f32"
+    ones_m = jnp.ones((e, m), jnp.float32)
+    ones_n = jnp.ones((e, n), jnp.float32)
+    acc = _dispatch(x_codes, w_codes, ones_m, ones_n, 1.0, None, None,
+                    resolve_backend(backend), bool(interpret), code_dtype,
+                    None)
+    return acc[0] if squeeze else acc
 
 
-def _codes_matmul_impl(x_codes, w_codes, backend, interpret):
-    if backend == "jnp":
-        return jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
-    m, n = x_codes.shape[0], w_codes.shape[1]
-    xp, wp = pad_to_blocks(x_codes, w_codes)
-    out = tdvmm_matmul_kernel(xp, wp, interpret=interpret)
-    return out[:m, :n]
-
-
-def _codes_matmul_fwd(x_codes, w_codes, backend, interpret):
-    y = _codes_matmul_impl(x_codes, w_codes, backend, interpret)
-    return y, (x_codes, w_codes)
-
-
-def _codes_matmul_bwd(backend, interpret, res, g):
-    x_codes, w_codes = res
-    gx = jnp.dot(g, w_codes.T, preferred_element_type=jnp.float32)
-    gw = jnp.dot(x_codes.T, g, preferred_element_type=jnp.float32)
-    return gx, gw
-
-
-codes_matmul.defvjp(_codes_matmul_fwd, _codes_matmul_bwd)
+def _dispatch(x_codes, w_codes, x_scale, w_scale, gain, out_bits, out_scale,
+              backend, interpret, code_dtype, blocks):
+    """Route int inputs straight to the impl (no float cotangents exist);
+    float inputs go through the shared custom VJP."""
+    if jnp.issubdtype(x_codes.dtype, jnp.integer):
+        return _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain,
+                           out_bits, out_scale, backend, interpret,
+                           code_dtype, blocks)
+    return _tdvmm_core(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
+                       out_scale, backend, interpret, code_dtype, blocks)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("gain", "out_bits", "out_scale", "backend", "interpret"))
+    static_argnames=("gain", "out_bits", "out_scale", "backend", "interpret",
+                     "code_dtype", "block_sizes"))
 def tdvmm_matmul(
-    x_codes: jax.Array,      # (M, K) f32, integer-valued signed time codes
-    w_codes: jax.Array,      # (K, N) f32, integer-valued signed weight codes
-    x_scale: jax.Array,      # (M,) per-row input scales
-    w_scale: jax.Array,      # (N,) per-channel weight scales
+    x_codes: jax.Array,      # (M, K) or (E, M, K) signed time codes
+    w_codes: jax.Array,      # (K, N) or (E, K, N) signed weight codes
+    x_scale: jax.Array,      # (M,) / (E, M) per-row input scales
+    w_scale: jax.Array,      # (N,) / (E, N) per-channel weight scales
     gain: float = 1.0,
     out_bits: int | None = None,
     out_scale: float | None = None,
     backend: str = "auto",
     interpret: bool | None = None,
+    code_dtype: str = "auto",
+    block_sizes: tuple[int, int, int] | None = None,
 ) -> jax.Array:
     """Quantized four-quadrant TD-VMM: codes matmul + readout + scale epilogue.
 
     ``out_scale=None`` calibrates the readout window from the data (§3.1);
-    arbitrary M/K/N are handled by zero-padding to the kernel's block shape.
+    pass the value captured by ``core.layers.calibrate_out_scale`` to skip
+    the per-call max *and* unlock the fused-epilogue kernel on the serving
+    path.  Arbitrary M/K/N are zero-padded to the kernel's block shape;
+    ``block_sizes=None`` consults the autotune table.
     """
     backend = resolve_backend(backend)
     if interpret is None:
         interpret = not _on_tpu()
-    acc = codes_matmul(
-        x_codes.astype(jnp.float32), w_codes.astype(jnp.float32),
-        backend, bool(interpret))
-    z = acc * gain
-    if out_bits is not None:
-        z = quant.readout(z, out_bits, scale=out_scale)
-    return z * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1)
+    squeeze = x_codes.ndim == 2
+    if squeeze:
+        x_codes, w_codes = x_codes[None], w_codes[None]
+    e, m, _ = x_codes.shape
+    n = w_codes.shape[-1]
+    if code_dtype == "auto":
+        code_dtype = "int8" if jnp.issubdtype(
+            x_codes.dtype, jnp.integer) else "f32"
+    x_scale = x_scale.reshape(e, m).astype(jnp.float32)
+    w_scale = w_scale.reshape(e, n).astype(jnp.float32)
+    y = _dispatch(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
+                  out_scale, backend, bool(interpret), code_dtype,
+                  block_sizes)
+    return y[0] if squeeze else y

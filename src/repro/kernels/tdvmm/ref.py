@@ -7,11 +7,18 @@ mirroring ops.tdvmm_matmul stage for stage:
     z       = readout(z, out_bits)                        p-bit ADC (§4.2)
     y[m, n] = z[m, n] * x_scale[m] * w_scale[n]           digital rescale
 
-where xc are signed p-bit time codes (integer-valued floats, the differential
-(+/-) wire pair folded into a sign) and wc are signed weight codes.  The
-readout quantizes the latch-normalized accumulation over the calibrated
-output window — before the per-row/per-channel digital rescale — exactly as
-the shared-counter ADC samples the crossing time.
+where xc are signed p-bit time codes (the differential (+/-) wire pair folded
+into a sign) and wc are signed weight codes.  Codes may arrive as
+integer-valued floats or as int8 (the storage format of the int path); the
+oracle accumulates in int32 for integer inputs — the same exact arithmetic
+the MXU int8 path performs — and in f32 otherwise.  The readout quantizes
+the latch-normalized accumulation over the calibrated output window — before
+the per-row/per-channel digital rescale — exactly as the shared-counter ADC
+samples the crossing time.
+
+Batched (E, M, K) x (E, K, N) expert stacks are supported with per-expert
+scales (E, M) / (E, N); a data-calibrated readout window (out_scale=None) is
+taken per expert tile, since each expert is its own analog array.
 """
 from __future__ import annotations
 
@@ -20,21 +27,29 @@ import jax.numpy as jnp
 
 
 def tdvmm_matmul_ref(
-    x_codes: jax.Array,      # (M, K) float32, integer-valued in [-L, L]
-    w_codes: jax.Array,      # (K, N) float32, integer-valued in [-Lw, Lw]
-    x_scale: jax.Array,      # (M,) or (M, 1)
-    w_scale: jax.Array,      # (N,)
+    x_codes: jax.Array,      # (M, K) or (E, M, K), int8 or integer-valued f32
+    w_codes: jax.Array,      # (K, N) or (E, K, N)
+    x_scale: jax.Array,      # (M,), (M, 1) or (E, M)
+    w_scale: jax.Array,      # (N,) or (E, N)
     gain: float,
     out_bits: int | None = None,
     out_scale: float | None = None,
 ) -> jax.Array:
-    acc = jnp.dot(x_codes, w_codes, preferred_element_type=jnp.float32)
-    z = acc * gain
+    acc_dtype = jnp.int32 if jnp.issubdtype(x_codes.dtype, jnp.integer) \
+        else jnp.float32
+    if x_codes.ndim == 2:
+        acc = jnp.dot(x_codes, w_codes, preferred_element_type=acc_dtype)
+    else:
+        acc = jnp.einsum("emk,ekn->emn", x_codes, w_codes,
+                         preferred_element_type=acc_dtype)
+    z = acc.astype(jnp.float32) * gain
     if out_bits is not None:
         # Deliberately inlined (NOT quant.readout): the oracle must stay
         # independent of the implementation it validates.
         levels = (1 << out_bits) - 1
         s = out_scale if out_scale is not None else jnp.maximum(
-            jnp.max(jnp.abs(z)), 1e-9)
+            jnp.max(jnp.abs(z), axis=(-2, -1), keepdims=True), 1e-9)
         z = jnp.round(jnp.clip(z / s, -1.0, 1.0) * levels) / levels * s
-    return z * x_scale.reshape(-1, 1) * w_scale.reshape(1, -1)
+    xs = x_scale.reshape(z.shape[:-2] + (z.shape[-2], 1))
+    ws = w_scale.reshape(z.shape[:-2] + (1, z.shape[-1]))
+    return (z * xs) * ws

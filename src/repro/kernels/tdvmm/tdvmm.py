@@ -2,12 +2,33 @@
 
 The analog array integrates charge Q[n] = sum_k I[k,n] * on_time[k] — on TPU
 that inner product is the MXU's job.  Blocking: (bm x bk) time-code tiles and
-(bk x bn) current-code tiles stream HBM->VMEM; a (bm x bn) f32 accumulator
-lives in VMEM scratch across the K grid walk (the K axis is the
+(bk x bn) current-code tiles stream HBM->VMEM; a (bm x bn) accumulator lives
+in VMEM scratch across the K grid walk (the K axis is the
 'arbitrary'/sequential grid dim), so partial charges never round-trip to HBM
 — the digital analogue of the capacitor accumulating charge on-node.
 
-MXU alignment: all block dims default to multiples of 128.
+Code dtypes (the paper's signal is a p-bit integer code, Eq. 1-3):
+
+  int8   codes with |code| <= 127 (p <= 7 incl. the default p = 6) stream at
+         1 byte/code — a quarter of the f32 bytes — and take the MXU's
+         int8 x int8 -> int32 path, so charge accumulation is *exact* for any
+         K with |acc| < 2^31 (no 2^24 f32 envelope).
+  f32    integer-valued float codes (p = 8, or noise-perturbed analog
+         currents); exact while |acc| < 2^24.
+
+Fused epilogue: the final K step finishes the (bm, bn) tile *in VMEM* —
+latch gain, optional p-bit shared-counter readout (Eq. 3) over a fixed
+calibrated window, and the per-row x per-channel digital rescale — so the
+output hits HBM exactly once, already in model units.  (Data-calibrated
+readout needs a global max|z| and stays an unfused jnp epilogue; see
+ops.tdvmm_matmul.)
+
+Batched expert grid: a leading E dimension maps (E, M, K) x (E, K, N) MoE
+expert stacks onto grid axis 0 — one analog tile per expert — with per-expert
+scale vectors riding along as (1, bm, 1) / (1, 1, bn) blocks.
+
+MXU alignment: block dims default to multiples of 128; the minor-most tile
+minimums are dtype-dependent (f32 sublane 8, int8 sublane 32, lane 128).
 """
 from __future__ import annotations
 
@@ -23,8 +44,52 @@ from repro.kernels import tpu_compiler_params
 # Default MXU-aligned block shape; pad_to_blocks() aligns arbitrary model
 # shapes to these so the divisibility asserts below never constrain callers.
 BM, BK, BN = 128, 512, 128
-# Mosaic f32 tiling: sublane (second-to-last dim) x lane (last dim) minimums.
-SUBLANE, LANE = 8, 128
+# Mosaic tiling: sublane (second-to-last dim) minimum is dtype-dependent;
+# lane (last dim) is always 128.
+LANE = 128
+_MIN_SUBLANE = {"float32": 8, "bfloat16": 16, "int8": 32}
+
+
+def min_sublane(dtype) -> int:
+    return _MIN_SUBLANE.get(jnp.dtype(dtype).name, 8)
+
+
+# ---------------------------------------------------------------------------
+# Block-size autotune table
+# ---------------------------------------------------------------------------
+# Keyed on the *unpadded* (M, K, N, dtype-name) of the codes matmul; values
+# are (bm, bk, bn).  Entries come from interpret-mode sweeps + MXU sizing
+# arithmetic (int8 tiles carry 4x the codes per VMEM byte, so the K block
+# doubles at equal VMEM budget).  Misses fall back to the dtype heuristic.
+AUTOTUNE_TABLE: dict[tuple[int, int, int, str], tuple[int, int, int]] = {
+    # model-emitted shapes from benchmarks/bench_kernels.py
+    (512, 1024, 4096, "float32"): (128, 512, 256),
+    (512, 1024, 4096, "int8"): (128, 1024, 256),
+    (256, 896, 896, "float32"): (128, 448, 128),
+    (256, 896, 896, "int8"): (128, 896, 128),
+    (512, 2048, 512, "float32"): (128, 512, 128),
+    (512, 2048, 512, "int8"): (128, 1024, 128),
+    # the perceptron case-study shape
+    (8, 128, 64, "float32"): (8, 128, 64),
+    (8, 128, 64, "int8"): (32, 128, 64),
+}
+
+
+def autotune_blocks(m: int, k: int, n: int, dtype=jnp.float32) -> tuple[int, int, int]:
+    """(bm, bk, bn) for a codes matmul: table hit or dtype heuristic.
+
+    The heuristic doubles the K block for int8 (same VMEM bytes as the f32
+    default, half the HBM refills).  Callers must pad with the *same* blocks
+    they launch with (``pad_to_blocks`` takes them), so any return value is
+    launchable.
+    """
+    name = jnp.dtype(dtype).name
+    hit = AUTOTUNE_TABLE.get((m, k, n, name))
+    if hit is not None:
+        return hit
+    if name == "int8":
+        return (BM, 2 * BK, BN)
+    return (BM, BK, BN)
 
 
 def padded_size(size: int, block: int, tile: int) -> int:
@@ -43,8 +108,8 @@ def padded_size(size: int, block: int, tile: int) -> int:
 
 
 def pad_to_blocks(
-    x_codes: jax.Array,      # (M, K)
-    w_codes: jax.Array,      # (K, N)
+    x_codes: jax.Array,      # (..., M, K)
+    w_codes: jax.Array,      # (..., K, N)
     bm: int = BM,
     bk: int = BK,
     bn: int = BN,
@@ -53,60 +118,156 @@ def pad_to_blocks(
 
     A zero time code contributes zero charge (the source never turns on), so
     padding is exact: slice the kernel output back to [:M, :N] and the result
-    is identical to the unpadded product.
+    is identical to the unpadded product.  Tile minimums are dtype-aware
+    (int8 sublane is 32 vs f32's 8); leading batch (expert) dims pass through
+    unpadded — the E grid axis has no tiling constraint.
     """
-    m, k = x_codes.shape
-    _, n = w_codes.shape
-    mp = padded_size(m, bm, SUBLANE)
+    m, k = x_codes.shape[-2], x_codes.shape[-1]
+    n = w_codes.shape[-1]
+    mp = padded_size(m, bm, min_sublane(x_codes.dtype))
+    # K is x's lane (128) and w's sublane (<= 32): LANE covers both.
     kp = padded_size(k, bk, LANE)
     np_ = padded_size(n, bn, LANE)
+    zero = ((0, 0),) * (x_codes.ndim - 2)
     if (mp, kp) != (m, k):
-        x_codes = jnp.pad(x_codes, ((0, mp - m), (0, kp - k)))
+        x_codes = jnp.pad(x_codes, zero + ((0, mp - m), (0, kp - k)))
     if (kp, np_) != (k, n):
-        w_codes = jnp.pad(w_codes, ((0, kp - k), (0, np_ - n)))
+        w_codes = jnp.pad(w_codes, zero + ((0, kp - k), (0, np_ - n)))
     return x_codes, w_codes
 
 
-def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
-    @pl.when(pl.program_id(2) == 0)
+# ---------------------------------------------------------------------------
+# Kernel body (shared by the plain and fused entry points)
+# ---------------------------------------------------------------------------
+def _kernel(*refs, nk: int, acc_dtype, fuse: bool, gain: float,
+            out_bits: int | None, out_scale: float | None):
+    if fuse:
+        x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+
+    @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        x_ref[0], w_ref[0], preferred_element_type=acc_dtype)
 
-    @pl.when(pl.program_id(2) == nk - 1)
+    @pl.when(pl.program_id(3) == nk - 1)
     def _done():
-        o_ref[...] = acc_ref[...]
+        acc = acc_ref[...]
+        if not fuse:
+            o_ref[0] = acc
+            return
+        # Fused epilogue — the (bm, bn) tile is finished in VMEM and written
+        # to HBM exactly once.  The expression mirrors ops._epilogue term for
+        # term so the fused and unfused paths stay bit-for-bit identical.
+        z = acc.astype(jnp.float32) * gain
+        if out_bits is not None:
+            levels = float((1 << out_bits) - 1)
+            z = jnp.round(
+                jnp.clip(z / out_scale, -1.0, 1.0) * levels) / levels * out_scale
+        o_ref[0] = (z * xs_ref[0]) * ws_ref[0]
+
+
+def _grid_call(e, m, k, n, bm, bk, bn, *, acc_dtype, out_dtype, fuse,
+               gain, out_bits, out_scale, interpret):
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    nk = k // bk
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda b, i, j, s: (b, i, s)),
+        pl.BlockSpec((1, bk, bn), lambda b, i, j, s: (b, s, j)),
+    ]
+    if fuse:
+        in_specs += [
+            pl.BlockSpec((1, bm, 1), lambda b, i, j, s: (b, i, 0)),
+            pl.BlockSpec((1, 1, bn), lambda b, i, j, s: (b, 0, j)),
+        ]
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, nk=nk, acc_dtype=acc_dtype, fuse=fuse, gain=gain,
+            out_bits=out_bits, out_scale=out_scale),
+        grid=(e, m // bm, n // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, s: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )
+
+
+def acc_dtype_for(code_dtype) -> jnp.dtype:
+    """Accumulator dtype for a code dtype: int codes accumulate on the MXU
+    int8 path (exact int32); float codes in f32.  Single source of truth for
+    both the Pallas scratch accumulator and the jnp einsum accumulator
+    (ops.py) — they must agree or backend parity breaks."""
+    if jnp.issubdtype(jnp.dtype(code_dtype), jnp.integer):
+        return jnp.dtype(jnp.int32)
+    return jnp.dtype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
 def tdvmm_matmul_kernel(
-    x_codes: jax.Array,      # (M, K) f32, integer-valued signed time codes
-    w_codes: jax.Array,      # (K, N) f32, integer-valued signed weight codes
-    bm: int = 128,
-    bk: int = 512,
-    bn: int = 128,
+    x_codes: jax.Array,      # (M, K) or (E, M, K) signed time codes
+    w_codes: jax.Array,      # (K, N) or (E, K, N) signed weight codes
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
     interpret: bool = False,
 ) -> jax.Array:
-    m, k = x_codes.shape
-    k2, n = w_codes.shape
-    assert k == k2
-    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
-    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
-    nk = k // bk
+    """Raw charge accumulation: int8 codes -> int32 acc, f32 codes -> f32 acc.
 
-    return pl.pallas_call(
-        functools.partial(_kernel, nk=nk),
-        grid=(m // bm, n // bn, nk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
-    )(x_codes, w_codes)
+    2-D inputs run as a single-expert (E=1) batch; 3-D inputs map the leading
+    expert dim onto grid axis 0.
+    """
+    squeeze = x_codes.ndim == 2
+    if squeeze:
+        x_codes, w_codes = x_codes[None], w_codes[None]
+    e, m, k = x_codes.shape
+    e2, k2, n = w_codes.shape
+    assert e == e2 and k == k2, (x_codes.shape, w_codes.shape)
+    acc_dtype = acc_dtype_for(x_codes.dtype)
+    out = _grid_call(
+        e, m, k, n, bm, bk, bn, acc_dtype=acc_dtype, out_dtype=acc_dtype,
+        fuse=False, gain=1.0, out_bits=None, out_scale=None,
+        interpret=interpret)(x_codes, w_codes)
+    return out[0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "gain", "out_bits", "out_scale", "bm", "bk", "bn", "interpret"))
+def tdvmm_fused_kernel(
+    x_codes: jax.Array,      # (E, M, K) signed time codes (int8 or f32)
+    w_codes: jax.Array,      # (E, K, N) signed weight codes
+    x_scale: jax.Array,      # (E, M, 1) f32 per-row input scales
+    w_scale: jax.Array,      # (E, 1, N) f32 per-channel weight scales
+    gain: float = 1.0,
+    out_bits: int | None = None,
+    out_scale: float | None = None,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """Integrate + fused readout epilogue: model-unit f32 (E, M, N) out.
+
+    The latch gain, the optional p-bit readout over the *fixed* window
+    ``out_scale`` (a calibration-time capture — data-calibrated windows need
+    a global max and use the unfused path), and the per-row x per-channel
+    rescale all run on the finished accumulator tile in VMEM; each output
+    tile is written to HBM exactly once.
+    """
+    assert x_codes.ndim == 3, "fused kernel is batched; add an E=1 axis"
+    if out_bits is not None and out_scale is None:
+        raise ValueError("fused readout needs a fixed out_scale window")
+    e, m, k = x_codes.shape
+    n = w_codes.shape[-1]
+    return _grid_call(
+        e, m, k, n, bm, bk, bn, acc_dtype=acc_dtype_for(x_codes.dtype),
+        out_dtype=jnp.float32, fuse=True, gain=gain, out_bits=out_bits,
+        out_scale=out_scale, interpret=interpret,
+    )(x_codes, w_codes, x_scale, w_scale)

@@ -64,18 +64,40 @@ def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
     return max(c, 4)
 
 
-def _expert_ffn(bank, x, cfg: ModelConfig, tp_axis: Optional[str]):
+def _expert_ffn(bank, x, cfg: ModelConfig, tp_axis: Optional[str], key=None):
     """x: (E, C, d) -> (E, C, d).  Hidden dim is TP-sharded when tp_axis given;
     the down-projection partial sums are reduced over tp (in bf16 when the
-    matmul-out knob is set — halves the psum wire bytes)."""
-    pet = common.matmul_out_dtype()
-    kw = {"preferred_element_type": pet} if pet is not None else {}
-    if "w_gate" in bank:
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, bank["w_gate"], **kw))
-        h = h * jnp.einsum("ecd,edf->ecf", x, bank["w_up"], **kw)
+    matmul-out knob is set — halves the psum wire bytes).
+
+    With ``cfg.tdvmm.enabled`` every expert matmul executes through the
+    QuantizedTensor path (core/layers.td_expert_matmul): the expert dim maps
+    onto the TD-VMM kernel's batched grid axis — one analog tile per expert —
+    with int8 code storage and the backend knob honored.  Capacity-padded
+    (ragged) expert rows are all-zero codes and contribute zero charge, so
+    the dispatch buffer's padding stays exact.  ``key`` (train-time) draws
+    independent programming noise per projection when cfg.tdvmm.noise is on.
+    """
+    td = cfg.tdvmm
+    keys = iter(jax.random.split(key, 3)) if key is not None else None
+    if td.enabled:
+        from repro.core import layers as td_layers
+
+        def mm(a, wmat):
+            k = next(keys) if keys is not None else None
+            return td_layers.td_expert_matmul(a, wmat, td, key=k)
     else:
-        h = common.activation(cfg.act, jnp.einsum("ecd,edf->ecf", x, bank["w_up"], **kw))
-    y = jnp.einsum("ecf,efd->ecd", h, bank["w_down"], **kw)
+        pet = common.matmul_out_dtype()
+        kw = {"preferred_element_type": pet} if pet is not None else {}
+
+        def mm(a, wmat):
+            return jnp.einsum("ecd,edf->ecf", a, wmat, **kw)
+
+    if "w_gate" in bank:
+        h = jax.nn.silu(mm(x, bank["w_gate"]))
+        h = h * mm(x, bank["w_up"])
+    else:
+        h = common.activation(cfg.act, mm(x, bank["w_up"]))
+    y = mm(h, bank["w_down"])
     if tp_axis is not None:
         y = jax.lax.psum(y, tp_axis)
     return y
@@ -132,19 +154,20 @@ def _gather_from_buffer(buf, sorted_expert, pos, order, gates, top_k):
     return jnp.sum(per_k * gates[..., None].astype(vals.dtype), axis=1)
 
 
-def _moe_local(params, x_flat, cfg: ModelConfig, tp_axis):
+def _moe_local(params, x_flat, cfg: ModelConfig, tp_axis, key=None):
     """Experts replicated over DP; only collective is the tp psum."""
     m = cfg.moe
     ids, gates, aux = _route(params, x_flat, cfg)
     cap = _capacity(x_flat.shape[0], m.top_k, m.n_experts, m.capacity_factor)
     se, pos, order, tok = _dispatch_indices(ids, m.top_k)
     buf = _scatter_to_buffer(x_flat, se, pos, tok, m.n_experts, cap)
-    out = _expert_ffn(params["experts"], buf, cfg, tp_axis)
+    out = _expert_ffn(params["experts"], buf, cfg, tp_axis, key=key)
     y = _gather_from_buffer(out, se, pos, order, gates, m.top_k)
     return y, aux
 
 
-def _moe_ep(params, x_flat, cfg: ModelConfig, tp_axis, dp_axes, dp_size):
+def _moe_ep(params, x_flat, cfg: ModelConfig, tp_axis, dp_axes, dp_size,
+            key=None):
     """Experts sharded over the DP axes; all_to_all routes tokens to owners."""
     m = cfg.moe
     e_loc = m.n_experts // dp_size
@@ -157,7 +180,7 @@ def _moe_ep(params, x_flat, cfg: ModelConfig, tp_axis, dp_axes, dp_size):
     buf = jax.lax.all_to_all(buf, dp_axes, split_axis=0, concat_axis=0, tiled=False)
     # buf: (dp_src, E_loc, C, d) — tokens from every source shard for my experts
     buf = buf.transpose(1, 0, 2, 3).reshape(e_loc, dp_size * cap, -1)
-    out = _expert_ffn(params["experts"], buf, cfg, tp_axis)
+    out = _expert_ffn(params["experts"], buf, cfg, tp_axis, key=key)
     out = out.reshape(e_loc, dp_size, cap, -1).transpose(1, 0, 2, 3)
     out = jax.lax.all_to_all(out, dp_axes, split_axis=0, concat_axis=0, tiled=False)
     out = out.reshape(m.n_experts, cap, -1)
@@ -166,20 +189,29 @@ def _moe_ep(params, x_flat, cfg: ModelConfig, tp_axis, dp_axes, dp_size):
 
 
 def apply(params, x: jax.Array, cfg: ModelConfig, key=None) -> tuple[jax.Array, dict]:
-    """x: (B, S, d) -> (y, aux_losses)."""
+    """x: (B, S, d) -> (y, aux_losses).  ``key`` enables train-time TD-VMM
+    programming noise on the expert (and shared-expert) matmuls when
+    cfg.tdvmm.noise is set."""
     m = cfg.moe
     b, s, d = x.shape
     mesh = meshctx.get_mesh()
+    # Split once so routed and shared experts draw independent noise; the
+    # routed key is replicated into shard_map (noise must agree across tp
+    # shards of one expert, and experts draw independently via array shape).
+    k_shared = k_routed = None
+    if key is not None and cfg.tdvmm.enabled and cfg.tdvmm.noise:
+        k_shared, k_routed = jax.random.split(key)
     shared_y = 0.0
     if m.n_shared_experts:
         flat = x.reshape(1, b * s, d)
         shared_y = _expert_ffn(
-            {k: v for k, v in params["shared"].items()}, flat, cfg, None
+            {k: v for k, v in params["shared"].items()}, flat, cfg, None,
+            key=k_shared,
         ).reshape(b, s, d)
         # NB: shared-expert tp reduction is handled by GSPMD outside shard_map.
 
     if mesh is None:
-        y, aux = _moe_local(params, x.reshape(-1, d), cfg, None)
+        y, aux = _moe_local(params, x.reshape(-1, d), cfg, None, key=k_routed)
         return y.reshape(b, s, d) + shared_y, aux
 
     dp = meshctx.dp_axes()
@@ -197,21 +229,34 @@ def apply(params, x: jax.Array, cfg: ModelConfig, key=None) -> tuple[jax.Array, 
     }
     router_spec = jax.tree.map(lambda _: P(None, None), params["router"])
 
-    def inner(xb, experts, router):
+    def inner(xb, experts, router, *maybe_key):
         p = {"experts": experts, "router": router}
+        kk = maybe_key[0] if maybe_key else None
         flat = xb.reshape(-1, d)
         if m.impl == "ep":
-            y, aux = _moe_ep(p, flat, cfg, tp, dp, dp_size)
+            if kk is not None:
+                # Each dp shard owns a *different* expert slice: fold the
+                # shard index in so experts draw independent noise.  (Local
+                # mode must NOT fold — experts there are replicated and all
+                # shards need bitwise-identical noise.)
+                for a in dp:
+                    kk = jax.random.fold_in(kk, jax.lax.axis_index(a))
+            y, aux = _moe_ep(p, flat, cfg, tp, dp, dp_size, key=kk)
         else:
-            y, aux = _moe_local(p, flat, cfg, tp)
+            y, aux = _moe_local(p, flat, cfg, tp, key=kk)
         aux = jax.tree.map(lambda v: jax.lax.pmean(v, dp), aux)
         return y.reshape(xb.shape), aux
 
+    in_specs = (batch_spec, expert_spec, router_spec)
+    args = (x, params["experts"], params["router"])
+    if k_routed is not None:
+        in_specs += (P(),)          # noise key: replicated across the mesh
+        args += (k_routed,)
     y, aux = compat.shard_map(
         inner,
         mesh=mesh,
-        in_specs=(batch_spec, expert_spec, router_spec),
+        in_specs=in_specs,
         out_specs=(batch_spec, P()),
         check_vma=False,
-    )(x, params["experts"], params["router"])
+    )(*args)
     return y + shared_y, aux

@@ -13,7 +13,8 @@ from repro.kernels.crossing.ref import crossing_ref
 from repro.kernels.ssd.ref import ssd_naive
 from repro.kernels.ssd.ssd import ssd_kernel
 from repro.kernels.tdvmm.ref import tdvmm_matmul_ref
-from repro.kernels.tdvmm.tdvmm import tdvmm_matmul_kernel
+from repro.kernels.tdvmm.tdvmm import (
+    autotune_blocks, pad_to_blocks, tdvmm_fused_kernel, tdvmm_matmul_kernel)
 from repro.models.ssm import ssd_chunked
 
 
@@ -46,6 +47,91 @@ def test_tdvmm_bit_widths(bits):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-6)
     # integer-exactness: charge sums are exact in f32 up to 2^24
     assert float(jnp.max(jnp.abs(out - jnp.round(out)))) == 0.0
+
+
+@pytest.mark.parametrize("m,k,n,bm,bk,bn", [
+    (128, 256, 128, 128, 128, 128),
+    (256, 1024, 256, 128, 512, 128),
+    (64, 512, 128, 32, 256, 128),
+])
+def test_tdvmm_int8_kernel_exact(m, k, n, bm, bk, bn):
+    """int8 codes -> int32 accumulation: exact vs int64 numpy."""
+    rng = np.random.default_rng(m + n)
+    xq = rng.integers(-127, 128, (m, k), dtype=np.int8)
+    wq = rng.integers(-127, 128, (k, n), dtype=np.int8)
+    out = tdvmm_matmul_kernel(jnp.asarray(xq), jnp.asarray(wq),
+                              bm=bm, bk=bk, bn=bn, interpret=True)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(out), xq.astype(np.int64) @ wq.astype(np.int64))
+
+
+def test_tdvmm_int8_kernel_exact_beyond_f32_envelope():
+    """Saturated codes drive |acc| past 2^24 onto odd values no f32 holds —
+    the int32 path must still be exact."""
+    k = 2048
+    xq = np.full((32, k), 127, np.int8)
+    wq = np.full((k, 128), 127, np.int8)
+    wq[0, 0] = 126
+    exact = xq.astype(np.int64) @ wq.astype(np.int64)
+    assert np.max(exact) > (1 << 24) and int(exact[0, 0]) % 2 == 1
+    out = tdvmm_matmul_kernel(jnp.asarray(xq), jnp.asarray(wq), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), exact)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.float32])
+def test_tdvmm_batched_expert_grid(dtype):
+    """(E, M, K) x (E, K, N) batched grid vs per-expert einsum."""
+    e, m, k, n = 3, 64, 256, 128
+    rng = np.random.default_rng(e)
+    xq = rng.integers(-63, 64, (e, m, k)).astype(dtype)
+    wq = rng.integers(-63, 64, (e, k, n)).astype(dtype)
+    out = tdvmm_matmul_kernel(jnp.asarray(xq), jnp.asarray(wq), interpret=True)
+    exact = np.einsum("emk,ekn->emn", xq.astype(np.int64), wq.astype(np.int64))
+    np.testing.assert_array_equal(np.asarray(out).astype(np.int64), exact)
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.float32])
+def test_tdvmm_fused_kernel_matches_oracle(dtype):
+    """Fused gain+readout+rescale epilogue vs the pure-jnp oracle."""
+    e, m, k, n = 2, 64, 256, 128
+    rng = np.random.default_rng(7)
+    xq = rng.integers(-63, 64, (e, m, k)).astype(dtype)
+    wq = rng.integers(-63, 64, (e, k, n)).astype(dtype)
+    xs = rng.uniform(0.5, 2.0, (e, m)).astype(np.float32)
+    ws = rng.uniform(0.5, 2.0, (e, n)).astype(np.float32)
+    gain, out_bits, out_scale = 1e-4, 6, 0.5
+    got = tdvmm_fused_kernel(
+        jnp.asarray(xq), jnp.asarray(wq),
+        jnp.asarray(xs)[..., :, None], jnp.asarray(ws)[..., None, :],
+        gain=gain, out_bits=out_bits, out_scale=out_scale, interpret=True)
+    assert got.dtype == jnp.float32
+    ref = tdvmm_matmul_ref(jnp.asarray(xq), jnp.asarray(wq), jnp.asarray(xs),
+                           jnp.asarray(ws), gain=gain, out_bits=out_bits,
+                           out_scale=out_scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_autotune_table_and_padding_alignment():
+    """Autotuned blocks are always launchable after pad_to_blocks, and int8
+    padding respects the (32, 128) minimum tile."""
+    for (m, k, n) in [(512, 1024, 4096), (100, 300, 50), (8, 128, 64),
+                      (1, 1, 1)]:
+        for dtype in (jnp.int8, jnp.float32):
+            bm, bk, bn = autotune_blocks(m, k, n, dtype)
+            x = jnp.zeros((m, k), dtype)
+            w = jnp.zeros((k, n), dtype)
+            xp, wp = pad_to_blocks(x, w, bm, bk, bn)
+            mp, kp = xp.shape
+            np_ = wp.shape[1]
+            sub = 32 if dtype == jnp.int8 else 8
+            assert mp % sub == 0 and kp % 128 == 0 and np_ % 128 == 0
+            for dim, blk in [(mp, bm), (kp, bk), (np_, bn)]:
+                assert dim % min(blk, dim) == 0
+    # int8 heuristic doubles the K block at equal VMEM bytes
+    assert autotune_blocks(999, 4096, 999, jnp.int8)[1] == \
+        2 * autotune_blocks(999, 4096, 999, jnp.float32)[1]
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,169 @@
+"""MoE expert matmuls through the QuantizedTensor path.
+
+Contract: with ``cfg.tdvmm.enabled`` every expert einsum in models/moe.py
+executes via core/layers.td_expert_matmul — the batched (E, C, K) x (E, K, N)
+TD-VMM kernel grid, one analog tile per expert — honoring the backend knob
+(jnp and Pallas-interpret bit-for-bit identical on the int8 code path), and
+staying exact under capacity padding (ragged expert batches are all-zero
+code rows = zero charge).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import MoEConfig, ModelConfig, TDVMMLayerConfig
+from repro.core.layers import td_expert_matmul
+from repro.models import moe
+
+
+def _cfg(backend="jnp", **td_kw):
+    return ModelConfig(
+        name="moe-tiny", family="moe", n_layers=1, d_model=32, n_heads=2,
+        n_kv_heads=2, d_ff=64, vocab_size=128, act="silu_glu", dtype="float32",
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff=48),
+        tdvmm=TDVMMLayerConfig(enabled=True, backend=backend, **td_kw))
+
+
+# --------------------------------------------------------------------------
+# td_expert_matmul: the batched layer primitive
+# --------------------------------------------------------------------------
+def test_td_expert_matmul_disabled_is_plain_einsum():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 10, 16))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 8))
+    cfg = TDVMMLayerConfig(enabled=False)
+    np.testing.assert_array_equal(
+        np.asarray(td_expert_matmul(x, w, cfg)),
+        np.asarray(jnp.einsum("eck,ekn->ecn", x, w)))
+
+
+@pytest.mark.parametrize("shape", [(4, 11, 40, 24), (2, 128, 96, 32)])
+def test_td_expert_matmul_backend_parity(shape):
+    e, c, k, n = shape
+    x = jax.random.normal(jax.random.PRNGKey(2), (e, c, k))
+    w = jax.random.normal(jax.random.PRNGKey(3), (e, k, n)) * 0.2
+    cfg = TDVMMLayerConfig(enabled=True, backend="jnp")
+    y_jnp = td_expert_matmul(x, w, cfg)
+    y_pal = td_expert_matmul(x, w, cfg.replace(backend="pallas"))
+    assert y_jnp.shape == (e, c, n)
+    np.testing.assert_array_equal(np.asarray(y_jnp), np.asarray(y_pal))
+
+
+def test_td_expert_matmul_precision_band():
+    """Per-expert ~6-bit TD-VMM error stays in the paper's ~2% band."""
+    e, c, k, n = 3, 16, 128, 24
+    x = jax.random.normal(jax.random.PRNGKey(4), (e, c, k))
+    w = jax.random.normal(jax.random.PRNGKey(5), (e, k, n)) * 0.1
+    exact = jnp.einsum("eck,ekn->ecn", x, w)
+    for backend in ("jnp", "pallas"):
+        y = td_expert_matmul(x, w, TDVMMLayerConfig(enabled=True,
+                                                    backend=backend))
+        rel = float(jnp.max(jnp.abs(y - exact)) / jnp.max(jnp.abs(exact)))
+        assert rel < 0.05, (backend, rel)
+
+
+def test_td_expert_matmul_ragged_and_empty():
+    """Capacity padding: experts with zero assigned tokens (all-zero rows)
+    are exact, and degenerate empty batches don't crash on either backend."""
+    e, c, k, n = 4, 8, 64, 16
+    x = jax.random.normal(jax.random.PRNGKey(6), (e, c, k))
+    # expert 0 fully idle; expert 2 half-filled — the sort-based dispatch
+    # zero-pads exactly like this
+    x = x.at[0].set(0.0)
+    x = x.at[2, 4:].set(0.0)
+    w = jax.random.normal(jax.random.PRNGKey(7), (e, k, n)) * 0.2
+    cfg = TDVMMLayerConfig(enabled=True, backend="jnp")
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        y = td_expert_matmul(x, w, cfg.replace(backend=backend))
+        outs[backend] = np.asarray(y)
+        # zero rows in -> exactly zero rows out (zero codes, zero charge)
+        assert np.all(outs[backend][0] == 0.0)
+        assert np.all(outs[backend][2, 4:] == 0.0)
+    np.testing.assert_array_equal(outs["jnp"], outs["pallas"])
+    # empty capacity / empty expert stack
+    for backend in ("jnp", "pallas"):
+        y0 = td_expert_matmul(jnp.zeros((e, 0, k)), w,
+                              cfg.replace(backend=backend))
+        assert y0.shape == (e, 0, n)
+        y1 = td_expert_matmul(jnp.zeros((0, c, k)), jnp.zeros((0, k, n)),
+                              cfg.replace(backend=backend))
+        assert y1.shape == (0, c, n)
+
+
+def test_td_expert_matmul_gradients_flow():
+    e, c, k, n = 2, 8, 48, 12
+    x = jax.random.normal(jax.random.PRNGKey(8), (e, c, k))
+    w = jax.random.normal(jax.random.PRNGKey(9), (e, k, n)) * 0.2
+
+    def loss(x, w, backend):
+        cfg = TDVMMLayerConfig(enabled=True, backend=backend)
+        return jnp.sum(jnp.square(td_expert_matmul(x, w, cfg)))
+
+    gj = jax.grad(loss, argnums=(0, 1))(x, w, "jnp")
+    gp = jax.grad(loss, argnums=(0, 1))(x, w, "pallas")
+    for g in gj:
+        assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.linalg.norm(g)) > 0
+    for a, b in zip(gj, gp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# full MoE layer: backend knob honored end to end
+# --------------------------------------------------------------------------
+def test_moe_apply_backend_parity():
+    cfg = _cfg("jnp")
+    params = moe.init(jax.random.PRNGKey(10), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 8, cfg.d_model))
+    y_jnp, aux_j = moe.apply(params, x, cfg)
+    y_pal, aux_p = moe.apply(params, x, _cfg("pallas"))
+    assert y_jnp.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(y_jnp), np.asarray(y_pal))
+    np.testing.assert_allclose(float(aux_j["lb_loss"]), float(aux_p["lb_loss"]))
+
+
+def test_moe_apply_quantized_tracks_dense_reference():
+    """6-bit expert FFNs should stay within a loose band of the unquantized
+    MoE output (quantization error compounds over up/gate/down projections)."""
+    cfg = _cfg("jnp")
+    params = moe.init(jax.random.PRNGKey(12), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, 8, cfg.d_model)) * 0.5
+    y_q, _ = moe.apply(params, x, cfg)
+    y_ref, _ = moe.apply(params, x, cfg.replace(tdvmm=TDVMMLayerConfig(
+        enabled=False)))
+    err = float(jnp.linalg.norm(y_q - y_ref) / jnp.maximum(
+        jnp.linalg.norm(y_ref), 1e-9))
+    assert err < 0.25, err
+
+
+def test_moe_apply_noise_key_threads_to_experts():
+    """Train-time programming noise must reach the expert matmuls: with
+    noise=True and a key, outputs differ from the noise-free run (and from a
+    different key), without one, noise is off and results are reproducible."""
+    cfg = _cfg("jnp", noise=True)
+    params = moe.init(jax.random.PRNGKey(16), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(17), (2, 8, cfg.d_model))
+    y_clean, _ = moe.apply(params, x, cfg)
+    y_clean2, _ = moe.apply(params, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y_clean), np.asarray(y_clean2))
+    y_n1, _ = moe.apply(params, x, cfg, key=jax.random.PRNGKey(0))
+    y_n2, _ = moe.apply(params, x, cfg, key=jax.random.PRNGKey(1))
+    assert not np.array_equal(np.asarray(y_n1), np.asarray(y_clean))
+    assert not np.array_equal(np.asarray(y_n1), np.asarray(y_n2))
+    assert bool(jnp.all(jnp.isfinite(y_n1)))
+
+
+def test_moe_apply_with_shared_experts_and_calibration_cache():
+    """Shared experts route through the same batched path; a cached readout
+    window (serving config) keeps the layer functional."""
+    base = _cfg("jnp")
+    cfg = base.replace(moe=MoEConfig(n_experts=4, top_k=2, d_ff=48,
+                                     n_shared_experts=1),
+                       tdvmm=base.tdvmm.replace(out_scale=0.25))
+    params = moe.init(jax.random.PRNGKey(14), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(15), (2, 8, cfg.d_model))
+    y, aux = moe.apply(params, x, cfg)
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))
+    y_pal, _ = moe.apply(params, x, cfg.replace(
+        tdvmm=cfg.tdvmm.replace(backend="pallas")))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_pal))

@@ -64,7 +64,45 @@ def test_quantized_tensor_is_a_pytree():
     out = jax.jit(lambda t: t.dequantize())(qt)
     assert out.shape == (3, 5)
     leaves = jax.tree.leaves(qt)
-    assert len(leaves) == 2  # codes + scale; bits is static metadata
+    assert len(leaves) == 3  # codes + scale + ste; bits is static metadata
+    # a serving-path tensor (no STE companion) drops to 2 leaves
+    bare = quant.QuantizedTensor(
+        codes=qt.codes, scale=qt.scale, bits=qt.bits, ste=None)
+    assert len(jax.tree.leaves(bare)) == 2
+    np.testing.assert_array_equal(
+        np.asarray(bare.dequantize()), np.asarray(qt.dequantize()))
+
+
+def test_int8_storage_and_f32_view():
+    """p <= 7 codes store as int8; view() is the f32 STE companion."""
+    x = jax.random.normal(jax.random.PRNGKey(20), (5, 40)) * 2.0
+    qt = quant.encode_input(x, bits=6)
+    assert qt.codes.dtype == jnp.int8 and qt.ste is not None
+    view = qt.view()
+    assert view.dtype == jnp.float32
+    np.testing.assert_array_equal(
+        np.asarray(view), np.asarray(qt.codes).astype(np.float32))
+    # p = 8 codes span [-255, 255]: int8 can't hold them -> f32 storage
+    qt8 = quant.encode_input(x, bits=8)
+    assert qt8.codes.dtype == jnp.float32 and qt8.ste is None
+    assert float(jnp.max(jnp.abs(qt8.codes))) <= 255
+    # gradients flow through the int8 storage's view (QAT identity)
+    g = jax.grad(lambda x: jnp.sum(quant.encode_input(x, 6).dequantize()))(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g), rtol=1e-5)
+
+
+def test_program_noise_forces_f32_codes():
+    """Noise perturbs codes off the integer grid -> f32 storage, grads kept."""
+    from repro.core.constants import TDVMMSpec
+    w = jax.random.normal(jax.random.PRNGKey(21), (32, 8))
+    qw = quant.program_weights(w, bits=6)
+    assert qw.codes.dtype == jnp.int8
+    qn = quant.program_noise(qw, TDVMMSpec(), jax.random.PRNGKey(0))
+    assert qn.codes.dtype == jnp.float32
+    g = jax.grad(lambda w: jnp.sum(quant.program_noise(
+        quant.program_weights(w, 6), TDVMMSpec(),
+        jax.random.PRNGKey(0)).dequantize()))(w)
+    assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.linalg.norm(g)) > 0
 
 
 # --------------------------------------------------------------------------
@@ -161,8 +199,10 @@ def test_pad_to_blocks_shapes():
     assert float(jnp.sum(xp)) == 300 * 520 and float(jnp.sum(wp)) == 520 * 130
 
 
-def test_accumulator_envelope_warning():
-    """8-bit codes past K ~ 258 leave the f32 integer-exact envelope."""
+def test_accumulator_envelope_warning_dtype_aware():
+    """The 2^24 exactness warning belongs to the f32 fallback only: 8-bit
+    codes (|code| <= 255, can't store int8) past K ~ 258 warn; any
+    int8-eligible width never does, for any K."""
     import warnings as w
     x = jnp.ones((2, 1024))
     wt = jnp.ones((1024, 8))
@@ -171,10 +211,134 @@ def test_accumulator_envelope_warning():
         w.simplefilter("always")
         td_matmul(x, wt, cfg)
     assert any("2^24" in str(c.message) for c in caught)
+    # int8/int32 path: exact for any K -> silent even far past the old
+    # envelope ((2^7-1)^2 * 8192 = 1.3e8 >> 2^24)
+    xl = jnp.ones((2, 8192))
+    wl = jnp.ones((8192, 8))
     with w.catch_warnings(record=True) as caught:
         w.simplefilter("always")
+        td_matmul(xl, wl, cfg.replace(bits=7, weight_bits=7))
         td_matmul(x, wt, cfg.replace(bits=6, weight_bits=6))
     assert not caught
+    # noise forces the f32 fallback (non-integer codes): the same 6-bit
+    # shape that is silent on the int path warns once past 2^24
+    noisy = cfg.replace(bits=6, weight_bits=6, noise=True)
+    with w.catch_warnings(record=True) as caught:
+        w.simplefilter("always")
+        td_matmul(xl, wl, noisy, key=jax.random.PRNGKey(0))
+    assert any("2^24" in str(c.message) for c in caught)
+
+
+def test_int8_backend_parity_beyond_f32_envelope():
+    """int8-code matmul: jnp and pallas bit-for-bit AND exact vs int64 numpy
+    for K deep enough that f32 accumulation would round (|acc| > 2^24)."""
+    m, k, n = 8, 2048, 16
+    # adversarial codes: |acc| = 127*127*2048 - 127 = 33 038 209 (odd, above
+    # 2^24, hence NOT f32-representable) in column 0
+    xc = np.full((m, k), 127, np.int8)
+    wc = np.full((k, n), 127, np.int8)
+    wc[0, 0] = 126
+    exact = xc.astype(np.int64) @ wc.astype(np.int64)
+    assert np.max(np.abs(exact)) > (1 << 24)
+    got = {}
+    for backend in ("jnp", "pallas"):
+        got[backend] = tdvmm_matmul(
+            jnp.asarray(xc), jnp.asarray(wc), jnp.ones((m,)), jnp.ones((n,)),
+            backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(got[backend]), exact.astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(got["jnp"]),
+                                  np.asarray(got["pallas"]))
+
+
+def test_int8_and_f32_code_paths_agree_within_envelope():
+    """Same integer codes through code_dtype='int8' vs 'f32': bit-for-bit
+    while the f32 envelope holds (the int path is a pure storage change)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(22))
+    m, k, n = 33, 300, 40
+    xc = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
+    wc = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+    xs = jnp.ones((m,))
+    ws = jnp.ones((n,))
+    for backend in ("jnp", "pallas"):
+        y_int = tdvmm_matmul(xc, wc, xs, ws, gain=1e-3, out_bits=6,
+                             out_scale=0.5, backend=backend,
+                             code_dtype="int8")
+        y_f32 = tdvmm_matmul(xc, wc, xs, ws, gain=1e-3, out_bits=6,
+                             out_scale=0.5, backend=backend,
+                             code_dtype="f32")
+        np.testing.assert_array_equal(np.asarray(y_int), np.asarray(y_f32))
+
+
+def test_fused_epilogue_matches_unfused_reference():
+    """Fixed-window readout: the pallas fused-epilogue kernel vs the unfused
+    jnp path and the pure-jnp oracle — bit-for-bit on integer codes."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(23))
+    m, k, n = 100, 384, 72
+    xc = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
+    wc = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+    xs = jax.random.uniform(jax.random.PRNGKey(24), (m,), minval=0.5, maxval=2.0)
+    ws = jax.random.uniform(jax.random.PRNGKey(25), (n,), minval=0.5, maxval=2.0)
+    for out_bits, out_scale in [(6, 0.5), (4, 1.25), (None, None)]:
+        args = dict(gain=1e-4, out_bits=out_bits, out_scale=out_scale)
+        ref = tdvmm_matmul_ref(xc, wc, xs, ws, **args)
+        y_fused = tdvmm_matmul(xc, wc, xs, ws, backend="pallas", **args)
+        y_jnp = tdvmm_matmul(xc, wc, xs, ws, backend="jnp", **args)
+        # fused kernel vs unfused jnp epilogue: identical expression, bit
+        # for bit; vs the (un-jitted) oracle only ulp-level jit/eager slack
+        np.testing.assert_array_equal(np.asarray(y_fused), np.asarray(y_jnp))
+        np.testing.assert_allclose(np.asarray(y_fused), np.asarray(ref),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_calibration_cache_out_scale():
+    """calibrate() captures the readout window once; serving with the cached
+    window matches the per-call data calibration on the calibration batch,
+    and stays on the cached grid for new data."""
+    from repro.core.layers import TDVMMLinear, calibrate_out_scale
+    x = jax.random.normal(jax.random.PRNGKey(26), (16, 96))
+    w = jax.random.normal(jax.random.PRNGKey(27), (96, 24)) * 0.1
+    for backend in ("jnp", "pallas"):
+        cfg = TDVMMLayerConfig(enabled=True, backend=backend)
+        s = calibrate_out_scale(x, w, cfg)
+        assert isinstance(s, float) and s > 0
+        cached = cfg.replace(out_scale=s)
+        y_dyn = td_matmul(x, w, cfg)
+        y_fix = td_matmul(x, w, cached)
+        np.testing.assert_allclose(np.asarray(y_fix), np.asarray(y_dyn),
+                                   rtol=1e-6, atol=1e-7)
+        # a fresh batch reuses the frozen window: outputs stay on the cached
+        # p-bit grid (values quantized over s, then rescaled per-row/channel)
+        x2 = jax.random.normal(jax.random.PRNGKey(28), (4, 96)) * 0.3
+        y2 = td_matmul(x2, w, cached)
+        assert y2.shape == (4, 24) and bool(jnp.all(jnp.isfinite(y2)))
+        # TDVMMLinear.calibrate returns the pinned config
+        params = {"w": w}
+        cfg2 = TDVMMLinear.calibrate(params, x, cfg)
+        assert cfg2.out_scale == pytest.approx(s)
+
+
+def test_batched_expert_ops_matches_ref():
+    """(E, M, K) x (E, K, N) batched grid vs the batched oracle, both
+    backends, with per-expert calibrated readout."""
+    ke = jax.random.PRNGKey(29)
+    e, m, k, n = 3, 40, 200, 24
+    kx, kw, ks1, ks2 = jax.random.split(ke, 4)
+    xc = jnp.round(jax.random.uniform(kx, (e, m, k), minval=-63, maxval=63))
+    wc = jnp.round(jax.random.uniform(kw, (e, k, n), minval=-63, maxval=63))
+    xs = jax.random.uniform(ks1, (e, m), minval=0.5, maxval=2.0)
+    ws = jax.random.uniform(ks2, (e, n), minval=0.5, maxval=2.0)
+    for out_scale in (None, 0.5):
+        ref = tdvmm_matmul_ref(xc, wc, xs, ws, gain=1e-4, out_bits=6,
+                               out_scale=out_scale)
+        got = {}
+        for backend in ("jnp", "pallas"):
+            got[backend] = tdvmm_matmul(xc, wc, xs, ws, gain=1e-4, out_bits=6,
+                                        out_scale=out_scale, backend=backend)
+            np.testing.assert_allclose(np.asarray(got[backend]),
+                                       np.asarray(ref), rtol=1e-6, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got["jnp"]),
+                                      np.asarray(got["pallas"]))
 
 
 # --------------------------------------------------------------------------
