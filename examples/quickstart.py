@@ -1,4 +1,4 @@
-"""Quickstart: the time-domain VMM in five steps.
+"""Quickstart: the time-domain VMM in six steps.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -6,14 +6,18 @@
 2. program a weight matrix into current sources (Eq. 5-7),
 3. integrate charge + fire latches (the event-driven simulation),
 4. decode crossing times -> exact normalized dot products (Eq. 1),
-5. drop the same multiplier into a JAX model as a quantized linear layer.
+5. drop the same multiplier into a JAX model as a quantized linear layer,
+6. address a whole LM's analog matmuls with a site plan + calibration.
 """
 import jax
 import jax.numpy as jnp
 
+from repro.configs.base import (
+    ModelConfig, TDVMMLayerConfig, TDVMMPlan, tdvmm_rule)
 from repro.core import currents, encoding, tdcore
 from repro.core.constants import TDVMMSpec
-from repro.core.layers import TDVMMLayerConfig, td_matmul
+from repro.core.layers import td_matmul
+from repro.models import model
 
 spec = TDVMMSpec(bits=6)
 print(f"operating point: p={spec.bits} bits, T={spec.t_window_s*1e9:.0f} ns, "
@@ -53,3 +57,33 @@ w2 = jax.random.uniform(jax.random.PRNGKey(1), (4, 3), minval=-1, maxval=1)
 y_mlp = tdcore.td_mlp_forward(x, w, w2, spec)
 print("\n2-layer time-domain MLP out:", y_mlp,
       "\n(ideal:", tdcore.ideal_mlp(x, w, w2, spec.w_max), ")")
+
+# -- 6. site plans: per-site configs + model-wide calibration -----------------
+# Every analog matmul in a model has a canonical site name (attn.qkv, ffn.in,
+# head, ...).  A TDVMMPlan maps ordered glob rules onto per-site overrides;
+# chain=True declares the paper's time-domain chaining (Fig. 2) — the ffn.in
+# tile's latch output feeds ffn.out directly, skipping one p-bit readout.
+lm = ModelConfig(
+    name="quickstart-lm", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab_size=256, vocab_pad_multiple=16,
+    dtype="float32", remat_policy="none",
+    tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True, backend="jnp"),   # default: 6-bit tiles
+        tdvmm_rule("attn.qkv", bits=5),                 # cheaper projections
+        tdvmm_rule("ffn.in", chain=True),               # analog ffn boundary
+        tdvmm_rule("head", bits=7),                     # precise logits
+    )))
+print("\nresolved TD-VMM site plan:")
+print(lm.resolved_tdvmm_plan.describe())
+
+params = model.init_params(jax.random.PRNGKey(2), lm)
+batch = {"inputs": jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0,
+                                      lm.vocab_size)}
+# one model-wide calibration pass pins every site's readout window (§3.1);
+# serving then skips per-call max|z| and unlocks the fused Pallas epilogue.
+calib = model.calibrate(params, batch, lm)
+print("calibrated windows:",
+      {site: round(float(jnp.max(w)), 4) for site, w in calib.windows.items()})
+caches = model.init_caches(lm, 2, 24)
+logits, caches = model.prefill_step(params, batch, caches, lm, calib=calib)
+print("calibrated prefill logits:", logits.shape)

@@ -3,6 +3,12 @@ continuous-batching-style slot manager (requests of different lengths enter
 and leave the fixed-size decode batch).
 
     PYTHONPATH=src python examples/serve_lm.py
+
+The FFN matmuls run as calibrated TD-VMM tiles via the site-plan API:
+``ffn.*`` sites are addressed with one glob rule, ``ffn.in`` chains into
+``ffn.out`` in the time domain (Fig. 2 — the intermediate p-bit readout
+disappears), and a model-wide calibration pass pins each remaining digital
+site's readout window before the steps are jitted.
 """
 import time
 
@@ -10,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, smoke
+from repro.configs import TDVMMPlan, get_config, smoke, tdvmm_rule
 from repro.models import model
 
 ARCH = "qwen1.5-0.5b"
@@ -19,11 +25,25 @@ MAX_LEN = 64
 
 
 def main():
-    cfg = smoke(get_config(ARCH))
+    cfg = smoke(get_config(ARCH)).replace(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("ffn.*", enabled=True, backend="auto"),
+        tdvmm_rule("ffn.in", chain=True),
+    )))
+    print("TD-VMM plan:")
+    print(cfg.resolved_tdvmm_plan.describe())
     params = model.init_params(jax.random.PRNGKey(0), cfg)
 
-    prefill = jax.jit(lambda p, b, c: model.prefill_step(p, b, c, cfg))
-    decode = jax.jit(lambda p, b, c: model.decode_step(p, b, c, cfg))
+    # model-wide §3.1 window calibration on a representative prompt, pinned
+    # into the jitted steps (fixed windows -> fused readout epilogue).
+    calib_batch = {"inputs": jax.random.randint(
+        jax.random.PRNGKey(1), (BATCH_SLOTS, 16), 0, cfg.vocab_size)}
+    calib = model.calibrate(params, calib_batch, cfg, max_len=MAX_LEN)
+    print("calibrated sites:", calib.sites())
+
+    prefill = jax.jit(lambda p, b, c: model.prefill_step(p, b, c, cfg,
+                                                         calib=calib))
+    decode = jax.jit(lambda p, b, c: model.decode_step(p, b, c, cfg,
+                                                       calib=calib))
 
     # a queue of incoming "requests": (prompt tokens, #tokens to generate)
     rng = np.random.default_rng(0)

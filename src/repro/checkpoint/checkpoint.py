@@ -147,3 +147,34 @@ def restore(tree_like, directory: str | Path, step: Optional[int] = None,
         out.append(arr)
     treedef = jax.tree_util.tree_structure(tree_like)
     return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+# ---------------------------------------------------------------------------
+# TD-VMM calibration state (site-keyed readout windows)
+# ---------------------------------------------------------------------------
+# CalibrationState is a plain pytree (site name -> scalar or (E,) window), so
+# it rides the same atomic/self-validating machinery as params/optimizer
+# state — these wrappers just pin the conventional sub-directory so serving
+# restarts find the windows next to the weights.
+_CALIB_SUBDIR = "calibration"
+
+
+def save_calibration(calib, directory: str | Path, step: int = 0,
+                     keep: int = 3, blocking: bool = True) -> Path:
+    """Persist a ``core.calibration.CalibrationState`` under
+    ``<directory>/calibration/step_XXXXXXXX`` (atomic, checksummed)."""
+    return save(calib, Path(directory) / _CALIB_SUBDIR, step, keep=keep,
+                blocking=blocking)
+
+
+def restore_calibration(calib_like, directory: str | Path,
+                        step: Optional[int] = None):
+    """Restore a CalibrationState saved by ``save_calibration``.
+
+    ``calib_like`` supplies the pytree structure (site names); use the state
+    returned by ``models.model.calibrate`` on the same model config."""
+    return restore(calib_like, Path(directory) / _CALIB_SUBDIR, step=step)
+
+
+def latest_calibration_step(directory: str | Path) -> Optional[int]:
+    return latest_step(Path(directory) / _CALIB_SUBDIR)

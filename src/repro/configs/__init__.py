@@ -8,10 +8,15 @@ from repro.configs.base import (
     SHAPES,
     SSMConfig,
     TDVMMLayerConfig,
+    TDVMMPlan,
+    TDVMMRule,
+    tdvmm_rule,
 )
+from repro.configs.plan import ResolvedPlan, model_sites, resolve_plan
 
 __all__ = [
     "ARCHS", "get_config", "smoke", "ModelConfig", "MoEConfig",
     "OptimizerConfig", "RunConfig", "ShapeConfig", "SHAPES", "SSMConfig",
-    "TDVMMLayerConfig",
+    "TDVMMLayerConfig", "TDVMMPlan", "TDVMMRule", "tdvmm_rule",
+    "ResolvedPlan", "model_sites", "resolve_plan",
 ]

@@ -1,23 +1,37 @@
-"""Config system: model architectures, input shapes, run settings."""
+"""Config system: model architectures, input shapes, run settings.
+
+TD-VMM configuration is **site-addressable**: every analog matmul in a model
+has a canonical site name (``attn.qkv``, ``ffn.in``, ``moe.expert.out``,
+``head``, ...) and a ``TDVMMPlan`` maps ordered glob-pattern rules onto
+per-site ``TDVMMLayerConfig`` overrides.  ``ModelConfig.tdvmm`` survives as
+the plan's default rule — a legacy config with only ``tdvmm`` set resolves
+every site to that one config, bit-for-bit identical to the pre-plan API.
+Resolution (pattern matching, chain validation, the precision report) lives
+in ``repro.configs.plan``.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
+
+# repro.core.constants has no repro-internal imports (and repro.core's
+# __init__ re-exports layer objects lazily), so this does NOT recurse back
+# into this module.
+from repro.core.constants import TDVMMSpec
 
 def pad_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _default_spec():
-    # Deferred: configs must stay importable without pulling in repro.core
-    # (core.layers imports this module for TDVMMLayerConfig).
-    from repro.core.constants import TDVMMSpec
-    return TDVMMSpec()
+# Frozen (hashable) singleton default: resolved site configs key caches and
+# serve as jit-static arguments, so every field must be hashable and two
+# default configs must compare (and hash) equal.
+_DEFAULT_SPEC = TDVMMSpec()
 
 
 @dataclasses.dataclass(frozen=True)
 class TDVMMLayerConfig:
-    """Per-linear TD-VMM settings (consumed by core.layers.td_matmul).
+    """Per-site TD-VMM settings (consumed by core.layers.td_matmul).
 
     The code-and-scale pipeline (core/quant.py) is encode -> program ->
     integrate -> readout; ``backend`` picks who runs the integrate stage:
@@ -37,9 +51,18 @@ class TDVMMLayerConfig:
     agree only to float tolerance.
 
     ``out_scale`` caches a calibration-time readout window (see
-    ``TDVMMLinear.calibrate`` / ``calibrate_out_scale``): serving calls skip
-    the per-call max|z| reduction, and the Pallas backend fuses the whole
-    readout + rescale epilogue into the kernel.
+    ``TDVMMLinear.calibrate`` / ``calibrate_out_scale`` / the model-wide
+    ``models.model.calibrate`` pass): serving calls skip the per-call max|z|
+    reduction, and the Pallas backend fuses the whole readout + rescale
+    epilogue into the kernel.  Expert-batched sites (``moe.expert.*``) may
+    carry an ``(E,)`` tuple — one calibrated window per expert tile.
+
+    ``chain`` declares the paper's time-domain chaining: the site's output
+    stays in the time domain and feeds the adjacent downstream site directly
+    (Fig. 2), dropping the intermediate p-bit readout.  Plan resolution
+    validates the pairing (only adjacent tile pairs like ``ffn.in`` ->
+    ``ffn.out`` can chain) and rewrites the upstream site to
+    ``io_quantize=False``.
     """
     enabled: bool = False
     bits: int = 6                 # time-code (input/output) precision p
@@ -50,13 +73,67 @@ class TDVMMLayerConfig:
     output_calibration: bool = True  # scale weights so outputs fill the [T,2T]
     # window (section 3.1: "slope ... controlled by appropriate scaling of VMM
     # weights"); modeled as a stop-grad per-tensor output gain.
-    out_scale: Optional[float] = None  # cached calibrated readout window
+    out_scale: Optional[float | tuple[float, ...]] = None  # cached calibrated
+    # readout window: scalar, or per-expert (E,) tuple on expert-batched sites
     # (overrides output_calibration's per-call max; captured by calibrate())
     noise: bool = False           # stochastic DIBL + tuning noise (train-time)
-    spec: "object" = dataclasses.field(default_factory=_default_spec)  # TDVMMSpec
+    chain: bool = False           # declared time-domain chain into the
+    # adjacent downstream site (plan-resolved to io_quantize=False upstream)
+    site: str = ""                # canonical site name (set by plan resolution)
+    spec: TDVMMSpec = _DEFAULT_SPEC
 
     def replace(self, **kw) -> "TDVMMLayerConfig":
         return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class TDVMMRule:
+    """One ordered plan rule: sites matching ``pattern`` (fnmatch glob over
+    canonical site names) take the field ``overrides``.  Build with
+    ``tdvmm_rule(pattern, **overrides)``; overrides are stored as a sorted
+    tuple of pairs so rules stay hashable (jit-static / cache-key safe)."""
+    pattern: str
+    overrides: tuple[tuple[str, Any], ...] = ()
+
+
+def tdvmm_rule(pattern: str, **overrides) -> TDVMMRule:
+    """``tdvmm_rule("ffn.*", bits=7, backend="pallas")`` — validated rule."""
+    valid = {f.name for f in dataclasses.fields(TDVMMLayerConfig)} - {"site"}
+    norm = []
+    for name in sorted(overrides):
+        if name not in valid:
+            raise ValueError(
+                f"unknown TDVMMLayerConfig field {name!r} in rule for "
+                f"{pattern!r} (valid: {sorted(valid)})")
+        value = overrides[name]
+        if isinstance(value, (list, tuple)):
+            value = tuple(float(v) for v in value)
+        norm.append((name, value))
+    return TDVMMRule(pattern, tuple(norm))
+
+
+@dataclasses.dataclass(frozen=True)
+class TDVMMPlan:
+    """Site-addressable TD-VMM plan: ordered glob rules over site names.
+
+    Resolution (``repro.configs.plan.resolve_plan``) starts every site from
+    ``default`` (or ``ModelConfig.tdvmm`` when ``default`` is None — the
+    deprecation shim that keeps legacy single-config models working), then
+    applies each matching rule's overrides in order — later rules win, so
+    calibration state can be baked in as appended exact-site rules.
+
+    A rule whose pattern matches no site in the model is legal by default
+    (generic plans like ``ffn.*`` apply across families where some sites
+    don't exist); resolution reports them in ``ResolvedPlan.unmatched`` /
+    ``report()``, and ``strict=True`` turns them into a resolve-time error
+    (catches typos like ``atn.qkv``).
+    """
+    rules: tuple[TDVMMRule, ...] = ()
+    default: Optional[TDVMMLayerConfig] = None
+    strict: bool = False
+
+    def with_rules(self, *rules: TDVMMRule) -> "TDVMMPlan":
+        return dataclasses.replace(self, rules=self.rules + tuple(rules))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,8 +185,26 @@ class ModelConfig:
     dtype: str = "bfloat16"
     vocab_pad_multiple: int = 256
     tdvmm: TDVMMLayerConfig = dataclasses.field(default_factory=TDVMMLayerConfig)
+    # Site-addressable plan; None = legacy shim (every site takes ``tdvmm``).
+    tdvmm_plan: Optional[TDVMMPlan] = None
     remat_policy: str = "minimal"   # none | minimal | full
     scan_layers: bool = True
+
+    def site_tdvmm(self, site: str) -> TDVMMLayerConfig:
+        """Resolved TD-VMM config for one canonical site name.
+
+        Every analog matmul call site asks for its own config here instead of
+        reading the shared ``cfg.tdvmm``; with no plan set this returns
+        ``tdvmm`` itself (tagged with the site name), so legacy configs are
+        unchanged."""
+        from repro.configs import plan as _plan
+        return _plan.site_config(self, site)
+
+    @property
+    def resolved_tdvmm_plan(self):
+        """The concrete site table (``repro.configs.plan.ResolvedPlan``)."""
+        from repro.configs import plan as _plan
+        return _plan.resolve_plan(self)
 
     @property
     def resolved_head_dim(self) -> int:

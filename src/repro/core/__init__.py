@@ -1,5 +1,26 @@
-"""Core time-domain VMM library (the paper's contribution)."""
+"""Core time-domain VMM library (the paper's contribution).
+
+Layer objects (``TDVMMLayerConfig``, ``TDVMMLinear``, ``td_matmul``) are
+re-exported lazily (PEP 562): ``repro.core.layers`` imports
+``repro.configs.base`` for the config types, and ``repro.configs.base`` in
+turn imports ``repro.core.constants`` for ``TDVMMSpec`` — eager re-export
+here would close that loop into a circular import.
+"""
 from repro.core.constants import TDVMMSpec
-from repro.core.layers import TDVMMLayerConfig, TDVMMLinear, td_matmul
 
 __all__ = ["TDVMMSpec", "TDVMMLayerConfig", "TDVMMLinear", "td_matmul"]
+
+_LAZY = {
+    "TDVMMLayerConfig": "repro.core.layers",
+    "TDVMMLinear": "repro.core.layers",
+    "td_matmul": "repro.core.layers",
+}
+
+
+def __getattr__(name: str):
+    target = _LAZY.get(name)
+    if target is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(target), name)

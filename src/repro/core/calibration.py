@@ -1,0 +1,139 @@
+"""Model-wide TD-VMM calibration state.
+
+The §3.1 output-window calibration ("slope ... controlled by appropriate
+scaling of VMM weights") is **model state**, not a frozen config field: each
+site's readout window is captured once on a representative batch and then
+pinned for serving, where it (a) skips the per-call max|z| reduction and
+(b) unlocks the Pallas fused-epilogue kernel (a fixed window is tile-local).
+
+``CalibrationState`` is a pytree — per-site scalar windows, per-expert
+``(E,)`` vector windows for expert-batched sites — so it checkpoints through
+``repro.checkpoint.checkpoint`` like any other state and threads through
+``models.model.prefill_step`` / ``decode_step``.
+
+Capture protocol: ``collect()`` installs a process-wide collector;
+``core.layers.td_matmul`` / ``td_expert_matmul`` then record each site's
+latch-normalized max|z| via ``jax.debug.callback`` (values produced inside
+``lax.scan``-ed layer stacks are tracers — the callback is the supported
+escape hatch, and max-merging is order-independent).  The model-wide pass
+lives in ``models.model.calibrate``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TDVMMPlan, tdvmm_rule
+
+
+@dataclasses.dataclass
+class CalibrationState:
+    """Per-site calibrated readout windows.
+
+    windows: site name -> f32 window; shape ``()`` for plain sites, ``(E,)``
+    for expert-batched sites (one window per expert's analog tile).
+    """
+    windows: dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def sites(self) -> tuple[str, ...]:
+        return tuple(sorted(self.windows))
+
+    @classmethod
+    def from_collected(cls, collected: dict[str, np.ndarray],
+                       floor: float = 1e-9) -> "CalibrationState":
+        return cls(windows={
+            site: jnp.asarray(np.maximum(np.asarray(v, np.float32), floor))
+            for site, v in sorted(collected.items())})
+
+
+jax.tree_util.register_dataclass(
+    CalibrationState, data_fields=["windows"], meta_fields=[])
+
+
+# ---------------------------------------------------------------------------
+# Collector (capture-time side channel)
+# ---------------------------------------------------------------------------
+class _Collector(threading.local):
+    def __init__(self):
+        self.store: Optional[dict[str, np.ndarray]] = None
+
+
+_COLLECTOR = _Collector()
+
+
+def active() -> bool:
+    """True while a ``collect()`` context is installed (trace-time check —
+    the serving fast path pays nothing when no calibration is running)."""
+    return _COLLECTOR.store is not None
+
+
+def record(site: str, z_max: jax.Array) -> None:
+    """Max-merge one site's latch-normalized |z| maximum (scalar or (E,))
+    into the active collector.  No-op without a collector."""
+    store = _COLLECTOR.store
+    if store is None or not site:
+        return
+
+    def _merge(value):
+        # Closes over the dict itself: debug callbacks run on a runtime
+        # thread where the installing thread's local slot is not visible.
+        value = np.asarray(value, np.float32)
+        prev = store.get(site)
+        store[site] = value if prev is None else np.maximum(prev, value)
+
+    jax.debug.callback(_merge, z_max)
+
+
+@contextlib.contextmanager
+def collect() -> Iterator[dict[str, np.ndarray]]:
+    """Install a collector; yields the (mutating) site -> max|z| dict.
+
+    The barrier on exit flushes outstanding debug callbacks so every
+    recorded site is present before the caller reads the dict."""
+    if _COLLECTOR.store is not None:
+        raise RuntimeError("nested calibration collect() is not supported")
+    _COLLECTOR.store = {}
+    try:
+        yield _COLLECTOR.store
+        jax.effects_barrier()
+    finally:
+        _COLLECTOR.store = None
+
+
+# ---------------------------------------------------------------------------
+# Applying captured state to a model config
+# ---------------------------------------------------------------------------
+def _host_window(value) -> float | tuple[float, ...]:
+    arr = np.asarray(value)
+    if arr.ndim == 0:
+        return float(arr)
+    if arr.ndim == 1:
+        return tuple(float(v) for v in arr)
+    raise ValueError(f"calibration window must be scalar or (E,), "
+                     f"got shape {arr.shape}")
+
+
+def apply_calibration(cfg: ModelConfig,
+                      calib: Optional[CalibrationState]) -> ModelConfig:
+    """Bake a CalibrationState into the model's plan.
+
+    Each captured window becomes an appended exact-site rule setting
+    ``out_scale`` — later rules win, so calibration overrides any statically
+    configured window while every other site setting is untouched.  Windows
+    are converted to host floats here (out_scale is a jit-static kernel
+    argument), which requires concrete values: apply before/at trace time,
+    not on traced state.
+    """
+    if calib is None or not calib.windows:
+        return cfg
+    plan = cfg.tdvmm_plan if cfg.tdvmm_plan is not None else TDVMMPlan()
+    rules = tuple(
+        tdvmm_rule(site, out_scale=_host_window(calib.windows[site]))
+        for site in sorted(calib.windows))
+    return cfg.replace(tdvmm_plan=plan.with_rules(*rules))

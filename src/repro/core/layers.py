@@ -101,14 +101,35 @@ def plan_matmul(x_shape, w_shape, cfg: TDVMMLayerConfig,
     return MatmulPlan(batch_shape, m, k, n, kp.backend, code_dtype, kp.blocks)
 
 
-def _readout_args(cfg: TDVMMLayerConfig) -> tuple[Optional[int], Optional[float]]:
+def _readout_args(
+    cfg: TDVMMLayerConfig, n_experts: Optional[int] = None
+) -> tuple[Optional[int], Optional[float | tuple[float, ...]]]:
     """(out_bits, out_scale) for the kernel epilogue.  Priority: a cached
     calibration window (cfg.out_scale) > data calibration (None, §3.1) > the
-    fixed 0.5 raw differential window of a normalized tile."""
+    fixed 0.5 raw differential window of a normalized tile.
+
+    ``cfg.out_scale`` may be an (E,)-tuple of per-expert windows on
+    expert-batched sites; ``n_experts`` validates the pairing (None = a 2-D
+    site, where only a scalar window is meaningful).
+    """
     if not cfg.io_quantize:
         return None, None
     if cfg.out_scale is not None:
-        return cfg.bits, float(cfg.out_scale)
+        s = cfg.out_scale
+        if isinstance(s, tuple):
+            if n_experts is None:
+                if len(s) != 1:
+                    raise ValueError(
+                        f"site {cfg.site or '<unnamed>'}: per-expert "
+                        f"out_scale tuple (len {len(s)}) on a non-batched "
+                        "matmul; expected a scalar window")
+                return cfg.bits, float(s[0])
+            if len(s) != n_experts:
+                raise ValueError(
+                    f"site {cfg.site or '<unnamed>'}: out_scale has "
+                    f"{len(s)} windows for {n_experts} experts")
+            return cfg.bits, tuple(float(v) for v in s)
+        return cfg.bits, float(s)
     return cfg.bits, (None if cfg.output_calibration else 0.5)
 
 
@@ -116,6 +137,25 @@ def _latch_gain(levels_x: int, levels_w: int, k: int) -> float:
     """Latch gain: codes -> normalized differential output z = y+ - y- in
     [-1, 1]: divide out both code ranges and the 2*N_in charge headroom."""
     return 1.0 / (float(levels_x) * float(levels_w) * 2.0 * max(k, 1))
+
+
+def _record_window(cfg: TDVMMLayerConfig, x_view, w_view, backend: str,
+                   code_dtype: str, gain: float, per_tile: bool) -> None:
+    """Calibration capture: when a ``core.calibration`` collector is active
+    and the site has a digital readout boundary, record its latch-normalized
+    max|z| — a scalar, or the per-expert-tile ``(E,)`` vector when
+    ``per_tile`` — exactly the window per-call data calibration would use.
+    Costs one extra codes matmul per site, paid only during the (one-time)
+    calibration pass."""
+    from repro.core import calibration
+    if not calibration.active() or not cfg.io_quantize:
+        return
+    from repro.kernels.tdvmm import ops
+    acc = ops.codes_matmul(x_view, w_view, backend, code_dtype=code_dtype)
+    z = jnp.abs(acc.astype(jnp.float32) * gain)
+    calibration.record(
+        cfg.site,
+        jnp.max(z, axis=((-2, -1) if per_tile else None), initial=0.0))
 
 
 def td_matmul(
@@ -150,6 +190,8 @@ def td_matmul(
     w_scale = jnp.broadcast_to(
         qw.scale.reshape(-1) * (2.0 * plan.k), (plan.n,))
     out_bits, out_scale = _readout_args(cfg)
+    _record_window(cfg, qx.view().reshape(plan.m, plan.k), qw.view(),
+                   plan.backend, plan.code_dtype, gain, per_tile=False)
     y = ops.tdvmm_matmul(
         qx.view().reshape(plan.m, plan.k),
         qw.view(),
@@ -203,7 +245,11 @@ def td_expert_matmul(
     # last dim (not -1) keeps E=0 expert stacks reshapeable.
     w_scale = jnp.broadcast_to(
         qw.scale.reshape(e, qw.scale.shape[-1]) * (2.0 * k), (e, n))
-    out_bits, out_scale = _readout_args(cfg)
+    out_bits, out_scale = _readout_args(cfg, n_experts=e)
+    # Per-expert windows: each expert is its own analog tile, so the
+    # recorded vector is the (E,) per-tile max the epilogue calibrates.
+    _record_window(cfg, qx.view(), qw.view(), kp.backend, code_dtype, gain,
+                   per_tile=True)
     y = ops.tdvmm_matmul(
         qx.view(),
         qw.view(),

@@ -46,6 +46,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.tdvmm.tdvmm import (
     acc_dtype_for, autotune_blocks, pad_to_blocks, tdvmm_fused_kernel,
@@ -98,16 +99,39 @@ def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale):
     acc: (E, M, N) int32 or f32; x_scale: (E, M); w_scale: (E, N).
     ``out_scale=None`` calibrates the ADC window to max|z| *per expert tile*
     (each expert is its own analog array; E=1 reproduces the global window).
+    A tuple ``out_scale`` is an (E,)-vector of fixed per-expert windows —
+    one calibrated readout window per expert's analog tile.
     """
     z = acc.astype(jnp.float32) * gain
+    ws_row = w_scale[..., None, :]
     if out_bits is not None:
+        # Bit-for-bit contract: a calibration-pinned window must reproduce
+        # the per-call data-calibrated window it was captured from, and the
+        # fused Pallas epilogue must match this unfused form exactly.  Two
+        # XLA behaviors break that if window-derived factors enter the graph
+        # as literals: division by a constant strength-reduces into a
+        # 1-ulp-off reciprocal multiply, and constant factors get
+        # reassociated (sunk) through neighboring multiply chains.  So the
+        # window is always a *runtime* value (constants pass through an
+        # optimization_barrier), divisions are explicit, and the post-round
+        # rescale chain ``(q * xs) * (ws * back)`` carries no constants —
+        # matching the fused kernel's association term for term.
         s = out_scale
         if s is None:
             s = jax.lax.stop_gradient(jnp.maximum(jnp.max(
                 jnp.abs(z), axis=(-2, -1), keepdims=True, initial=0.0), 1e-9))
+        elif isinstance(s, tuple):
+            s = jnp.asarray(s, jnp.float32).reshape(-1, 1, 1)
+        else:
+            s = jnp.float32(s)
+        s = jax.lax.optimization_barrier(s.astype(jnp.float32))
         levels = float((1 << out_bits) - 1)
-        z = jnp.round(jnp.clip(z / s, -1.0, 1.0) * levels) / levels * s
-    return (z * x_scale[..., :, None]) * w_scale[..., None, :]
+        inv = jnp.float32(1.0) / s
+        z = jnp.round(jnp.clip(z * inv, -1.0, 1.0) * levels)
+        back = jax.lax.optimization_barrier(
+            s * (np.float32(1.0) / np.float32(levels)))
+        ws_row = ws_row * back
+    return (z * x_scale[..., :, None]) * ws_row
 
 
 def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
@@ -245,7 +269,7 @@ def tdvmm_matmul(
     w_scale: jax.Array,      # (N,) / (E, N) per-channel weight scales
     gain: float = 1.0,
     out_bits: int | None = None,
-    out_scale: float | None = None,
+    out_scale: float | tuple[float, ...] | None = None,
     backend: str = "auto",
     interpret: bool | None = None,
     code_dtype: str = "auto",
@@ -254,9 +278,11 @@ def tdvmm_matmul(
     """Quantized four-quadrant TD-VMM: codes matmul + readout + scale epilogue.
 
     ``out_scale=None`` calibrates the readout window from the data (§3.1);
-    pass the value captured by ``core.layers.calibrate_out_scale`` to skip
-    the per-call max *and* unlock the fused-epilogue kernel on the serving
-    path.  Arbitrary M/K/N are zero-padded to the kernel's block shape;
+    pass the value captured by ``core.layers.calibrate_out_scale`` (or the
+    model-wide calibration pass) to skip the per-call max *and* unlock the
+    fused-epilogue kernel on the serving path.  A tuple is an (E,)-vector of
+    fixed per-expert windows for batched inputs — still static, still fused.
+    Arbitrary M/K/N are zero-padded to the kernel's block shape;
     ``block_sizes=None`` consults the autotune table.
     """
     backend = resolve_backend(backend)
@@ -267,6 +293,10 @@ def tdvmm_matmul(
         x_codes, w_codes = x_codes[None], w_codes[None]
     e, m, _ = x_codes.shape
     n = w_codes.shape[-1]
+    if isinstance(out_scale, tuple) and len(out_scale) != e:
+        raise ValueError(
+            f"out_scale has {len(out_scale)} per-expert windows for "
+            f"E={e} batched tiles")
     if code_dtype == "auto":
         code_dtype = "int8" if jnp.issubdtype(
             x_codes.dtype, jnp.integer) else "f32"

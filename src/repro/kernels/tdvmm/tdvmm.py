@@ -36,6 +36,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -140,8 +141,11 @@ def pad_to_blocks(
 # Kernel body (shared by the plain and fused entry points)
 # ---------------------------------------------------------------------------
 def _kernel(*refs, nk: int, acc_dtype, fuse: bool, gain: float,
-            out_bits: int | None, out_scale: float | None):
-    if fuse:
+            out_bits: int | None, has_window: bool = False):
+    os_ref = ob_ref = None
+    if fuse and has_window:
+        x_ref, w_ref, xs_ref, ws_ref, os_ref, ob_ref, o_ref, acc_ref = refs
+    elif fuse:
         x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref = refs
     else:
         x_ref, w_ref, o_ref, acc_ref = refs
@@ -163,18 +167,31 @@ def _kernel(*refs, nk: int, acc_dtype, fuse: bool, gain: float,
         # to HBM exactly once.  The expression mirrors ops._epilogue term for
         # term so the fused and unfused paths stay bit-for-bit identical.
         z = acc.astype(jnp.float32) * gain
+        ws_row = ws_ref[0]
         if out_bits is not None:
+            # The readout window (and its precomputed back-scale s/levels)
+            # ride along as (1, 1, 1) blocks of (E, 1, 1) operand vectors —
+            # grid axis 0 is the expert axis, so each tile reads its own
+            # analog tile's calibrated window (a scalar window is broadcast
+            # to all E tiles by the caller).  Runtime values + the
+            # constant-free post-round chain ``(q * xs) * (ws * back)``
+            # mirror ops._epilogue term for term, so fused, unfused, and
+            # per-call data-calibrated windows stay bit-for-bit identical
+            # (baked literals would invite XLA strength reduction /
+            # constant reassociation on one side only).
             levels = float((1 << out_bits) - 1)
-            z = jnp.round(
-                jnp.clip(z / out_scale, -1.0, 1.0) * levels) / levels * out_scale
-        o_ref[0] = (z * xs_ref[0]) * ws_ref[0]
+            inv = jnp.float32(1.0) / os_ref[0, 0, 0]
+            z = jnp.round(jnp.clip(z * inv, -1.0, 1.0) * levels)
+            ws_row = ws_row * ob_ref[0, 0, 0]
+        o_ref[0] = (z * xs_ref[0]) * ws_row
 
 
 def _grid_call(e, m, k, n, bm, bk, bn, *, acc_dtype, out_dtype, fuse,
-               gain, out_bits, out_scale, interpret):
+               gain, out_bits, interpret):
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
     nk = k // bk
+    has_window = fuse and out_bits is not None
     in_specs = [
         pl.BlockSpec((1, bm, bk), lambda b, i, j, s: (b, i, s)),
         pl.BlockSpec((1, bk, bn), lambda b, i, j, s: (b, s, j)),
@@ -184,10 +201,15 @@ def _grid_call(e, m, k, n, bm, bk, bn, *, acc_dtype, out_dtype, fuse,
             pl.BlockSpec((1, bm, 1), lambda b, i, j, s: (b, i, 0)),
             pl.BlockSpec((1, 1, bn), lambda b, i, j, s: (b, 0, j)),
         ]
+    if has_window:
+        # (E, 1, 1) per-expert window + back-scale vectors, one (1, 1, 1)
+        # block per tile.
+        in_specs += [pl.BlockSpec((1, 1, 1), lambda b, i, j, s: (b, 0, 0)),
+                     pl.BlockSpec((1, 1, 1), lambda b, i, j, s: (b, 0, 0))]
     return pl.pallas_call(
         functools.partial(
             _kernel, nk=nk, acc_dtype=acc_dtype, fuse=fuse, gain=gain,
-            out_bits=out_bits, out_scale=out_scale),
+            out_bits=out_bits, has_window=has_window),
         grid=(e, m // bm, n // bn, nk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, s: (b, i, j)),
@@ -233,7 +255,7 @@ def tdvmm_matmul_kernel(
     acc_dtype = acc_dtype_for(x_codes.dtype)
     out = _grid_call(
         e, m, k, n, bm, bk, bn, acc_dtype=acc_dtype, out_dtype=acc_dtype,
-        fuse=False, gain=1.0, out_bits=None, out_scale=None,
+        fuse=False, gain=1.0, out_bits=None,
         interpret=interpret)(x_codes, w_codes)
     return out[0] if squeeze else out
 
@@ -247,7 +269,7 @@ def tdvmm_fused_kernel(
     w_scale: jax.Array,      # (E, 1, N) f32 per-channel weight scales
     gain: float = 1.0,
     out_bits: int | None = None,
-    out_scale: float | None = None,
+    out_scale: float | tuple[float, ...] | None = None,
     bm: int = BM,
     bk: int = BK,
     bn: int = BN,
@@ -256,18 +278,35 @@ def tdvmm_fused_kernel(
     """Integrate + fused readout epilogue: model-unit f32 (E, M, N) out.
 
     The latch gain, the optional p-bit readout over the *fixed* window
-    ``out_scale`` (a calibration-time capture — data-calibrated windows need
-    a global max and use the unfused path), and the per-row x per-channel
-    rescale all run on the finished accumulator tile in VMEM; each output
-    tile is written to HBM exactly once.
+    ``out_scale`` (a calibration-time capture; a tuple is an (E,)-vector of
+    per-expert windows, one per tile on grid axis 0 — data-calibrated
+    windows need a global max and use the unfused path), and the per-row x
+    per-channel rescale all run on the finished accumulator tile in VMEM;
+    each output tile is written to HBM exactly once.
     """
     assert x_codes.ndim == 3, "fused kernel is batched; add an E=1 axis"
     if out_bits is not None and out_scale is None:
         raise ValueError("fused readout needs a fixed out_scale window")
     e, m, k = x_codes.shape
     n = w_codes.shape[-1]
+    if isinstance(out_scale, tuple) and len(out_scale) != e:
+        raise ValueError(f"per-expert out_scale: {len(out_scale)} windows "
+                         f"for E={e} tiles")
+    operands = [x_codes, w_codes, x_scale, w_scale]
+    if out_bits is not None:
+        # The window (and its back-scale window/levels) enter the kernel as
+        # runtime (E, 1, 1) operands, never baked literals: constant scales
+        # invite XLA strength-reduction / constant reassociation that would
+        # break bitwise parity with the unfused and per-call paths (see
+        # ops._epilogue).
+        if isinstance(out_scale, tuple):
+            win = jnp.asarray(out_scale, jnp.float32).reshape(e, 1, 1)
+        else:
+            win = jnp.full((e, 1, 1), out_scale, jnp.float32)
+        levels = float((1 << out_bits) - 1)
+        operands += [win, win * (np.float32(1.0) / np.float32(levels))]
     return _grid_call(
         e, m, k, n, bm, bk, bn, acc_dtype=acc_dtype_for(x_codes.dtype),
         out_dtype=jnp.float32, fuse=True, gain=gain, out_bits=out_bits,
-        out_scale=out_scale, interpret=interpret,
-    )(x_codes, w_codes, x_scale, w_scale)
+        interpret=interpret,
+    )(*operands)

@@ -107,4 +107,4 @@ def pp_forward(params, batch_tokens, cfg: ModelConfig, mesh, n_micro: int = 8):
     h = common.rmsnorm(params["ln_f"], h, cfg.norm_eps)
     if cfg.tie_embeddings:
         return h @ params["embed"]["table"].T
-    return common.dense(params["head"], h, cfg.tdvmm)
+    return common.dense(params["head"], h, cfg.site_tdvmm("head"))

@@ -22,8 +22,30 @@ from repro.launch.mesh import axis_info
 from repro.models import model
 
 
-def serve(cfg, batch: int, prompt_len: int, gen: int, mesh=None, seed: int = 0):
+def serve(cfg, batch: int, prompt_len: int, gen: int, mesh=None, seed: int = 0,
+          calibrate: bool = False, calib=None, plan_report: bool = False):
+    """Prefill + decode driver.
+
+    ``calibrate=True`` runs the model-wide §3.1 readout-window pass
+    (models.model.calibrate) on the prompt batch before jitting, then serves
+    with every TD-VMM site's window pinned — no per-call max|z|, fused
+    Pallas epilogue eligible.  Pass a restored ``CalibrationState`` as
+    ``calib`` to skip the capture pass (e.g. from
+    checkpoint.restore_calibration).  ``plan_report`` prints the resolved
+    site table (which boundaries are digital vs time-chained).
+    """
     key = jax.random.PRNGKey(seed)
+    if plan_report:
+        print("[serve] TD-VMM plan:")
+        print(cfg.resolved_tdvmm_plan.describe())
+
+    if cfg.input_mode == "tokens":
+        prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+        step_in = {"inputs": prompts}
+    else:
+        step_in = {"inputs": jax.random.normal(
+            key, (batch, prompt_len, cfg.d_model), jnp.float32)}
+
     if mesh is not None:
         info = axis_info(mesh)
         meshctx.set_mesh(mesh, info["dp_axes"], info["tp_axis"])
@@ -39,24 +61,29 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, mesh=None, seed: int = 0):
             c_sh = sharding.to_named(c_specs, mesh)
             caches = jax.jit(lambda: model.init_caches(cfg, batch, prompt_len + gen),
                              out_shardings=c_sh)()
-            prefill = jax.jit(lambda p, b, c: model.prefill_step(p, b, c, cfg),
-                              donate_argnums=(2,), out_shardings=(None, c_sh))
-            decode = jax.jit(lambda p, b, c: model.decode_step(p, b, c, cfg),
-                             donate_argnums=(2,), out_shardings=(None, c_sh))
+            if calibrate and calib is None:
+                calib = model.calibrate(params, step_in, cfg,
+                                        max_len=prompt_len + gen)
+            prefill = jax.jit(
+                lambda p, b, c: model.prefill_step(p, b, c, cfg, calib=calib),
+                donate_argnums=(2,), out_shardings=(None, c_sh))
+            decode = jax.jit(
+                lambda p, b, c: model.decode_step(p, b, c, cfg, calib=calib),
+                donate_argnums=(2,), out_shardings=(None, c_sh))
     else:
         params = model.init_params(key, cfg)
         caches = model.init_caches(cfg, batch, prompt_len + gen)
-        prefill = jax.jit(lambda p, b, c: model.prefill_step(p, b, c, cfg),
-                          donate_argnums=(2,))
-        decode = jax.jit(lambda p, b, c: model.decode_step(p, b, c, cfg),
-                         donate_argnums=(2,))
-
-    if cfg.input_mode == "tokens":
-        prompts = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
-        step_in = {"inputs": prompts}
-    else:
-        step_in = {"inputs": jax.random.normal(
-            key, (batch, prompt_len, cfg.d_model), jnp.float32)}
+        if calibrate and calib is None:
+            # One eager prefill with the collector installed; the captured
+            # per-site windows are then closed over as jit-static settings.
+            calib = model.calibrate(params, step_in, cfg,
+                                    max_len=prompt_len + gen)
+        prefill = jax.jit(
+            lambda p, b, c: model.prefill_step(p, b, c, cfg, calib=calib),
+            donate_argnums=(2,))
+        decode = jax.jit(
+            lambda p, b, c: model.decode_step(p, b, c, cfg, calib=calib),
+            donate_argnums=(2,))
 
     t0 = time.time()
     logits, caches = prefill(params, step_in, caches)
@@ -82,6 +109,7 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, mesh=None, seed: int = 0):
         "prefill_s": t_prefill,
         "decode_s": t_decode,
         "decode_tok_per_s": batch * (gen - 1) / max(t_decode, 1e-9),
+        "calibration": calib,
     }
 
 
@@ -93,6 +121,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="model-wide TD-VMM readout-window calibration pass "
+                         "before serving (pins every site's ADC window)")
+    ap.add_argument("--plan-report", action="store_true",
+                    help="print the resolved TD-VMM site table")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -100,9 +133,12 @@ def main():
     if args.kv_int8:
         from repro.models import attention
         attention.set_kv_cache_int8(True)
-    out = serve(cfg, args.batch, args.prompt_len, args.gen)
+    out = serve(cfg, args.batch, args.prompt_len, args.gen,
+                calibrate=args.calibrate, plan_report=args.plan_report)
     print(f"[serve] {args.arch} batch={args.batch} prefill={out['prefill_s']:.2f}s "
           f"decode={out['decode_s']:.2f}s ({out['decode_tok_per_s']:.1f} tok/s)")
+    if out["calibration"] is not None:
+        print(f"[serve] calibrated sites: {out['calibration'].sites()}")
     print("[serve] sample:", out["tokens"][0, :12].tolist())
 
 

@@ -259,7 +259,7 @@ def _causal_mask(sq: int, skv: int, offset: int, window: Optional[int]) -> jax.A
 def apply_train(params, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
                 key=None) -> jax.Array:
     """Full-sequence causal (optionally sliding-window) attention."""
-    td = cfg.tdvmm
+    td = cfg.site_tdvmm("attn.qkv")
     hd = cfg.resolved_head_dim
     q = _split_heads(common.dense(params["wq"], x, td, key), cfg.n_heads, hd)
     k = _split_heads(common.dense(params["wk"], x, td, key), cfg.n_kv_heads, hd)
@@ -272,7 +272,8 @@ def apply_train(params, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
     else:
         mask = _causal_mask(s, s, 0, cfg.swa_window)
         out = _attend(q, k, v, mask, cfg)
-    return common.dense_tp_reduce(params["wo"], _merge_heads(out), td, key)
+    return common.dense_tp_reduce(params["wo"], _merge_heads(out),
+                                  cfg.site_tdvmm("attn.out"), key)
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
@@ -292,7 +293,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
 def apply_prefill(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
                   key=None) -> tuple[jax.Array, KVCache]:
     """Process a full prompt, filling the cache (assumes cache.pos == 0)."""
-    td = cfg.tdvmm
+    td = cfg.site_tdvmm("attn.qkv")
     hd = cfg.resolved_head_dim
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
@@ -330,13 +331,15 @@ def apply_prefill(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
             k_sc = jnp.roll(k_sc[:, -size:], shift, axis=1)
             v_sc = jnp.roll(v_sc[:, -size:], shift, axis=1)
     new_cache = KVCache(new_k, new_v, jnp.full((b,), s, jnp.int32), k_sc, v_sc)
-    return common.dense(params["wo"], _merge_heads(out), td, key), new_cache
+    y = common.dense(params["wo"], _merge_heads(out),
+                     cfg.site_tdvmm("attn.out"), key)
+    return y, new_cache
 
 
 def apply_decode(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
                  key=None) -> tuple[jax.Array, KVCache]:
     """One-token decode step.  x: (B, 1, d)."""
-    td = cfg.tdvmm
+    td = cfg.site_tdvmm("attn.qkv")
     hd = cfg.resolved_head_dim
     b = x.shape[0]
     pos = cache.pos                                      # (B,) int32
@@ -375,5 +378,6 @@ def apply_decode(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
         valid = kpos[None, :] <= pos[:, None]
     mask = valid[:, None, None, :]                       # (B, 1, 1, S)
     out = _attend(q, k_read, v_read, mask, cfg)
-    y = common.dense(params["wo"], _merge_heads(out), td, key)
+    y = common.dense(params["wo"], _merge_heads(out),
+                     cfg.site_tdvmm("attn.out"), key)
     return y, KVCache(new_k, new_v, pos + 1, k_sc, v_sc)

@@ -24,10 +24,11 @@ def init(key, cfg: ModelConfig, d_ff: int | None = None, dtype=None):
 
 
 def apply(params, x: jax.Array, cfg: ModelConfig, key=None) -> jax.Array:
-    td = cfg.tdvmm
+    td_in = cfg.site_tdvmm("ffn.in")
     if "w_gate" in params:
-        h = common.activation("silu", common.dense(params["w_gate"], x, td, key))
-        h = h * common.dense(params["w_up"], x, td, key)
+        h = common.activation("silu", common.dense(params["w_gate"], x, td_in, key))
+        h = h * common.dense(params["w_up"], x, td_in, key)
     else:
-        h = common.activation(cfg.act, common.dense(params["w_up"], x, td, key))
-    return common.dense_tp_reduce(params["w_down"], h, td, key)
+        h = common.activation(cfg.act, common.dense(params["w_up"], x, td_in, key))
+    return common.dense_tp_reduce(params["w_down"], h,
+                                  cfg.site_tdvmm("ffn.out"), key)

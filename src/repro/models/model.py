@@ -35,7 +35,7 @@ def _embed(params, batch: dict, cfg: ModelConfig) -> jax.Array:
 def _head(params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.tie_embeddings:
         return x @ params["embed"]["table"].T
-    return common.dense(params["head"], x, cfg.tdvmm)
+    return common.dense(params["head"], x, cfg.site_tdvmm("head"))
 
 
 def forward(params, batch: dict, cfg: ModelConfig, key=None):
@@ -98,8 +98,17 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
     return caches
 
 
-def prefill_step(params, batch: dict, caches: dict, cfg: ModelConfig):
-    """Absorb a prompt.  Returns (logits_last, new_caches)."""
+def prefill_step(params, batch: dict, caches: dict, cfg: ModelConfig,
+                 calib=None):
+    """Absorb a prompt.  Returns (logits_last, new_caches).
+
+    ``calib`` (a ``core.calibration.CalibrationState``) pins each TD-VMM
+    site's readout window: the per-call max|z| reduction disappears and the
+    Pallas fused-epilogue kernel becomes eligible.  Windows are baked in as
+    jit-static site overrides, so pass concrete (non-traced) state — close
+    over it when jitting, don't thread it as a jit argument."""
+    from repro.core.calibration import apply_calibration
+    cfg = apply_calibration(cfg, calib)
     x = _embed(params, batch, cfg)
     b, s = x.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -109,9 +118,13 @@ def prefill_step(params, batch: dict, caches: dict, cfg: ModelConfig):
     return _head(params, x, cfg), new_caches
 
 
-def decode_step(params, batch: dict, caches: dict, cfg: ModelConfig):
+def decode_step(params, batch: dict, caches: dict, cfg: ModelConfig,
+                calib=None):
     """One token for every sequence.  batch['inputs']: (B, 1) (or (B,1,d) for
-    embedding-input archs).  Returns (logits, new_caches)."""
+    embedding-input archs).  Returns (logits, new_caches).  ``calib`` as in
+    ``prefill_step``."""
+    from repro.core.calibration import apply_calibration
+    cfg = apply_calibration(cfg, calib)
     x = _embed(params, batch, cfg)
     b = x.shape[0]
     positions = None  # decode blocks read positions from their caches
@@ -119,3 +132,23 @@ def decode_step(params, batch: dict, caches: dict, cfg: ModelConfig):
                                          caches, positions, embed0=x)
     x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
     return _head(params, x, cfg), new_caches
+
+
+def calibrate(params, batch: dict, cfg: ModelConfig, max_len: int = 0):
+    """Model-wide §3.1 readout-window calibration (one prefill pass).
+
+    Runs ``prefill_step`` over a representative batch with the calibration
+    collector installed: every enabled, digital-boundary TD-VMM site records
+    the max|z| of its latch-normalized accumulation — scalar per site,
+    ``(E,)`` per-expert for expert-batched sites (one window per analog
+    tile; layers scanned into one site max-merge).  Returns the captured
+    ``CalibrationState``; persist it with
+    ``checkpoint.checkpoint.save_calibration`` and hand it back to
+    ``prefill_step`` / ``decode_step`` / ``launch.serve`` for serving.
+    """
+    from repro.core import calibration
+    b, s = batch["inputs"].shape[:2]
+    caches = init_caches(cfg, b, max_len or s)
+    with calibration.collect() as collected:
+        prefill_step(params, batch, caches, cfg)
+    return calibration.CalibrationState.from_collected(collected)

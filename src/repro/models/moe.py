@@ -64,40 +64,43 @@ def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
     return max(c, 4)
 
 
-def _expert_ffn(bank, x, cfg: ModelConfig, tp_axis: Optional[str], key=None):
+def _expert_ffn(bank, x, cfg: ModelConfig, tp_axis: Optional[str], key=None,
+                site_prefix: str = "moe.expert"):
     """x: (E, C, d) -> (E, C, d).  Hidden dim is TP-sharded when tp_axis given;
     the down-projection partial sums are reduced over tp (in bf16 when the
     matmul-out knob is set — halves the psum wire bytes).
 
-    With ``cfg.tdvmm.enabled`` every expert matmul executes through the
-    QuantizedTensor path (core/layers.td_expert_matmul): the expert dim maps
-    onto the TD-VMM kernel's batched grid axis — one analog tile per expert —
-    with int8 code storage and the backend knob honored.  Capacity-padded
-    (ragged) expert rows are all-zero codes and contribute zero charge, so
-    the dispatch buffer's padding stays exact.  ``key`` (train-time) draws
-    independent programming noise per projection when cfg.tdvmm.noise is on.
+    The up/gate projections resolve the ``<site_prefix>.in`` TD-VMM site and
+    the down projection ``<site_prefix>.out`` (routed experts are
+    ``moe.expert.*``, always-on shared experts ``moe.shared.*``).  With a
+    site enabled, its matmul executes through the QuantizedTensor path
+    (core/layers.td_expert_matmul): the expert dim maps onto the TD-VMM
+    kernel's batched grid axis — one analog tile per expert — with int8 code
+    storage, the backend knob, and (when calibrated) a per-expert
+    (E,)-vector readout window honored.  Capacity-padded (ragged) expert
+    rows are all-zero codes and contribute zero charge, so the dispatch
+    buffer's padding stays exact.  ``key`` (train-time) draws independent
+    programming noise per projection when the site's noise flag is on.
     """
-    td = cfg.tdvmm
+    td_in = cfg.site_tdvmm(site_prefix + ".in")
+    td_out = cfg.site_tdvmm(site_prefix + ".out")
     keys = iter(jax.random.split(key, 3)) if key is not None else None
-    if td.enabled:
-        from repro.core import layers as td_layers
+    pet = common.matmul_out_dtype()
+    kw = {"preferred_element_type": pet} if pet is not None else {}
 
-        def mm(a, wmat):
+    def mm(a, wmat, td):
+        if td.enabled:
+            from repro.core import layers as td_layers
             k = next(keys) if keys is not None else None
             return td_layers.td_expert_matmul(a, wmat, td, key=k)
-    else:
-        pet = common.matmul_out_dtype()
-        kw = {"preferred_element_type": pet} if pet is not None else {}
-
-        def mm(a, wmat):
-            return jnp.einsum("ecd,edf->ecf", a, wmat, **kw)
+        return jnp.einsum("ecd,edf->ecf", a, wmat, **kw)
 
     if "w_gate" in bank:
-        h = jax.nn.silu(mm(x, bank["w_gate"]))
-        h = h * mm(x, bank["w_up"])
+        h = jax.nn.silu(mm(x, bank["w_gate"], td_in))
+        h = h * mm(x, bank["w_up"], td_in)
     else:
-        h = common.activation(cfg.act, mm(x, bank["w_up"]))
-    y = mm(h, bank["w_down"])
+        h = common.activation(cfg.act, mm(x, bank["w_up"], td_in))
+    y = mm(h, bank["w_down"], td_out)
     if tp_axis is not None:
         y = jax.lax.psum(y, tp_axis)
     return y
@@ -190,23 +193,29 @@ def _moe_ep(params, x_flat, cfg: ModelConfig, tp_axis, dp_axes, dp_size,
 
 def apply(params, x: jax.Array, cfg: ModelConfig, key=None) -> tuple[jax.Array, dict]:
     """x: (B, S, d) -> (y, aux_losses).  ``key`` enables train-time TD-VMM
-    programming noise on the expert (and shared-expert) matmuls when
-    cfg.tdvmm.noise is set."""
+    programming noise on the expert (and shared-expert) matmuls when the
+    resolved ``moe.expert.*`` / ``moe.shared.*`` site configs set noise."""
     m = cfg.moe
     b, s, d = x.shape
     mesh = meshctx.get_mesh()
+
+    def _noisy(prefix):
+        return any(td.enabled and td.noise for td in
+                   (cfg.site_tdvmm(prefix + ".in"),
+                    cfg.site_tdvmm(prefix + ".out")))
+
     # Split once so routed and shared experts draw independent noise; the
     # routed key is replicated into shard_map (noise must agree across tp
     # shards of one expert, and experts draw independently via array shape).
     k_shared = k_routed = None
-    if key is not None and cfg.tdvmm.enabled and cfg.tdvmm.noise:
+    if key is not None and (_noisy("moe.expert") or _noisy("moe.shared")):
         k_shared, k_routed = jax.random.split(key)
     shared_y = 0.0
     if m.n_shared_experts:
         flat = x.reshape(1, b * s, d)
         shared_y = _expert_ffn(
             {k: v for k, v in params["shared"].items()}, flat, cfg, None,
-            key=k_shared,
+            key=k_shared, site_prefix="moe.shared",
         ).reshape(b, s, d)
         # NB: shared-expert tp reduction is handled by GSPMD outside shard_map.
 

@@ -181,7 +181,7 @@ def ssd_decode_step(state, x, dt, a_log, b, c):
 
 
 def _project(params, u, cfg: ModelConfig, key):
-    td = cfg.tdvmm
+    td = cfg.site_tdvmm("ssm.in_proj")
     z = common.dense(params["wz"], u, td, key)
     xc = common.dense(params["wx"], u, td, key)
     bc = common.dense(params["wB"], u, td, key)
@@ -208,7 +208,7 @@ def apply_train(params, u: jax.Array, cfg: ModelConfig, key=None) -> jax.Array:
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(bsz, L, d_inner)
     y = common.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    return common.dense(params["wo"], y, cfg.tdvmm, key)
+    return common.dense(params["wo"], y, cfg.site_tdvmm("ssm.out"), key)
 
 
 def init_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
@@ -239,7 +239,7 @@ def apply_prefill(params, u: jax.Array, cfg: ModelConfig, cache: SSMCache,
     y = y + params["D"].astype(y.dtype)[None, None, :, None] * xh
     y = y.reshape(bsz, L, d_inner)
     y = common.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    out = common.dense(params["wo"], y, cfg.tdvmm, key)
+    out = common.dense(params["wo"], y, cfg.site_tdvmm("ssm.out"), key)
     return out, SSMCache(conv_ctx, state, jnp.full((bsz,), L, jnp.int32))
 
 
@@ -262,5 +262,5 @@ def apply_decode(params, u: jax.Array, cfg: ModelConfig, cache: SSMCache,
     y = y + params["D"].astype(y.dtype)[None, :, None] * xh
     y = y.reshape(bsz, 1, d_inner)
     y = common.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    out = common.dense(params["wo"], y, cfg.tdvmm, key)
+    out = common.dense(params["wo"], y, cfg.site_tdvmm("ssm.out"), key)
     return out, SSMCache(conv_ctx, state, cache.pos + 1)

@@ -207,7 +207,8 @@ def apply(params, x: jax.Array, cfg: ModelConfig, mode: str,
                 if cfg.hybrid_concat_embed and embed0 is not None:
                     h_in = common.dense(
                         params["fuse"],
-                        jnp.concatenate([x, embed0], axis=-1), cfg.tdvmm, key)
+                        jnp.concatenate([x, embed0], axis=-1),
+                        cfg.site_tdvmm("hybrid.fuse"), key)
                 sc = None if shared_cache is None else jax.tree.map(
                     lambda a: a[g], shared_cache)
                 x, sc_new, _ = attn_ffn_block(

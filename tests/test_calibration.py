@@ -1,0 +1,182 @@
+"""Model-wide TD-VMM calibration: capture, serving parity, persistence.
+
+Contract under test:
+  * ``models.model.calibrate`` captures per-site scalar windows and
+    per-expert ``(E,)`` vector windows in one prefill pass;
+  * calibrated decode is bit-for-bit identical to per-call
+    ``output_calibration`` when the captured window equals the per-call one
+    (single-matmul sites, one layer — the window IS the per-call max);
+  * ``CalibrationState`` checkpoint round-trips (scalar + ``(E,)`` leaves)
+    through checkpoint/checkpoint.py;
+  * per-expert ``(E,)`` windows reach ``td_expert_matmul``'s fused epilogue
+    (jnp and Pallas bit-for-bit).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.configs.base import (
+    ModelConfig, MoEConfig, TDVMMLayerConfig, TDVMMPlan, tdvmm_rule)
+from repro.core import calibration
+from repro.core.calibration import CalibrationState, apply_calibration
+from repro.core.layers import td_expert_matmul
+from repro.models import model
+
+
+def _cfg(**kw):
+    base = dict(name="calib-test", family="dense", n_layers=1, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                vocab_pad_multiple=16, dtype="float32", remat_policy="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _batch(cfg, b=2, s=8, seed=0):
+    return {"inputs": jax.random.randint(
+        jax.random.PRNGKey(seed), (b, s), 0, cfg.vocab_size)}
+
+
+def test_calibrate_captures_scalar_and_expert_windows():
+    cfg = _cfg(family="moe", moe=MoEConfig(n_experts=4, top_k=2, d_ff=32),
+               tdvmm_plan=TDVMMPlan(rules=(
+                   tdvmm_rule("*", enabled=True, backend="jnp"),)))
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    calib = model.calibrate(params, _batch(cfg), cfg)
+    assert calib.sites() == ("attn.out", "attn.qkv", "head",
+                             "moe.expert.in", "moe.expert.out")
+    for site, w in calib.windows.items():
+        expected = (4,) if site.startswith("moe.expert") else ()
+        assert w.shape == expected, (site, w.shape)
+        assert bool(jnp.all(w > 0.0))
+
+
+def test_calibrate_skips_chained_and_disabled_sites():
+    cfg = _cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("ffn.*", enabled=True, backend="jnp"),
+        tdvmm_rule("ffn.in", chain=True))))
+    params = model.init_params(jax.random.PRNGKey(1), cfg)
+    calib = model.calibrate(params, _batch(cfg), cfg)
+    # ffn.in is analog (chained: no readout boundary to calibrate); attn and
+    # head have TD-VMM off entirely.
+    assert calib.sites() == ("ffn.out",)
+
+
+def test_apply_calibration_bakes_site_windows():
+    cfg = _cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True, backend="jnp"),)))
+    calib = CalibrationState(windows={
+        "head": jnp.float32(0.25),
+        "moe.expert.in": jnp.asarray([0.5, 0.125], jnp.float32)})
+    baked = apply_calibration(cfg, calib)
+    assert baked.site_tdvmm("head").out_scale == 0.25
+    assert baked.site_tdvmm("moe.expert.in").out_scale == (0.5, 0.125)
+    assert baked.site_tdvmm("ffn.in").out_scale is None      # untouched
+    assert apply_calibration(cfg, None) is cfg
+
+
+def test_calibrated_decode_bit_for_bit_with_per_call_window():
+    """Serve-path parity: when the pinned window equals the window per-call
+    ``output_calibration`` would compute (single-matmul sites, one layer,
+    windows captured on the very decode step under test), calibrated decode
+    is bit-for-bit identical to the uncalibrated path."""
+    # ffn.out and head are single-matmul sites: one td_matmul call per step,
+    # so the captured site max IS the per-call data-calibrated window.
+    cfg = _cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("ffn.out", enabled=True, backend="jnp"),
+        tdvmm_rule("head", enabled=True, backend="jnp"))))
+    params = model.init_params(jax.random.PRNGKey(2), cfg)
+    caches = model.init_caches(cfg, 2, 16)
+    _, caches = model.prefill_step(params, _batch(cfg), caches, cfg)
+    tok = {"inputs": jnp.full((2, 1), 3, jnp.int32)}
+
+    with calibration.collect() as col:
+        ref, _ = model.decode_step(params, tok, caches, cfg)
+    calib = CalibrationState.from_collected(col)
+    assert calib.sites() == ("ffn.out", "head")
+
+    got, _ = model.decode_step(params, tok, caches, cfg, calib=calib)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    # and prefill over the capture batch matches the same way
+    with calibration.collect() as col2:
+        pref, _ = model.prefill_step(
+            params, _batch(cfg), model.init_caches(cfg, 2, 16), cfg)
+    calib2 = CalibrationState.from_collected(col2)
+    pgot, _ = model.prefill_step(
+        params, _batch(cfg), model.init_caches(cfg, 2, 16), cfg,
+        calib=calib2)
+    np.testing.assert_array_equal(np.asarray(pref), np.asarray(pgot))
+
+
+def test_calibrated_decode_runs_under_jit_closure():
+    cfg = _cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True, backend="jnp"),)))
+    params = model.init_params(jax.random.PRNGKey(3), cfg)
+    calib = model.calibrate(params, _batch(cfg), cfg, max_len=16)
+    caches = model.init_caches(cfg, 2, 16)
+    prefill = jax.jit(
+        lambda p, b, c: model.prefill_step(p, b, c, cfg, calib=calib))
+    decode = jax.jit(
+        lambda p, b, c: model.decode_step(p, b, c, cfg, calib=calib))
+    logits, caches = prefill(params, _batch(cfg), caches)
+    logits, _ = decode(params, {"inputs": jnp.zeros((2, 1), jnp.int32)}, caches)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_expert_vector_window_matches_per_call_calibration():
+    """Satellite: td_expert_matmul with a captured (E,)-vector out_scale is
+    bit-for-bit the per-call (per-expert-tile) data calibration, on both
+    backends."""
+    e, c, k, n = 3, 8, 48, 16
+    x = jax.random.normal(jax.random.PRNGKey(4), (e, c, k))
+    w = jax.random.normal(jax.random.PRNGKey(5), (e, k, n)) * 0.2
+    base = TDVMMLayerConfig(enabled=True, backend="jnp",
+                            site="moe.expert.in")
+    with calibration.collect() as col:
+        ref = td_expert_matmul(x, w, base)       # per-call per-expert window
+    windows = tuple(float(v) for v in col["moe.expert.in"])
+    assert len(windows) == e
+    for backend in ("jnp", "pallas"):
+        got = td_expert_matmul(
+            x, w, base.replace(backend=backend, out_scale=windows))
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_expert_window_length_mismatch_raises():
+    x = jnp.ones((3, 4, 32))
+    w = jnp.ones((3, 32, 8))
+    cfg = TDVMMLayerConfig(enabled=True, backend="jnp", out_scale=(0.5, 0.5))
+    with pytest.raises(ValueError, match="windows for 3 experts"):
+        td_expert_matmul(x, w, cfg)
+    from repro.core.layers import td_matmul
+    with pytest.raises(ValueError, match="per-expert"):
+        td_matmul(jnp.ones((4, 32)), w[0], cfg)
+
+
+def test_calibration_state_checkpoint_roundtrip(tmp_path):
+    calib = CalibrationState(windows={
+        "attn.qkv": jnp.float32(0.75),
+        "ffn.out": jnp.float32(0.125),
+        "moe.expert.in": jnp.asarray([0.5, 0.25, 0.125, 1.0], jnp.float32),
+    })
+    checkpoint.save_calibration(calib, tmp_path, step=7)
+    assert checkpoint.latest_calibration_step(tmp_path) == 7
+    restored, step = checkpoint.restore_calibration(calib, tmp_path)
+    assert step == 7
+    assert isinstance(restored, CalibrationState)
+    assert restored.sites() == calib.sites()
+    for site in calib.windows:
+        np.testing.assert_array_equal(
+            np.asarray(calib.windows[site]), np.asarray(restored.windows[site]))
+    # restored state is directly servable: bake it into a config
+    cfg = _cfg(family="moe", moe=MoEConfig(n_experts=4, top_k=2, d_ff=32))
+    baked = apply_calibration(cfg, restored)
+    assert baked.site_tdvmm("moe.expert.in").out_scale == (0.5, 0.25, 0.125, 1.0)
+
+
+def test_nested_collect_rejected():
+    with calibration.collect():
+        with pytest.raises(RuntimeError, match="nested"):
+            with calibration.collect():
+                pass

@@ -1,0 +1,235 @@
+"""Site-addressable TD-VMM plans: resolution, per-site settings, the legacy
+single-config shim, and declared time-domain chaining.
+
+Contract under test (ISSUE 3 acceptance criteria):
+  * a plan giving different bits/backend/out_scale to ``attn.qkv``,
+    ``ffn.*`` and ``head`` resolves and runs all three sites with their own
+    settings;
+  * legacy ``ModelConfig.tdvmm``-only configs resolve every site to that
+    config and produce bit-identical outputs to an explicit plan carrying
+    the same default (the deprecation shim);
+  * ``chain=True`` on ``ffn.in`` drops the intermediate p-bit readout
+    (``io_quantize=False`` upstream, validated at resolve time).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import model_sites, resolve_plan
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, TDVMMLayerConfig, TDVMMPlan,
+    tdvmm_rule)
+from repro.core import calibration
+from repro.models import model
+
+
+def _dense_cfg(**kw):
+    base = dict(name="plan-test", family="dense", n_layers=1, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                vocab_pad_multiple=16, dtype="float32", remat_policy="none")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _batch(cfg, b=2, s=8, seed=0):
+    return {"inputs": jax.random.randint(
+        jax.random.PRNGKey(seed), (b, s), 0, cfg.vocab_size)}
+
+
+# --------------------------------------------------------------------------
+# Site naming + config hygiene
+# --------------------------------------------------------------------------
+def test_model_sites_by_family():
+    assert model_sites(_dense_cfg()) == (
+        "attn.qkv", "attn.out", "ffn.in", "ffn.out", "head")
+    assert "head" not in model_sites(_dense_cfg(tie_embeddings=True))
+    moe = _dense_cfg(family="moe", moe=MoEConfig(
+        n_experts=4, top_k=2, d_ff=32, n_shared_experts=1, first_k_dense=1))
+    assert model_sites(moe) == (
+        "attn.qkv", "attn.out", "ffn.in", "ffn.out",
+        "moe.expert.in", "moe.expert.out", "moe.shared.in", "moe.shared.out",
+        "head")
+    ssm = _dense_cfg(family="ssm", ssm=SSMConfig(d_state=16, head_dim=16))
+    assert model_sites(ssm) == ("ssm.in_proj", "ssm.out", "head")
+    hyb = _dense_cfg(family="hybrid", ssm=SSMConfig(d_state=16, head_dim=16),
+                     hybrid_attn_every=2, hybrid_concat_embed=True)
+    assert model_sites(hyb) == (
+        "ssm.in_proj", "ssm.out", "attn.qkv", "attn.out", "ffn.in",
+        "ffn.out", "hybrid.fuse", "head")
+
+
+def test_layer_config_hashable_and_jit_static():
+    """Satellite: TDVMMSpec is a frozen, hashable field — resolved site
+    configs key caches and pass as jit-static arguments."""
+    a, b = TDVMMLayerConfig(), TDVMMLayerConfig()
+    assert a == b and hash(a) == hash(b)
+    assert {a: 1}[b] == 1          # usable as a dict/cache key
+
+    f = jax.jit(lambda x, cfg: x * cfg.bits, static_argnums=1)
+    assert float(f(jnp.float32(2.0), a)) == 12.0
+    # per-expert window tuples stay hashable too
+    assert hash(a.replace(out_scale=(0.5, 0.25))) is not None
+
+
+def test_rule_validation_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown TDVMMLayerConfig field"):
+        tdvmm_rule("ffn.*", bitz=7)
+
+
+# --------------------------------------------------------------------------
+# Per-site settings (acceptance criterion 1)
+# --------------------------------------------------------------------------
+def test_plan_resolves_and_runs_per_site_settings():
+    plan = TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True, backend="jnp"),
+        tdvmm_rule("attn.qkv", bits=5),
+        tdvmm_rule("ffn.*", bits=7, backend="pallas"),
+        tdvmm_rule("head", bits=4, out_scale=0.3),
+    ))
+    cfg = _dense_cfg(tdvmm_plan=plan)
+    rp = resolve_plan(cfg)
+    assert rp["attn.qkv"].bits == 5 and rp["attn.qkv"].backend == "jnp"
+    assert rp["ffn.in"].bits == 7 and rp["ffn.in"].backend == "pallas"
+    assert rp["ffn.out"].bits == 7 and rp["ffn.out"].backend == "pallas"
+    assert rp["head"].bits == 4 and rp["head"].out_scale == 0.3
+    assert rp["attn.out"].bits == 6            # default rule only
+    assert all(c.site == s for s, c in rp.sites)
+
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, _ = model.forward(params, batch, cfg)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # every site actually executed with its own config: the calibration
+    # collector is keyed by resolved site name, and each site's window
+    # reflects its own code grid — changing one site's bits changes only
+    # that site's codes.
+    caches = model.init_caches(cfg, 2, 8)
+    with calibration.collect() as col:
+        model.prefill_step(params, batch, caches, cfg)
+    assert set(col) == {"attn.qkv", "attn.out", "ffn.in", "ffn.out", "head"}
+
+    # and the settings are *load-bearing*: a uniform-bits plan differs
+    uniform = _dense_cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True, backend="jnp"),)))
+    logits_u, _ = model.forward(params, batch, uniform)
+    assert not np.array_equal(np.asarray(logits), np.asarray(logits_u))
+
+
+# --------------------------------------------------------------------------
+# Legacy shim (acceptance criterion 2)
+# --------------------------------------------------------------------------
+def test_legacy_tdvmm_only_config_is_plan_default():
+    td = TDVMMLayerConfig(enabled=True, bits=6, backend="jnp")
+    legacy = _dense_cfg(tdvmm=td)                      # no plan at all
+    empty_plan = legacy.replace(tdvmm_plan=TDVMMPlan())
+    explicit = legacy.replace(tdvmm_plan=TDVMMPlan(default=td))
+
+    # structural parity: every site resolves to the legacy config
+    for cfg in (legacy, empty_plan, explicit):
+        for site, resolved in resolve_plan(cfg).sites:
+            assert resolved == td.replace(site=site), (site, resolved)
+
+    # numeric parity: identical logits bit for bit
+    params = model.init_params(jax.random.PRNGKey(1), legacy)
+    batch = _batch(legacy)
+    ref, _ = model.forward(params, batch, legacy)
+    for cfg in (empty_plan, explicit):
+        got, _ = model.forward(params, batch, cfg)
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_disabled_default_keeps_digital_model_exact():
+    """A no-plan, disabled-tdvmm config must stay the plain digital model."""
+    cfg = _dense_cfg()
+    params = model.init_params(jax.random.PRNGKey(2), cfg)
+    batch = _batch(cfg)
+    ref, _ = model.forward(params, batch, cfg)
+    got, _ = model.forward(params, batch, cfg.replace(tdvmm_plan=TDVMMPlan()))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+# --------------------------------------------------------------------------
+# Declared time-domain chaining (acceptance criterion 3)
+# --------------------------------------------------------------------------
+def test_chained_ffn_skips_intermediate_readout():
+    base_rules = (tdvmm_rule("*", enabled=True, backend="jnp"),)
+    chained = _dense_cfg(tdvmm_plan=TDVMMPlan(
+        rules=base_rules + (tdvmm_rule("ffn.in", chain=True),)))
+    unchained = _dense_cfg(tdvmm_plan=TDVMMPlan(rules=base_rules))
+    manual = _dense_cfg(tdvmm_plan=TDVMMPlan(
+        rules=base_rules + (tdvmm_rule("ffn.in", io_quantize=False),)))
+
+    rp = resolve_plan(chained)
+    assert rp.chains == (("ffn.in", "ffn.out"),)
+    assert rp["ffn.in"].io_quantize is False
+    assert rp["ffn.out"].io_quantize is True
+    # one fewer digital (p-bit readout) boundary than the unchained plan
+    assert (rp.report()["n_digital_boundaries"]
+            == resolve_plan(unchained).report()["n_digital_boundaries"] - 1)
+    assert "analog" in rp.report()["sites"]["ffn.in"]["boundary"]
+
+    params = model.init_params(jax.random.PRNGKey(3), chained)
+    batch = _batch(chained)
+    y_chain, _ = model.forward(params, batch, chained)
+    y_plain, _ = model.forward(params, batch, unchained)
+    y_manual, _ = model.forward(params, batch, manual)
+    # dropping the ffn.in ADC boundary changes the numerics...
+    assert not np.array_equal(np.asarray(y_chain), np.asarray(y_plain))
+    # ...and is exactly the io_quantize=False rewrite, nothing more
+    np.testing.assert_array_equal(np.asarray(y_chain), np.asarray(y_manual))
+
+
+def test_chain_validation_errors():
+    # not an adjacent tile pair
+    cfg = _dense_cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True),
+        tdvmm_rule("attn.qkv", chain=True))))
+    with pytest.raises(ValueError, match="no adjacent downstream tile"):
+        resolve_plan(cfg)
+    # both ends must be TD-VMM-enabled
+    cfg = _dense_cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("ffn.in", enabled=True, chain=True),)))
+    with pytest.raises(ValueError, match="enabled on both sites"):
+        resolve_plan(cfg)
+    # downstream tile must exist in the model
+    ssm_cfg = _dense_cfg(family="ssm", ssm=SSMConfig(d_state=16, head_dim=16),
+                         tdvmm_plan=TDVMMPlan(rules=(
+                             tdvmm_rule("*", enabled=True),
+                             tdvmm_rule("ssm.in_proj", chain=True))))
+    with pytest.raises(ValueError, match="no adjacent downstream tile"):
+        resolve_plan(ssm_cfg)
+
+
+def test_chained_moe_experts():
+    cfg = _dense_cfg(
+        family="moe", moe=MoEConfig(n_experts=4, top_k=2, d_ff=32),
+        tdvmm_plan=TDVMMPlan(rules=(
+            tdvmm_rule("moe.*", enabled=True, backend="jnp"),
+            tdvmm_rule("moe.expert.in", chain=True))))
+    rp = resolve_plan(cfg)
+    assert rp.chains == (("moe.expert.in", "moe.expert.out"),)
+    params = model.init_params(jax.random.PRNGKey(4), cfg)
+    logits, _ = model.forward(params, _batch(cfg), cfg)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_unmatched_rules_reported_and_strict_raises():
+    rules = (tdvmm_rule("*", enabled=True),
+             tdvmm_rule("atn.qkv", bits=4),          # typo'd pattern
+             tdvmm_rule("moe.*", backend="pallas"))  # no moe sites on dense
+    rp = resolve_plan(_dense_cfg(tdvmm_plan=TDVMMPlan(rules=rules)))
+    assert rp.unmatched == ("atn.qkv", "moe.*")
+    assert rp.report()["unmatched_rules"] == ["atn.qkv", "moe.*"]
+    with pytest.raises(ValueError, match="match no site"):
+        resolve_plan(_dense_cfg(
+            tdvmm_plan=TDVMMPlan(rules=rules, strict=True)))
+
+
+def test_resolution_is_cached():
+    cfg = _dense_cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True),)))
+    assert resolve_plan(cfg) is resolve_plan(dataclasses.replace(cfg))
