@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, save_json, time_call
-from repro.core.layers import TDVMMLayerConfig, td_matmul
+from repro.core.layers import TDVMMLayerConfig, td_grouped_matmul, td_matmul
 from repro.kernels.crossing.ref import crossing_ref
 from repro.kernels.ssd.ref import ssd_naive
 from repro.kernels.tdvmm.ops import tdvmm_matmul
@@ -140,6 +140,101 @@ def bench_int8_vs_f32_codes():
                    "int8_reduces_hbm_bytes": ratio > 1.0 and int8_verified})
 
 
+def _count_launches(fn, args):
+    """Codes-matmul dispatches in the traced program: each td_matmul is one
+    contraction (a dot_general — inside the pallas_call body on the Pallas
+    backend, at the top level on jnp), so the grouped path's 3-to-1 / 5-to-1
+    launch collapse shows up directly as the dot_general count."""
+    return sum(1 for eqn in _iter_eqns(fn, args)
+               if eqn.primitive.name == "dot_general")
+
+
+def _count_encodes(fn, args, m, k):
+    """Input-encode materializations: conversions *producing* an int8 (M, K)
+    code matrix in the traced program (view ops like squeeze/reshape over
+    already-encoded codes don't count).  The sequential path re-encodes the
+    same activation once per projection; the grouped launch encodes once."""
+    return sum(
+        eqn.primitive.name == "convert_element_type"
+        and any(getattr(v.aval, "shape", ()) == (m, k)
+                and getattr(v.aval, "dtype", None) == jnp.int8
+                for v in eqn.outvars)
+        for eqn in _iter_eqns(fn, args))
+
+
+def bench_grouped_projection():
+    """Grouped-projection TD-VMM: attn.qkv (G=3) and ssm.in_proj (G=5) as ONE
+    shared-input batched launch vs G sequential td_matmul dispatches.
+
+    The paper's NxN tile amortizes one DAC encode across every output column;
+    the grouped launch is the model-level analog — the metrics are the launch
+    count (G -> 1), the encode-bytes reduction (the input code matrix is
+    materialized once instead of G times), and the grouped-vs-sequential
+    parity (bit-for-bit 0.0 under matching per-member windows, both
+    backends).  Padded-N overhead reports the zero-code columns added to
+    stack uneven member widths onto one block-rounded grid.
+    """
+    from repro.kernels.tdvmm import ops as tdops
+    from repro.kernels.tdvmm import tdvmm
+    cases = {
+        "attn_qkv": (64, 896, (896, 128, 128)),          # wq / wk / wv
+        "ssm_in_proj": (64, 512, (1024, 1024, 128, 128, 16)),  # z/x/B/C/dt
+    }
+    for name, (m, k, ns) in cases.items():
+        g = len(ns)
+        x = jax.random.normal(jax.random.PRNGKey(g), (m, k))
+        ws = tuple(jax.random.normal(jax.random.PRNGKey(17 + i), (k, n)) * 0.1
+                   for i, n in enumerate(ns))
+        outs = {}
+        for backend in ("jnp", "pallas"):
+            cfg = TDVMMLayerConfig(enabled=True, backend=backend)
+            grouped_fn = jax.jit(
+                lambda x_, ws_, c=cfg: td_grouped_matmul(x_, ws_, c))
+            seq_fn = jax.jit(
+                lambda x_, ws_, c=cfg: tuple(td_matmul(x_, w, c) for w in ws_))
+            outs[backend] = (grouped_fn(x, ws), seq_fn(x, ws))
+            if backend == "jnp":
+                launches = {"grouped": _count_launches(grouped_fn, (x, ws)),
+                            "sequential": _count_launches(seq_fn, (x, ws))}
+                encodes = {"grouped": _count_encodes(grouped_fn, (x, ws), m, k),
+                           "sequential": _count_encodes(seq_fn, (x, ws), m, k)}
+                us_g = time_call(grouped_fn, x, ws, iters=3)
+                us_s = time_call(seq_fn, x, ws, iters=3)
+        parity = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for grouped, seq in outs.values()
+            for a, b in zip(grouped, seq))
+        cross = max(
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(outs["jnp"][0], outs["pallas"][0]))
+        kp = tdops.plan_kernel("jnp", m, k, max(ns), "int8")
+        n_pad = tdvmm.padded_size(max(ns), kp.bn, tdvmm.LANE)
+        emit(f"tdvmm_grouped_{name}_jnp", us_g,
+             f"sequential_us={us_s:.1f}|launches={launches['grouped']}v"
+             f"{launches['sequential']}",
+             data={"m": m, "k": k, "ns": list(ns), "cpu_us_grouped": us_g,
+                   "cpu_us_sequential": us_s})
+        emit(f"tdvmm_grouped_launch_count_{name}", 0.0,
+             f"launches {launches['sequential']}->{launches['grouped']}|"
+             f"encodes {encodes['sequential']}->{encodes['grouped']}|"
+             f"max_abs_diff={parity}",
+             data={"group": g,
+                   "grouped_launches": launches["grouped"],
+                   "sequential_launches": launches["sequential"],
+                   "one_launch": (launches["grouped"] == 1
+                                  and launches["sequential"] == g),
+                   "grouped_encodes": encodes["grouped"],
+                   "sequential_encodes": encodes["sequential"],
+                   "encode_bytes_reduction": round(
+                       encodes["sequential"] / max(encodes["grouped"], 1), 2),
+                   "encode_bytes_grouped": encodes["grouped"] * m * k,
+                   "encode_bytes_sequential": encodes["sequential"] * m * k,
+                   "padded_n": n_pad,
+                   "padded_n_overhead": round(g * n_pad / sum(ns), 3),
+                   "max_abs_diff_vs_sequential": parity,
+                   "max_abs_diff_jnp_vs_pallas": cross})
+
+
 def _count_mn_materializations(fn, args, m, n):
     """Count jaxpr equations that materialize an (M, N)-shaped array — each
     one is an HBM round-trip of the full output tile before XLA fusion (the
@@ -195,6 +290,7 @@ def run():
     bench_tdvmm_backends()
     bench_int8_vs_f32_codes()
     bench_fused_epilogue()
+    bench_grouped_projection()
 
     # tdvmm: jnp reference path (the kernel's oracle); AI accounting
     m, kk, n = 512, 2048, 512

@@ -50,6 +50,21 @@ CHAINABLE: dict[str, str] = {
     "moe.shared.in": "moe.shared.out",
 }
 
+# Grouped sites: one site name covering G same-input projection matrices
+# that execute as a single shared-input TD-VMM launch
+# (``core.layers.td_grouped_matmul``) — the input is encoded once and feeds
+# all G tiles, and calibration records one (G,) window vector for the site
+# (member order below).  Width 1 (everything else) is a plain 2-D launch.
+GROUPED_SITES: dict[str, tuple[str, ...]] = {
+    "attn.qkv": ("wq", "wk", "wv"),
+    "ssm.in_proj": ("wz", "wx", "wB", "wC", "wdt"),
+}
+
+
+def site_group_width(site: str) -> int:
+    """How many projection matrices one launch of this site covers."""
+    return len(GROUPED_SITES.get(site, ())) or 1
+
 
 def model_sites(cfg: ModelConfig) -> tuple[str, ...]:
     """Canonical site names present in this model, in stack order."""
@@ -123,9 +138,15 @@ class ResolvedPlan:
                 "backend": c.backend,
                 "boundary": boundary,
                 "out_scale": c.out_scale,
+                "group": site_group_width(site),
             }
         return {"sites": per_site,
                 "analog_boundaries": list(self.chains),
+                # Only enabled sites actually run as one grouped launch —
+                # with TD-VMM off the members execute as G plain dots.
+                "grouped_sites": {
+                    s: list(GROUPED_SITES[s]) for s, c in self.sites
+                    if s in GROUPED_SITES and c.enabled},
                 "n_digital_boundaries": sum(
                     1 for _, c in self.sites if c.enabled and c.io_quantize),
                 "unmatched_rules": list(self.unmatched),
@@ -133,10 +154,16 @@ class ResolvedPlan:
 
     def describe(self) -> str:
         rep = self.report()
-        lines = ["site                 bits  backend  boundary"]
+        lines = ["site                 bits  group  backend  boundary"]
         for site, r in rep["sites"].items():
-            lines.append(f"{site:<20} {r['bits']:>4}  {r['backend']:<7}  "
-                         f"{r['boundary']}")
+            grp = f"x{r['group']}" if r["group"] > 1 else "-"
+            lines.append(f"{site:<20} {r['bits']:>4}  {grp:>5}  "
+                         f"{r['backend']:<7}  {r['boundary']}")
+        if rep["grouped_sites"]:
+            grouped = ", ".join(
+                f"{s} ({'+'.join(members)}: one launch)"
+                for s, members in rep["grouped_sites"].items())
+            lines.append(f"grouped launches: {grouped}")
         if rep["analog_boundaries"]:
             pairs = ", ".join(f"{a}->{b}" for a, b in rep["analog_boundaries"])
             lines.append(f"time-domain chains: {pairs}")

@@ -7,9 +7,12 @@ pinned for serving, where it (a) skips the per-call max|z| reduction and
 (b) unlocks the Pallas fused-epilogue kernel (a fixed window is tile-local).
 
 ``CalibrationState`` is a pytree — per-site scalar windows, per-expert
-``(E,)`` vector windows for expert-batched sites — so it checkpoints through
-``repro.checkpoint.checkpoint`` like any other state and threads through
-``models.model.prefill_step`` / ``decode_step``.
+``(E,)`` vector windows for expert-batched sites, and per-member ``(G,)``
+vector windows for grouped sites (``attn.qkv``, ``ssm.in_proj``: the G
+same-input projections of one shared-input launch each calibrate their own
+tile window, captured in one record instead of G max-merged scalars) — so it
+checkpoints through ``repro.checkpoint.checkpoint`` like any other state and
+threads through ``models.model.prefill_step`` / ``decode_step``.
 
 Capture protocol: ``collect()`` installs a process-wide collector;
 ``core.layers.td_matmul`` / ``td_expert_matmul`` then record each site's
@@ -132,8 +135,16 @@ def apply_calibration(cfg: ModelConfig,
     """
     if calib is None or not calib.windows:
         return cfg
+    from repro.configs.plan import GROUPED_SITES
     plan = cfg.tdvmm_plan if cfg.tdvmm_plan is not None else TDVMMPlan()
-    rules = tuple(
-        tdvmm_rule(site, out_scale=_host_window(calib.windows[site]))
-        for site in sorted(calib.windows))
+    rules = []
+    for site in sorted(calib.windows):
+        window = _host_window(calib.windows[site])
+        members = GROUPED_SITES.get(site)
+        if members and isinstance(window, tuple) and len(window) != len(members):
+            raise ValueError(
+                f"grouped site {site!r}: calibration captured "
+                f"{len(window)} windows for the {len(members)}-member "
+                f"launch {members}")
+        rules.append(tdvmm_rule(site, out_scale=window))
     return cfg.replace(tdvmm_plan=plan.with_rules(*rules))

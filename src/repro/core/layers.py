@@ -23,7 +23,11 @@ each output tile is written to HBM exactly once.
 
 ``td_expert_matmul`` is the batched (E, C, K) x (E, K, N) form for MoE
 expert banks: one analog tile per expert, per-expert scales, the expert dim
-mapped onto the kernel's batched grid axis.
+mapped onto the kernel's batched grid axis.  ``td_grouped_matmul`` is the
+shared-input sibling: G same-input projection matrices (attention q/k/v, the
+SSM in_proj fan-out) stack onto the same batched axis while the input is
+encoded once and read by every tile — the paper's shared-DAC amortization at
+the model level, one kernel dispatch instead of G.
 
 Gradients: straight-through estimators on every quantizer (standard QAT) and
 a plain-matmul custom VJP on the integrate stage, so the layer is trainable
@@ -47,7 +51,8 @@ from repro.configs.base import TDVMMLayerConfig  # re-export (historic home)
 from repro.core import quant
 
 __all__ = ["TDVMMLayerConfig", "td_matmul", "td_expert_matmul",
-           "calibrate_out_scale", "TDVMMLinear", "init_linear"]
+           "td_grouped_matmul", "calibrate_out_scale", "TDVMMLinear",
+           "init_linear"]
 
 
 class MatmulPlan(NamedTuple):
@@ -265,8 +270,91 @@ def td_expert_matmul(
     return y.astype(x.dtype)
 
 
+def td_grouped_matmul(
+    x: jax.Array,                       # (..., N_in) shared input
+    ws: "tuple[jax.Array, ...]",        # G matrices (N_in, N_g), uneven N ok
+    cfg: TDVMMLayerConfig,
+    key: Optional[jax.Array] = None,
+) -> tuple[jax.Array, ...]:
+    """Grouped four-quadrant TD-VMM: G same-input projections, one launch.
+
+    The paper's NxN multiplier amortizes its I/O conversion circuitry across
+    the whole tile — one DAC encode feeds every output column.  Call sites
+    that project the *same* activation through several matrices (attention
+    q/k/v, the SSM z/x/B/C/dt input projection) are the model-level analog:
+    this encodes ``x`` once and maps the G weight matrices onto the kernel's
+    batched grid axis as a shared-input launch, instead of G separate
+    ``td_matmul`` dispatches that each re-encode ``x``.
+
+    Uneven output widths are zero-padded to the group's block-rounded max-N
+    (padding is exact — zero codes integrate zero charge); per-member
+    per-channel weight scales and per-member readout windows ride the same
+    ``(G, ...)`` epilogue operands as per-expert calibration, so a grouped
+    launch is bit-for-bit identical to the G sequential calls whenever the
+    readout windows match (data calibration computes a per-member-tile
+    window, which *is* the per-call window).  Returns a tuple of G arrays
+    shaped ``(..., N_g)``.
+    """
+    ws = tuple(ws)
+    if not ws:
+        return ()
+    if not cfg.enabled:
+        from repro.models import common as _c
+        pet = _c.matmul_out_dtype()
+        kw = {"preferred_element_type": pet} if pet is not None else {}
+        return tuple(jnp.dot(x, w, **kw) for w in ws)
+
+    k = x.shape[-1]
+    ns = tuple(w.shape[-1] for w in ws)
+    for w in ws:
+        assert w.ndim == 2 and w.shape[0] == k, (x.shape, w.shape)
+    g = len(ws)
+    batch_shape = tuple(x.shape[:-1])
+    m = 1
+    for d in batch_shape:
+        m *= d
+    noisy = cfg.noise and key is not None
+    code_dtype = _plan_code_dtype(cfg, k, noisy)
+    from repro.kernels.tdvmm import ops, tdvmm
+    kp = ops.plan_kernel(cfg.backend, m, k, max(ns), code_dtype)
+    # One padded width for the whole group: the max member width rounded to
+    # the launch's N block (so the stacking pad is the only pad).
+    n_pad = tdvmm.padded_size(max(ns), kp.bn, tdvmm.LANE)
+
+    qx = quant.encode_input(x, cfg.bits)                       # encode ONCE
+    qw = quant.stack_group(
+        [quant.program_weights(w, cfg.weight_bits, cfg.per_channel)
+         for w in ws], n_pad)
+    if noisy:
+        qw = quant.program_noise(qw, cfg.spec, key)
+
+    gain = _latch_gain(qx.levels, qw.levels, k)
+    w_scale = qw.scale.reshape(g, n_pad) * (2.0 * k)
+    out_bits, out_scale = _readout_args(cfg, n_experts=g)
+    # Per-member windows: each group member is its own analog tile on the
+    # batched grid, so calibration records one (G,) vector for the site.
+    _record_window(cfg, qx.view().reshape(m, k), qw.view(), kp.backend,
+                   code_dtype, gain, per_tile=True)
+    y = ops.tdvmm_matmul(
+        qx.view().reshape(m, k),
+        qw.view(),
+        qx.scale.reshape(m),
+        w_scale,
+        gain=gain,
+        out_bits=out_bits,
+        out_scale=out_scale,
+        backend=kp.backend,
+        code_dtype=code_dtype,
+        block_sizes=kp.blocks,
+    )                                                          # (G, M, n_pad)
+    return tuple(
+        y[i, :, :n].reshape(batch_shape + (n,)).astype(x.dtype)
+        for i, n in enumerate(ns))
+
+
 def calibrate_out_scale(
-    x: jax.Array, w: jax.Array, cfg: TDVMMLayerConfig
+    x: jax.Array, w: jax.Array, cfg: TDVMMLayerConfig,
+    key: Optional[jax.Array] = None,
 ) -> float:
     """Serving-path readout calibration: capture the ADC window once.
 
@@ -276,12 +364,20 @@ def calibrate_out_scale(
     (``cfg.replace(out_scale=...)``): per-call windows stop recomputing a
     global max, and the Pallas backend's fused-epilogue kernel becomes
     eligible (a fixed window is tile-local; a data-calibrated one is not).
+
+    ``key`` matters when ``cfg.noise`` is set: the serving path perturbs the
+    programmed currents, so the window must be captured over the *noisy*
+    codes (``td_matmul`` with the same cfg/key) — a noise-free window would
+    underestimate max|z| and clip the noisy deploy outputs.
     """
     if not cfg.enabled:
         raise ValueError("calibrate_out_scale needs an enabled TD-VMM config")
-    plan = plan_matmul(x.shape, w.shape, cfg)
+    noisy = cfg.noise and key is not None
+    plan = plan_matmul(x.shape, w.shape, cfg, noisy=noisy)
     qx = quant.encode_input(x, cfg.bits)
     qw = quant.program_weights(w, cfg.weight_bits, cfg.per_channel)
+    if noisy:
+        qw = quant.program_noise(qw, cfg.spec, key)
     from repro.kernels.tdvmm import ops
     acc = ops.codes_matmul(
         qx.view().reshape(plan.m, plan.k), qw.view(), plan.backend,
@@ -316,7 +412,11 @@ class TDVMMLinear:
         return y
 
     @staticmethod
-    def calibrate(params, x, cfg: TDVMMLayerConfig) -> TDVMMLayerConfig:
+    def calibrate(params, x, cfg: TDVMMLayerConfig,
+                  key=None) -> TDVMMLayerConfig:
         """Capture the readout window on a representative batch and return a
-        config whose ``out_scale`` pins it (serving-path calibration cache)."""
-        return cfg.replace(out_scale=calibrate_out_scale(x, params["w"], cfg))
+        config whose ``out_scale`` pins it (serving-path calibration cache).
+        Pass ``key`` on noisy configs so the window covers the perturbed
+        currents the serving path will actually integrate."""
+        return cfg.replace(
+            out_scale=calibrate_out_scale(x, params["w"], cfg, key))

@@ -173,6 +173,50 @@ def program_weights(
     return QuantizedTensor(codes=codes, scale=w_max, bits=bits, ste=lin)
 
 
+def stack_group(qws: "list[QuantizedTensor] | tuple[QuantizedTensor, ...]",
+                n_to: int) -> QuantizedTensor:
+    """Stack G programmed (K, N_g) weight members into one (G, K, n_to) bank.
+
+    The grouped TD-VMM launch (``core.layers.td_grouped_matmul``) runs one
+    shared input against G same-input projection matrices; uneven output
+    widths are zero-padded up to ``n_to`` (the group's block-rounded max-N).
+    Zero codes are inert — a never-on current source — so padded columns
+    integrate zero charge and their sliced-off outputs are exactly zero.
+    Padded scale entries are 1.0 (never multiplied against a nonzero code).
+
+    Members must share the code width; per-channel ``(1, N_g)`` and
+    per-tensor ``(1, 1)`` scales both stack to a ``(G, 1, n_to)`` scale.  STE
+    linear terms stack alongside the codes (zero-padded — identity gradient
+    through a zero pad is still zero).
+    """
+    if not qws:
+        raise ValueError("stack_group needs at least one member")
+    bits = qws[0].bits
+    if any(q.bits != bits for q in qws):
+        raise ValueError(
+            f"grouped members must share a code width, got "
+            f"{[q.bits for q in qws]}")
+    if any(q.codes.ndim != 2 for q in qws):
+        raise ValueError("stack_group stacks 2-D (K, N) weight members")
+    if any(q.codes.shape[-1] > n_to for q in qws):
+        raise ValueError(
+            f"n_to={n_to} smaller than a member width "
+            f"{[q.codes.shape[-1] for q in qws]}")
+
+    def pad_codes(c):
+        return jnp.pad(c, ((0, 0), (0, n_to - c.shape[-1])))
+
+    codes = jnp.stack([pad_codes(q.codes) for q in qws])
+    scale = jnp.stack([jnp.pad(
+        jnp.broadcast_to(q.scale, (1, q.codes.shape[-1])),
+        ((0, 0), (0, n_to - q.codes.shape[-1])), constant_values=1.0)
+        for q in qws])
+    stes = None
+    if all(q.ste is not None for q in qws):
+        stes = jnp.stack([pad_codes(q.ste) for q in qws])
+    return QuantizedTensor(codes=codes, scale=scale, bits=bits, ste=stes)
+
+
 def program_noise(qw: QuantizedTensor, spec, key: jax.Array) -> QuantizedTensor:
     """Stochastic DIBL + FG tuning noise on programmed current codes.
 

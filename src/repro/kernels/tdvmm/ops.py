@@ -32,6 +32,11 @@ unfused results are bit-for-bit identical.
 
 Batching: 3-D inputs (E, M, K) x (E, K, N) map the expert dim onto the
 kernel's batched grid axis (scales (E, M) / (E, N)); 2-D inputs run as E=1.
+A 2-D x against a 3-D (G, K, N) weight bank runs the **shared-input grouped**
+grid — the paper's shared-DAC dataflow: one (M, K) code matrix (and one
+(M,) scale vector) feeds all G weight tiles in a single launch, returning
+(G, M, N).  Per-group w_scale/out_scale ride the same (G, ...) operands as
+per-expert batching.
 
 Gradients flow through a shared custom VJP (plain matmul cotangents on the
 STE-wrapped codes, identity through the readout quantizer), so every backend
@@ -136,8 +141,10 @@ def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale):
 
 def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
                 out_scale, backend, interpret, code_dtype, blocks):
-    e, m, k = x_codes.shape
-    n = w_codes.shape[-1]
+    ex, m, k = x_codes.shape
+    e, _, n = w_codes.shape
+    shared_x = ex == 1 and e > 1
+    assert ex == e or shared_x, (x_codes.shape, w_codes.shape)
     if min(e, m, k, n) == 0:
         # Empty expert batch / filtered serving batch / zero-width contraction:
         # zero charge everywhere, and readout(0) * scales == 0 on every path.
@@ -156,8 +163,14 @@ def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
     bm, bk, bn = blocks
 
     if backend == "jnp":
-        acc = jnp.einsum("emk,ekn->emn", xi, wi,
-                         preferred_element_type=acc_dtype_for(xi.dtype))
+        if shared_x:
+            # Same contraction (and accumulation order) as the batched form,
+            # with the single code matrix broadcast over the G weight tiles.
+            acc = jnp.einsum("mk,gkn->gmn", xi[0], wi,
+                             preferred_element_type=acc_dtype_for(xi.dtype))
+        else:
+            acc = jnp.einsum("emk,ekn->emn", xi, wi,
+                             preferred_element_type=acc_dtype_for(xi.dtype))
         return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale)
 
     xp, wp = pad_to_blocks(xi, wi, bm, bk, bn)
@@ -209,11 +222,20 @@ def _tdvmm_core_bwd(gain, out_bits, out_scale, backend, interpret,
     dacc = g * denom * gain
     xf = x_codes.astype(jnp.float32)
     wf = w_codes.astype(jnp.float32)
-    gx = jnp.einsum("emn,ekn->emk", dacc, wf,
-                    preferred_element_type=jnp.float32)
-    gw = jnp.einsum("emk,emn->ekn", xf, dacc,
-                    preferred_element_type=jnp.float32)
-    gxs = jnp.sum(g * z * w_scale[..., None, :], axis=-1)
+    if x_codes.shape[0] == 1 and dacc.shape[0] > 1:
+        # Shared-input grouped launch: the one x (and x_scale) fed every
+        # group tile, so its cotangent sums over the group axis.
+        gx = jnp.einsum("gmn,gkn->mk", dacc, wf,
+                        preferred_element_type=jnp.float32)[None]
+        gw = jnp.einsum("mk,gmn->gkn", xf[0], dacc,
+                        preferred_element_type=jnp.float32)
+        gxs = jnp.sum(g * z * w_scale[..., None, :], axis=(0, -1))[None]
+    else:
+        gx = jnp.einsum("emn,ekn->emk", dacc, wf,
+                        preferred_element_type=jnp.float32)
+        gw = jnp.einsum("emk,emn->ekn", xf, dacc,
+                        preferred_element_type=jnp.float32)
+        gxs = jnp.sum(g * z * w_scale[..., None, :], axis=-1)
     gws = jnp.sum(g * z * x_scale[..., :, None], axis=-2)
     return gx, gw, gxs, gws
 
@@ -227,18 +249,23 @@ def codes_matmul(
 ) -> jax.Array:
     """Raw (.., M, K) @ (.., K, N) charge accumulation as f32, padded to the
     kernel's block multiples and sliced back.  Differentiable on any backend
-    (custom VJP = plain matmul cotangents, matching jnp.dot autodiff)."""
-    squeeze = x_codes.ndim == 2
-    if squeeze:
-        x_codes, w_codes = x_codes[None], w_codes[None]
-    e, m, _ = x_codes.shape
-    n = w_codes.shape[-1]
+    (custom VJP = plain matmul cotangents, matching jnp.dot autodiff).
+
+    A 2-D x against a 3-D (G, K, N) bank runs shared-x grouped: one code
+    matrix against G tiles, returning (G, M, N) (no squeeze)."""
+    squeeze = x_codes.ndim == 2 and w_codes.ndim == 2
+    if x_codes.ndim == 2:
+        x_codes = x_codes[None]
+    if w_codes.ndim == 2:
+        w_codes = w_codes[None]
+    m = x_codes.shape[1]
+    e, _, n = w_codes.shape
     if interpret is None:
         interpret = not _on_tpu()
     if code_dtype == "auto":
         code_dtype = "int8" if jnp.issubdtype(
             x_codes.dtype, jnp.integer) else "f32"
-    ones_m = jnp.ones((e, m), jnp.float32)
+    ones_m = jnp.ones((x_codes.shape[0], m), jnp.float32)
     ones_n = jnp.ones((e, n), jnp.float32)
     acc = _dispatch(x_codes, w_codes, ones_m, ones_n, 1.0, None, None,
                     resolve_backend(backend), bool(interpret), code_dtype,
@@ -284,15 +311,25 @@ def tdvmm_matmul(
     fixed per-expert windows for batched inputs — still static, still fused.
     Arbitrary M/K/N are zero-padded to the kernel's block shape;
     ``block_sizes=None`` consults the autotune table.
+
+    Shared-x grouped: a 2-D (M, K) x against a 3-D (G, K, N) weight bank
+    (x_scale (M,), w_scale (G, N)) runs one launch whose G tiles all read
+    the same code matrix, returning (G, M, N) un-squeezed.
     """
     backend = resolve_backend(backend)
     if interpret is None:
         interpret = not _on_tpu()
-    squeeze = x_codes.ndim == 2
-    if squeeze:
-        x_codes, w_codes = x_codes[None], w_codes[None]
-    e, m, _ = x_codes.shape
-    n = w_codes.shape[-1]
+    squeeze = x_codes.ndim == 2 and w_codes.ndim == 2
+    if x_codes.ndim == 2:
+        x_codes = x_codes[None]
+    if w_codes.ndim == 2:
+        w_codes = w_codes[None]
+    ex, m, _ = x_codes.shape
+    e, _, n = w_codes.shape
+    if ex not in (e, 1):
+        raise ValueError(
+            f"batched x/w mismatch: x batch {ex} vs w batch {e} "
+            "(shared-x grouped launches carry a single x batch entry)")
     if isinstance(out_scale, tuple) and len(out_scale) != e:
         raise ValueError(
             f"out_scale has {len(out_scale)} per-expert windows for "
@@ -300,7 +337,7 @@ def tdvmm_matmul(
     if code_dtype == "auto":
         code_dtype = "int8" if jnp.issubdtype(
             x_codes.dtype, jnp.integer) else "f32"
-    x_scale = x_scale.reshape(e, m).astype(jnp.float32)
+    x_scale = x_scale.reshape(ex, m).astype(jnp.float32)
     w_scale = w_scale.reshape(e, n).astype(jnp.float32)
     y = _dispatch(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
                   out_scale, backend, bool(interpret), code_dtype,

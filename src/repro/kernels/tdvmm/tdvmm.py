@@ -27,6 +27,13 @@ Batched expert grid: a leading E dimension maps (E, M, K) x (E, K, N) MoE
 expert stacks onto grid axis 0 — one analog tile per expert — with per-expert
 scale vectors riding along as (1, bm, 1) / (1, 1, bn) blocks.
 
+Shared-input grouped grid: (1, M, K) x (G, K, N) runs the *same* time-code
+matrix against G stacked weight tiles — the paper's shared-DAC dataflow (one
+input encode amortized across every output column of every tile).  The x (and
+x_scale) block index maps pin grid axis 0 to batch 0, so HBM holds exactly
+one copy of the codes; each group member still owns its per-channel w_scale
+and per-tile readout window via the (G, ...) operands.
+
 MXU alignment: block dims default to multiples of 128; the minor-most tile
 minimums are dtype-dependent (f32 sublane 8, int8 sublane 32, lane 128).
 """
@@ -187,18 +194,21 @@ def _kernel(*refs, nk: int, acc_dtype, fuse: bool, gain: float,
 
 
 def _grid_call(e, m, k, n, bm, bk, bn, *, acc_dtype, out_dtype, fuse,
-               gain, out_bits, interpret):
+               gain, out_bits, interpret, shared_x=False):
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
     nk = k // bk
     has_window = fuse and out_bits is not None
+    # Shared-input grouped launch: x (and x_scale) carry a single batch entry
+    # that every grid-axis-0 tile reads — one code copy in HBM for G tiles.
+    xb = (lambda b: 0) if shared_x else (lambda b: b)
     in_specs = [
-        pl.BlockSpec((1, bm, bk), lambda b, i, j, s: (b, i, s)),
+        pl.BlockSpec((1, bm, bk), lambda b, i, j, s: (xb(b), i, s)),
         pl.BlockSpec((1, bk, bn), lambda b, i, j, s: (b, s, j)),
     ]
     if fuse:
         in_specs += [
-            pl.BlockSpec((1, bm, 1), lambda b, i, j, s: (b, i, 0)),
+            pl.BlockSpec((1, bm, 1), lambda b, i, j, s: (xb(b), i, 0)),
             pl.BlockSpec((1, 1, bn), lambda b, i, j, s: (b, 0, j)),
         ]
     if has_window:
@@ -244,28 +254,33 @@ def tdvmm_matmul_kernel(
     """Raw charge accumulation: int8 codes -> int32 acc, f32 codes -> f32 acc.
 
     2-D inputs run as a single-expert (E=1) batch; 3-D inputs map the leading
-    expert dim onto grid axis 0.
+    expert dim onto grid axis 0.  A (1, M, K) x (G, K, N) pair runs the
+    shared-input grouped grid: one code copy feeds all G tiles.
     """
-    squeeze = x_codes.ndim == 2
-    if squeeze:
-        x_codes, w_codes = x_codes[None], w_codes[None]
-    e, m, k = x_codes.shape
-    e2, k2, n = w_codes.shape
-    assert e == e2 and k == k2, (x_codes.shape, w_codes.shape)
+    squeeze = x_codes.ndim == 2 and w_codes.ndim == 2
+    if x_codes.ndim == 2:
+        x_codes = x_codes[None]
+    if w_codes.ndim == 2:
+        w_codes = w_codes[None]
+    ex, m, k = x_codes.shape
+    e, k2, n = w_codes.shape
+    assert (ex == e or ex == 1) and k == k2, (x_codes.shape, w_codes.shape)
     acc_dtype = acc_dtype_for(x_codes.dtype)
     out = _grid_call(
         e, m, k, n, bm, bk, bn, acc_dtype=acc_dtype, out_dtype=acc_dtype,
         fuse=False, gain=1.0, out_bits=None,
-        interpret=interpret)(x_codes, w_codes)
+        interpret=interpret, shared_x=ex == 1 and e > 1)(x_codes, w_codes)
     return out[0] if squeeze else out
 
 
 @functools.partial(jax.jit, static_argnames=(
     "gain", "out_bits", "out_scale", "bm", "bk", "bn", "interpret"))
 def tdvmm_fused_kernel(
-    x_codes: jax.Array,      # (E, M, K) signed time codes (int8 or f32)
+    x_codes: jax.Array,      # (E, M, K) signed time codes (int8 or f32);
+    #                          (1, M, K) against (G, K, N) weights = shared-x
     w_codes: jax.Array,      # (E, K, N) signed weight codes
-    x_scale: jax.Array,      # (E, M, 1) f32 per-row input scales
+    x_scale: jax.Array,      # (E, M, 1) f32 per-row input scales ((1, M, 1)
+    #                          in shared-x mode)
     w_scale: jax.Array,      # (E, 1, N) f32 per-channel weight scales
     gain: float = 1.0,
     out_bits: int | None = None,
@@ -287,8 +302,9 @@ def tdvmm_fused_kernel(
     assert x_codes.ndim == 3, "fused kernel is batched; add an E=1 axis"
     if out_bits is not None and out_scale is None:
         raise ValueError("fused readout needs a fixed out_scale window")
-    e, m, k = x_codes.shape
-    n = w_codes.shape[-1]
+    ex, m, k = x_codes.shape
+    e, _, n = w_codes.shape
+    assert ex == e or ex == 1, (x_codes.shape, w_codes.shape)
     if isinstance(out_scale, tuple) and len(out_scale) != e:
         raise ValueError(f"per-expert out_scale: {len(out_scale)} windows "
                          f"for E={e} tiles")
@@ -308,5 +324,5 @@ def tdvmm_fused_kernel(
     return _grid_call(
         e, m, k, n, bm, bk, bn, acc_dtype=acc_dtype_for(x_codes.dtype),
         out_dtype=jnp.float32, fuse=True, gain=gain, out_bits=out_bits,
-        interpret=interpret,
+        interpret=interpret, shared_x=ex == 1 and e > 1,
     )(*operands)

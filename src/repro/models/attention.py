@@ -61,6 +61,21 @@ def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
     return x.reshape(x.shape[:-1] + (n, hd))
 
 
+def _qkv(params, x: jax.Array, cfg: ModelConfig, key):
+    """q/k/v projections as ONE grouped TD-VMM launch (site ``attn.qkv``).
+
+    The shared input is encoded once and wq/wk/wv run as three tiles of a
+    single batched kernel dispatch — the paper's shared-DAC amortization —
+    instead of three ``dense`` calls that each re-encode x."""
+    td = cfg.site_tdvmm("attn.qkv")
+    hd = cfg.resolved_head_dim
+    q, k, v = common.dense_group(
+        (params["wq"], params["wk"], params["wv"]), x, td, key)
+    return (_split_heads(q, cfg.n_heads, hd),
+            _split_heads(k, cfg.n_kv_heads, hd),
+            _split_heads(v, cfg.n_kv_heads, hd))
+
+
 def _merge_heads(x: jax.Array) -> jax.Array:
     return x.reshape(x.shape[:-2] + (x.shape[-2] * x.shape[-1],))
 
@@ -88,8 +103,19 @@ def _attend_flash(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Array:
     g = h // kvh
     bq = min(FLASH_BLOCK_Q, sq)
     bkv = min(FLASH_BLOCK_KV, skv)
+    # Non-block-multiple lengths: zero-pad to the block grid and mask the
+    # key tail (k_pos < skv); padded query rows compute garbage that the
+    # final slice drops.
+    sq_real, skv_real = sq, skv
+    pad_q, pad_kv = (-sq) % bq, (-skv) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        skv += pad_kv
     nq, nkv = sq // bq, skv // bkv
-    assert sq % bq == 0 and skv % bkv == 0
     scale = d ** -0.5
     window = cfg.swa_window
 
@@ -108,6 +134,8 @@ def _attend_flash(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Array:
             logits = jnp.einsum("bkgqd,bktd->bkgqt", qb, kb).astype(jnp.float32)
             logits *= scale
             mask = k_pos[None, :] <= q_pos[:, None]
+            if pad_kv:
+                mask &= k_pos[None, :] < skv_real
             if window is not None:
                 mask &= k_pos[None, :] > q_pos[:, None] - window
             logits = jnp.where(mask[None, None, None], logits, -1e30)
@@ -128,8 +156,8 @@ def _attend_flash(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Array:
         return None, out.astype(q.dtype)
 
     _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qr))
-    # outs: (nq, b, kv, g, bq, d) -> (b, sq, h, d)
-    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+    # outs: (nq, b, kv, g, bq, d) -> (b, sq, h, d); drop padded query rows
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)[:, :sq_real]
 
 
 def _attend_flash_blocks(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Array:
@@ -150,8 +178,18 @@ def _attend_flash_blocks(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Ar
     kvh = cfg.n_kv_heads
     g = h // kvh
     bs = min(FLASH_BLOCK_Q, sq)
+    # Non-block-multiple S: zero-pad to the tile grid.  Padded key columns
+    # only ever appear in diagonal tiles (every off-diagonal pair reads
+    # earlier, fully-real key blocks), where the causal mask already excludes
+    # them for real query rows (col > row); padded query rows are sliced off.
+    sq_real = sq
+    pad = (-sq) % bs
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        sq += pad
     nq = sq // bs
-    assert sq % bs == 0
     scale = d ** -0.5
     w = cfg.swa_window
 
@@ -222,7 +260,8 @@ def _attend_flash_blocks(q, k, v, cfg: ModelConfig, q_offset: int = 0) -> jax.Ar
         carry = scan_pairs(carry, pairs, edge_mask)
     m, l, acc = carry
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d).astype(q.dtype)
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)[
+        :, :sq_real].astype(q.dtype)
 
 
 def _flash(q, k, v, cfg: ModelConfig) -> jax.Array:
@@ -259,11 +298,7 @@ def _causal_mask(sq: int, skv: int, offset: int, window: Optional[int]) -> jax.A
 def apply_train(params, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
                 key=None) -> jax.Array:
     """Full-sequence causal (optionally sliding-window) attention."""
-    td = cfg.site_tdvmm("attn.qkv")
-    hd = cfg.resolved_head_dim
-    q = _split_heads(common.dense(params["wq"], x, td, key), cfg.n_heads, hd)
-    k = _split_heads(common.dense(params["wk"], x, td, key), cfg.n_kv_heads, hd)
-    v = _split_heads(common.dense(params["wv"], x, td, key), cfg.n_kv_heads, hd)
+    q, k, v = _qkv(params, x, cfg, key)
     q = common.apply_rope(q, positions, cfg.rope_theta)
     k = common.apply_rope(k, positions, cfg.rope_theta)
     s = x.shape[1]
@@ -293,13 +328,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
 def apply_prefill(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
                   key=None) -> tuple[jax.Array, KVCache]:
     """Process a full prompt, filling the cache (assumes cache.pos == 0)."""
-    td = cfg.site_tdvmm("attn.qkv")
-    hd = cfg.resolved_head_dim
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-    q = _split_heads(common.dense(params["wq"], x, td, key), cfg.n_heads, hd)
-    k = _split_heads(common.dense(params["wk"], x, td, key), cfg.n_kv_heads, hd)
-    v = _split_heads(common.dense(params["wv"], x, td, key), cfg.n_kv_heads, hd)
+    q, k, v = _qkv(params, x, cfg, key)
     q = common.apply_rope(q, positions, cfg.rope_theta)
     k = common.apply_rope(k, positions, cfg.rope_theta)
     if s > FLASH_THRESHOLD:
@@ -339,33 +370,60 @@ def apply_prefill(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
 def apply_decode(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
                  key=None) -> tuple[jax.Array, KVCache]:
     """One-token decode step.  x: (B, 1, d)."""
-    td = cfg.site_tdvmm("attn.qkv")
-    hd = cfg.resolved_head_dim
     b = x.shape[0]
     pos = cache.pos                                      # (B,) int32
     positions = pos[:, None]                             # (B, 1)
-    q = _split_heads(common.dense(params["wq"], x, td, key), cfg.n_heads, hd)
-    k = _split_heads(common.dense(params["wk"], x, td, key), cfg.n_kv_heads, hd)
-    v = _split_heads(common.dense(params["wv"], x, td, key), cfg.n_kv_heads, hd)
+    q, k, v = _qkv(params, x, cfg, key)
     q = common.apply_rope(q, positions, cfg.rope_theta)
     k = common.apply_rope(k, positions, cfg.rope_theta)
 
     size = cache.k.shape[1]
-    slot = pos % size if cfg.swa_window is not None else jnp.minimum(pos, size - 1)
+    if cfg.swa_window is not None:
+        slot = pos % size            # ring buffer: every position has a slot
+        over = None
+    else:
+        # A full (non-rolling) cache has exactly `size` slots.  Decoding past
+        # capacity used to silently pin slot = size-1, overwriting the last
+        # KV entry every step and corrupting attention from then on.  With
+        # concrete positions (eager serving) this now raises; under a jit
+        # trace the overflowing rows drop their cache write, stop advancing
+        # ``pos``, and poison their outputs with NaN — failing loudly
+        # instead of decoding against a corrupted cache.
+        over = pos >= size
+        try:
+            if bool(jnp.any(over)):
+                raise ValueError(
+                    f"attention.apply_decode: KV cache capacity exceeded "
+                    f"(pos={pos} >= size={size}); grow max_len or use a "
+                    "sliding-window config")
+            over = None
+        except jax.errors.ConcretizationTypeError:
+            pass
+        slot = jnp.minimum(pos, size - 1)
     rows = jnp.arange(b)
+
+    def write(buf, val):
+        """Write this step's (B, ...) entry to each row's slot; overflowed
+        rows re-write the slot's existing value (cache left untouched)."""
+        val = val.astype(buf.dtype)
+        if over is not None:
+            keep = over.reshape((-1,) + (1,) * (val.ndim - 1))
+            val = jnp.where(keep, buf[rows, slot], val)
+        return buf.at[rows, slot].set(val)
+
     k_sc = v_sc = None
     if cache.k_scale is not None:
         k_q, k_s1 = _kv_quantize(k)
         v_q, v_s1 = _kv_quantize(v)
-        new_k = cache.k.at[rows, slot].set(k_q[:, 0])
-        new_v = cache.v.at[rows, slot].set(v_q[:, 0])
-        k_sc = cache.k_scale.at[rows, slot].set(k_s1[:, 0])
-        v_sc = cache.v_scale.at[rows, slot].set(v_s1[:, 0])
+        new_k = write(cache.k, k_q[:, 0])
+        new_v = write(cache.v, v_q[:, 0])
+        k_sc = write(cache.k_scale, k_s1[:, 0])
+        v_sc = write(cache.v_scale, v_s1[:, 0])
         k_read = _kv_dequantize(new_k, k_sc, q.dtype)
         v_read = _kv_dequantize(new_v, v_sc, q.dtype)
     else:
-        new_k = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
-        new_v = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
+        new_k = write(cache.k, k[:, 0])
+        new_v = write(cache.v, v[:, 0])
         k_read = new_k.astype(q.dtype)
         v_read = new_v.astype(q.dtype)
 
@@ -380,4 +438,8 @@ def apply_decode(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
     out = _attend(q, k_read, v_read, mask, cfg)
     y = common.dense(params["wo"], _merge_heads(out),
                      cfg.site_tdvmm("attn.out"), key)
-    return y, KVCache(new_k, new_v, pos + 1, k_sc, v_sc)
+    pos_next = pos + 1
+    if over is not None:
+        y = jnp.where(over[:, None, None], jnp.float32(jnp.nan).astype(y.dtype), y)
+        pos_next = jnp.where(over, pos, pos_next)
+    return y, KVCache(new_k, new_v, pos_next, k_sc, v_sc)

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.layers import TDVMMLayerConfig, td_matmul
+from repro.core.layers import TDVMMLayerConfig, td_grouped_matmul, td_matmul
 from repro.launch import compat
 
 
@@ -106,6 +106,21 @@ def dense(params, x: jax.Array, td: TDVMMLayerConfig, key=None) -> jax.Array:
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
+
+
+def dense_group(param_group, x: jax.Array, td: TDVMMLayerConfig,
+                key=None) -> tuple[jax.Array, ...]:
+    """G same-input dense projections as ONE shared-input TD-VMM launch.
+
+    The grouped sites (``attn.qkv``: wq/wk/wv, ``ssm.in_proj``:
+    wz/wx/wB/wC/wdt) project the same activation through several matrices;
+    this encodes x once and runs all G weight tiles in a single batched
+    kernel dispatch (``core.layers.td_grouped_matmul``) instead of G
+    ``dense`` calls.  Biases stay per-member digital adds."""
+    ys = td_grouped_matmul(x, tuple(p["w"] for p in param_group), td, key)
+    return tuple(
+        y + p["b"].astype(y.dtype) if "b" in p else y
+        for p, y in zip(param_group, ys))
 
 
 # --------------------------------------------------------------------------

@@ -11,7 +11,9 @@ the TPU-friendly blocking of the scan (see kernels/ssd for the Pallas tiling;
 this module is the reference/pjit path, numerically identical).
 
 Weights are stored as separate projections (z, x, B, C, dt) rather than one
-fused in_proj so each output dim TP-shards cleanly.
+fused in_proj so each output dim TP-shards cleanly; in TD-VMM mode the five
+matrices still execute as ONE shared-input grouped launch (site
+``ssm.in_proj`` — the input is encoded once for all five tiles).
 """
 from __future__ import annotations
 
@@ -181,13 +183,13 @@ def ssd_decode_step(state, x, dt, a_log, b, c):
 
 
 def _project(params, u, cfg: ModelConfig, key):
+    """z/x/B/C/dt input projections as ONE grouped TD-VMM launch (site
+    ``ssm.in_proj``): u is encoded once and the five weight matrices run as
+    five tiles of a single batched kernel dispatch."""
     td = cfg.site_tdvmm("ssm.in_proj")
-    z = common.dense(params["wz"], u, td, key)
-    xc = common.dense(params["wx"], u, td, key)
-    bc = common.dense(params["wB"], u, td, key)
-    cc = common.dense(params["wC"], u, td, key)
-    dt = common.dense(params["wdt"], u, td, key)
-    return z, xc, bc, cc, dt
+    return common.dense_group(
+        (params["wz"], params["wx"], params["wB"], params["wC"],
+         params["wdt"]), u, td, key)
 
 
 def apply_train(params, u: jax.Array, cfg: ModelConfig, key=None) -> jax.Array:

@@ -18,10 +18,12 @@ import pytest
 
 from repro.checkpoint import checkpoint
 from repro.configs.base import (
-    ModelConfig, MoEConfig, TDVMMLayerConfig, TDVMMPlan, tdvmm_rule)
+    ModelConfig, MoEConfig, SSMConfig, TDVMMLayerConfig, TDVMMPlan,
+    tdvmm_rule)
 from repro.core import calibration
 from repro.core.calibration import CalibrationState, apply_calibration
-from repro.core.layers import td_expert_matmul
+from repro.core.layers import (
+    calibrate_out_scale, td_expert_matmul, td_matmul)
 from repro.models import model
 
 
@@ -47,7 +49,12 @@ def test_calibrate_captures_scalar_and_expert_windows():
     assert calib.sites() == ("attn.out", "attn.qkv", "head",
                              "moe.expert.in", "moe.expert.out")
     for site, w in calib.windows.items():
-        expected = (4,) if site.startswith("moe.expert") else ()
+        if site.startswith("moe.expert"):
+            expected = (4,)            # one window per expert tile
+        elif site == "attn.qkv":
+            expected = (3,)            # grouped launch: wq/wk/wv tiles
+        else:
+            expected = ()
         assert w.shape == expected, (site, w.shape)
         assert bool(jnp.all(w > 0.0))
 
@@ -180,3 +187,83 @@ def test_nested_collect_rejected():
         with pytest.raises(RuntimeError, match="nested"):
             with calibration.collect():
                 pass
+
+
+# --------------------------------------------------------------------------
+# grouped sites (attn.qkv / ssm.in_proj): one (G,) window per launch
+# --------------------------------------------------------------------------
+def test_grouped_attn_qkv_calibration_roundtrip():
+    """attn.qkv captures ONE (3,) per-member window vector (not 3 max-merged
+    scalars), and pinning it reproduces the per-call data-calibrated decode
+    bit for bit."""
+    cfg = _cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("attn.qkv", enabled=True, backend="jnp"),)))
+    params = model.init_params(jax.random.PRNGKey(4), cfg)
+    caches = model.init_caches(cfg, 2, 16)
+    _, caches = model.prefill_step(params, _batch(cfg), caches, cfg)
+    tok = {"inputs": jnp.full((2, 1), 5, jnp.int32)}
+
+    with calibration.collect() as col:
+        ref, _ = model.decode_step(params, tok, caches, cfg)
+    calib = CalibrationState.from_collected(col)
+    assert calib.sites() == ("attn.qkv",)
+    assert calib.windows["attn.qkv"].shape == (3,)
+
+    got, _ = model.decode_step(params, tok, caches, cfg, calib=calib)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    baked = apply_calibration(cfg, calib)
+    assert baked.site_tdvmm("attn.qkv").out_scale == tuple(
+        float(v) for v in calib.windows["attn.qkv"])
+
+
+def test_grouped_ssm_in_proj_calibration_roundtrip():
+    """ssm.in_proj captures a (5,) vector (z/x/B/C/dt tiles) whose pinned
+    form reproduces the per-call data-calibrated prefill bit for bit."""
+    cfg = _cfg(family="ssm", ssm=SSMConfig(d_state=16, head_dim=32),
+               tdvmm_plan=TDVMMPlan(rules=(
+                   tdvmm_rule("ssm.in_proj", enabled=True, backend="jnp"),)))
+    params = model.init_params(jax.random.PRNGKey(5), cfg)
+
+    with calibration.collect() as col:
+        ref, _ = model.prefill_step(
+            params, _batch(cfg), model.init_caches(cfg, 2, 16), cfg)
+    calib = CalibrationState.from_collected(col)
+    assert calib.sites() == ("ssm.in_proj",)
+    assert calib.windows["ssm.in_proj"].shape == (5,)
+
+    got, _ = model.prefill_step(
+        params, _batch(cfg), model.init_caches(cfg, 2, 16), cfg, calib=calib)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_apply_calibration_rejects_wrong_group_width():
+    cfg = _cfg(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("*", enabled=True, backend="jnp"),)))
+    calib = CalibrationState(windows={
+        "attn.qkv": jnp.asarray([0.5, 0.25], jnp.float32)})  # 2 != 3 members
+    with pytest.raises(ValueError, match="3-member"):
+        apply_calibration(cfg, calib)
+
+
+# --------------------------------------------------------------------------
+# noisy serving configs: calibrate_out_scale must see the noisy codes
+# --------------------------------------------------------------------------
+def test_calibrate_out_scale_threads_noise_key():
+    """Satellite bugfix: a window calibrated for a noisy deploy config must
+    be captured over the *noisy* programmed codes — the same max|z| the
+    noisy serving path data-calibrates — not the noise-free ones."""
+    cfg = TDVMMLayerConfig(enabled=True, backend="jnp", noise=True,
+                           site="noisy.site")
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 24)) * 0.2
+    key = jax.random.PRNGKey(2)
+
+    clean = calibrate_out_scale(x, w, cfg)            # key=None: noise-free
+    noisy = calibrate_out_scale(x, w, cfg, key=key)
+    assert noisy != clean
+
+    # the noisy window is exactly what the noisy serving call would
+    # data-calibrate (same cfg, same key)
+    with calibration.collect() as col:
+        td_matmul(x, w, cfg, key=key)
+    assert noisy == pytest.approx(float(col["noisy.site"]), rel=0, abs=0)

@@ -9,6 +9,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config, smoke
+from repro.configs.base import TDVMMPlan, tdvmm_rule
 from repro.models import attention, common, moe, ssm
 from repro.models.ssm import ssd_chunked
 from repro.kernels.ssd.ref import ssd_naive
@@ -66,6 +67,155 @@ def test_flash_block_skip_matches_dense(window):
     out_d = attention._attend(q, kk, v, mask, cfg)
     np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_d),
                                rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("s", [2049, 3000])
+def test_flash_non_block_multiple_s(s):
+    """Bugfix: S > FLASH_THRESHOLD not divisible by the flash block used to
+    hit a trace-time assert; the padded+masked path must match dense."""
+    cfg = _attn_cfg()
+    b, h, d = 1, cfg.n_heads, cfg.resolved_head_dim
+    q = jax.random.normal(jax.random.PRNGKey(0), (b, s, h, d)) * 0.5
+    kk = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.n_kv_heads, d)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, cfg.n_kv_heads, d))
+    mask = attention._causal_mask(s, s, 0, None)
+    out_dense = attention._attend(q, kk, v, mask, cfg)
+    out_flash = attention._attend_flash(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_dense),
+                               rtol=2e-3, atol=2e-3)
+    out_blocks = attention._attend_flash_blocks(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(out_blocks), np.asarray(out_dense),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_non_block_multiple_s_swa():
+    """Same ragged-length fix under a sliding window (padded key tail must
+    stay masked when the window mask is also active)."""
+    s = 2049
+    cfg = _attn_cfg(swa_window=1000)
+    b, h, d = 1, cfg.n_heads, cfg.resolved_head_dim
+    q = jax.random.normal(jax.random.PRNGKey(3), (b, s, h, d)) * 0.5
+    kk = jax.random.normal(jax.random.PRNGKey(4), (b, s, cfg.n_kv_heads, d)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, s, cfg.n_kv_heads, d))
+    mask = attention._causal_mask(s, s, 0, cfg.swa_window)
+    out_dense = attention._attend(q, kk, v, mask, cfg)
+    out_flash = attention._attend_flash(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_dense),
+                               rtol=2e-3, atol=2e-3)
+    out_blocks = attention._attend_flash_blocks(q, kk, v, cfg)
+    np.testing.assert_allclose(np.asarray(out_blocks), np.asarray(out_dense),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_apply_train_odd_length_above_flash_threshold():
+    """End-to-end: apply_train at S=2049 routes through flash without the
+    old trace-time block-divisibility assert."""
+    cfg = _attn_cfg()
+    params = attention.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 1, attention.FLASH_THRESHOLD + 1
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    y = attention.apply_train(params, x, cfg, positions)
+    assert y.shape == (b, s, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_decode_past_cache_capacity_rejected():
+    """Bugfix: non-SWA decode past max_len used to silently overwrite the
+    last KV slot; with concrete positions it must raise."""
+    cfg = _attn_cfg()
+    params = attention.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 1, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    cache = attention.init_cache(cfg, b, max_len=s, dtype=jnp.float32)
+    _, cache = attention.apply_prefill(params, x, cfg, cache)
+    tok = jax.random.normal(jax.random.PRNGKey(2), (b, 1, cfg.d_model)) * 0.3
+    assert int(cache.pos[0]) == s      # cache exactly full
+    with pytest.raises(ValueError, match="capacity"):
+        attention.apply_decode(params, tok, cfg, cache)
+
+
+def test_decode_past_cache_capacity_jit_poisons_not_corrupts():
+    """Under jit (traced positions) an overflowing row fails loudly — NaN
+    output, frozen pos — and leaves the cache bytes untouched."""
+    cfg = _attn_cfg()
+    params = attention.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model)) * 0.3
+    cache = attention.init_cache(cfg, b, max_len=s + 1, dtype=jnp.float32)
+    _, cache = attention.apply_prefill(params, x, cfg, cache)
+    # row 0 overflows (pos == size), row 1 still has one free slot
+    cache = cache._replace(pos=jnp.array([s + 1, s], jnp.int32))
+    tok = jax.random.normal(jax.random.PRNGKey(2), (b, 1, cfg.d_model)) * 0.3
+    step = jax.jit(lambda p, t, c: attention.apply_decode(p, t, cfg, c))
+    y, new_cache = step(params, tok, cache)
+    assert bool(jnp.all(jnp.isnan(y[0]))) and bool(jnp.all(jnp.isfinite(y[1])))
+    np.testing.assert_array_equal(np.asarray(new_cache.k[0]),
+                                  np.asarray(cache.k[0]))
+    assert int(new_cache.pos[0]) == s + 1 and int(new_cache.pos[1]) == s + 1
+
+
+# --------------------------------------------------------------------------
+# grouped-projection TD-VMM launches
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grouped_qkv_matches_sequential_dense(backend):
+    """attn.qkv as ONE grouped launch == the three per-projection td_matmul
+    calls, bit for bit (matching data-calibrated windows)."""
+    cfg = _attn_cfg().replace(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("attn.qkv", enabled=True, backend=backend),)))
+    params = attention.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, cfg.d_model)) * 0.3
+    td = cfg.site_tdvmm("attn.qkv")
+    grouped = common.dense_group(
+        (params["wq"], params["wk"], params["wv"]), x, td)
+    for got, name in zip(grouped, ("wq", "wk", "wv")):
+        seq = common.dense(params[name], x, td)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(seq))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_grouped_ssm_project_matches_sequential_dense(backend):
+    """ssm.in_proj's five projections as ONE grouped launch == five
+    sequential td_matmul calls, bit for bit (uneven N: z/x are d_inner wide,
+    B/C are n_groups*d_state, dt is n_heads)."""
+    cfg = smoke(get_config("mamba2-1.3b")).replace(tdvmm_plan=TDVMMPlan(
+        rules=(tdvmm_rule("ssm.in_proj", enabled=True, backend=backend),)))
+    params = ssm.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 5, cfg.d_model)) * 0.3
+    td = cfg.site_tdvmm("ssm.in_proj")
+    grouped = ssm._project(params, u, cfg, None)
+    widths = {y.shape[-1] for y in grouped}
+    assert len(grouped) == 5 and len(widths) > 1   # genuinely uneven N
+    for got, name in zip(grouped, ("wz", "wx", "wB", "wC", "wdt")):
+        seq = common.dense(params[name], u, td)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(seq))
+
+
+def test_grouped_qkv_train_grads_match_sequential():
+    """QAT gradients through the grouped launch equal the sequential path."""
+    cfg = _attn_cfg().replace(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("attn.qkv", enabled=True, backend="jnp"),)))
+    params = attention.init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, cfg.d_model)) * 0.3
+    td = cfg.site_tdvmm("attn.qkv")
+    names = ("wq", "wk", "wv")
+
+    def loss_grouped(p, x_):
+        ys = common.dense_group(tuple(p[n] for n in names), x_, td)
+        return sum(jnp.sum(y ** 2) for y in ys)
+
+    def loss_seq(p, x_):
+        return sum(jnp.sum(common.dense(p[n], x_, td) ** 2) for n in names)
+
+    g1, gx1 = jax.grad(loss_grouped, argnums=(0, 1))(params, x)
+    g2, gx2 = jax.grad(loss_seq, argnums=(0, 1))(params, x)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-5, atol=1e-6)
+    for n in names:
+        np.testing.assert_allclose(np.asarray(g1[n]["w"]),
+                                   np.asarray(g2[n]["w"]),
+                                   rtol=1e-5, atol=1e-6)
 
 
 def test_swa_ring_buffer_decode():
