@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, save_json, time_call
+from benchmarks.common import emit, reset_rows, save_json, time_call
 from repro.core.layers import TDVMMLayerConfig, td_grouped_matmul, td_matmul
 from repro.kernels.crossing.ref import crossing_ref
 from repro.kernels.ssd.ref import ssd_naive
@@ -284,7 +284,37 @@ def bench_fused_epilogue():
                "cpu_us_pallas_interpret": round(times["pallas"], 1)})
 
 
+def check_invariants(doc: dict) -> None:
+    """Assert the report's perf/parity invariants (shared by the CI
+    bench-smoke job and ``benchmarks/run.py``, which re-asserts them in the
+    same run as the serving bench so the suite stays one command)."""
+    rows = {r["name"]: r for r in doc["rows"]}
+    # jnp and pallas backends must agree bit for bit on integer codes
+    parity = [r for n, r in rows.items() if n.startswith("tdvmm_parity")]
+    assert parity and all(r["max_abs_diff"] == 0.0 for r in parity), parity
+    # int8 code storage must reduce HBM bytes on the codes matmul
+    ratios = [r for n, r in rows.items()
+              if n.startswith("tdvmm_codes_bytes_ratio")]
+    assert ratios and all(r["int8_reduces_hbm_bytes"] for r in ratios)
+    # the fused epilogue must materialize fewer (M, N) arrays
+    fused = next(r for n, r in rows.items()
+                 if n.startswith("tdvmm_fused_epilogue_opcount"))
+    assert fused["fused_beats_unfused_opcount"], fused
+    # grouped projections (attn.qkv G=3, ssm.in_proj G=5) must run as ONE
+    # launch with ONE input encode, bit-for-bit vs sequential
+    grouped = [r for n, r in rows.items()
+               if n.startswith("tdvmm_grouped_launch_count")]
+    assert len(grouped) == 2, grouped
+    for r in grouped:
+        assert r["one_launch"] and r["grouped_launches"] == 1, r
+        assert r["sequential_launches"] == r["group"], r
+        assert r["encode_bytes_reduction"] == r["group"], r
+        assert r["max_abs_diff_vs_sequential"] == 0.0, r
+        assert r["max_abs_diff_jnp_vs_pallas"] == 0.0, r
+
+
 def run():
+    reset_rows()
     k = jax.random.PRNGKey(0)
 
     bench_tdvmm_backends()

@@ -10,6 +10,17 @@ import jax
 ROWS: list[dict] = []
 
 
+def reset_rows() -> None:
+    """Drop any rows emitted by earlier suites in the same process.
+
+    Suites that write a JSON report call this first: ``save_json`` dumps
+    every row since the last save, so without the reset a full
+    ``benchmarks.run`` sweep would sweep print-only suites' rows (e.g.
+    bench_llm_mapping) into the next report and the artifact would differ
+    from the standalone ``python -m benchmarks.<suite>`` run."""
+    ROWS[:] = []
+
+
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
     """Median wall time per call in microseconds (post-jit)."""
     for _ in range(warmup):

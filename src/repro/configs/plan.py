@@ -95,6 +95,78 @@ def model_sites(cfg: ModelConfig) -> tuple[str, ...]:
     return tuple(sites)
 
 
+def site_linear_shapes(cfg: ModelConfig) -> dict[str, dict]:
+    """Per-site weight-matrix shapes applied **per token**, with layer
+    multiplicity — the geometry ``core.energy.serving_energy_model`` maps
+    onto TD-VMM tiles for the engine's per-request energy accounting.
+
+    Returns ``site -> {"matrices": ((d_in, d_out), ...), "per_token": n}``
+    where ``matrices`` lists the weight matrices one application of the site
+    touches for one token (MoE experts: only the activated top-k + shared)
+    and ``per_token`` is how many layer instances apply per token.
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    n_in = 2 if cfg.act == "silu_glu" else 1
+    shapes: dict[str, dict] = {}
+
+    def attn_ffn(layers: int, d_ff: int):
+        return {
+            "attn.qkv": {"matrices": ((d, cfg.n_heads * hd),
+                                      (d, cfg.n_kv_heads * hd),
+                                      (d, cfg.n_kv_heads * hd)),
+                         "per_token": layers},
+            "attn.out": {"matrices": ((cfg.n_heads * hd, d),),
+                         "per_token": layers},
+            "ffn.in": {"matrices": ((d, d_ff),) * n_in, "per_token": layers},
+            "ffn.out": {"matrices": ((d_ff, d),), "per_token": layers},
+        }
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        shapes.update(attn_ffn(cfg.n_layers, cfg.d_ff))
+    elif cfg.family == "moe":
+        m = cfg.moe
+        base = attn_ffn(cfg.n_layers, cfg.d_ff)
+        if not m.first_k_dense:
+            base.pop("ffn.in"), base.pop("ffn.out")
+        else:
+            base["ffn.in"]["per_token"] = m.first_k_dense
+            base["ffn.out"]["per_token"] = m.first_k_dense
+        shapes.update(base)
+        moe_layers = cfg.n_layers - m.first_k_dense
+        shapes["moe.expert.in"] = {
+            "matrices": ((d, m.d_ff),) * (n_in * m.top_k),
+            "per_token": moe_layers}
+        shapes["moe.expert.out"] = {
+            "matrices": ((m.d_ff, d),) * m.top_k, "per_token": moe_layers}
+        if m.n_shared_experts:
+            shapes["moe.shared.in"] = {
+                "matrices": ((d, m.d_ff),) * (n_in * m.n_shared_experts),
+                "per_token": moe_layers}
+            shapes["moe.shared.out"] = {
+                "matrices": ((m.d_ff, d),) * m.n_shared_experts,
+                "per_token": moe_layers}
+    elif cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_inner = s.expand * d
+        n_ssm_heads = d_inner // s.head_dim
+        gs = s.n_groups * s.d_state
+        shapes["ssm.in_proj"] = {
+            "matrices": ((d, d_inner), (d, d_inner), (d, gs), (d, gs),
+                         (d, n_ssm_heads)),
+            "per_token": cfg.n_layers}
+        shapes["ssm.out"] = {"matrices": ((d_inner, d),),
+                             "per_token": cfg.n_layers}
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            groups = cfg.n_layers // cfg.hybrid_attn_every
+            shapes.update(attn_ffn(groups, cfg.d_ff))
+            if cfg.hybrid_concat_embed:
+                shapes["hybrid.fuse"] = {"matrices": ((2 * d, d),),
+                                         "per_token": groups}
+    if not cfg.tie_embeddings:
+        shapes["head"] = {"matrices": ((d, cfg.padded_vocab),), "per_token": 1}
+    return shapes
+
+
 @dataclasses.dataclass(frozen=True)
 class ResolvedPlan:
     """Concrete site table: every site in the model mapped to its config.

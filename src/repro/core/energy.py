@@ -170,6 +170,68 @@ def validate_against_paper() -> dict[str, tuple[float, float]]:
 
 
 # --------------------------------------------------------------------------
+# Serving-engine energy metering (runtime/engine.py)
+# --------------------------------------------------------------------------
+def serving_energy_model(cfg, tile_n: int = 256) -> dict:
+    """Per-token analog Op/energy table for a model's **enabled** TD-VMM
+    sites — the engine's fJ/Op currency.
+
+    For every enabled site in the resolved plan, maps its per-token weight
+    matrices (``configs.plan.site_linear_shapes``) onto ``tile_n x tile_n``
+    tiles at the site's code width and prices one VMM window per tile from
+    the paper's fitted model (``cost``).  Time-domain chains halve the I/O
+    term on both ends of the pair: the upstream tile skips its ADC readout
+    and the downstream tile skips its input DAC (Fig. 2 — the intermediate
+    p-bit boundary disappears), so a ``chain=True`` plan shows up directly
+    as fewer joules per token in ``benchmarks/bench_serving.py``.
+
+    Ops are counted as 2 * d_in * d_out per matrix per token (the paper's
+    MAC = mult + add convention); tile energy includes padding waste (a
+    partially filled tile burns a full window), so fJ/Op degrades honestly
+    when shapes don't divide ``tile_n``.
+    """
+    from repro.configs.plan import site_linear_shapes
+    resolved = cfg.resolved_tdvmm_plan
+    shapes = site_linear_shapes(cfg)
+    chained_up = {u for u, _ in resolved.chains}
+    chained_down = {d for _, d in resolved.chains}
+    per_site: dict[str, dict] = {}
+    tot_ops = tot_e = 0.0
+    for site, sc in resolved.sites:
+        info = shapes.get(site)
+        if not sc.enabled or info is None:
+            continue
+        c = cost(tile_n, sc.bits)
+        tiles = 0
+        ops = 0.0
+        for d_in, d_out in info["matrices"]:
+            tiles += int(np.ceil(d_in / tile_n)) * int(np.ceil(d_out / tile_n))
+            ops += 2.0 * d_in * d_out
+        io_factor = 1.0 - 0.5 * (site in chained_up) \
+            - 0.5 * (site in chained_down)
+        e_tile = c.e_dynamic_j + c.e_static_j + io_factor * c.e_io_j
+        layers = info["per_token"]
+        site_ops = ops * layers
+        site_e = tiles * e_tile * layers
+        per_site[site] = {
+            "ops_per_token": site_ops,
+            "energy_per_token_j": site_e,
+            "tiles_per_token": tiles * layers,
+            "bits": sc.bits,
+            "io_factor": io_factor,
+        }
+        tot_ops += site_ops
+        tot_e += site_e
+    return {
+        "tile_n": tile_n,
+        "ops_per_token": tot_ops,
+        "energy_per_token_j": tot_e,
+        "fj_per_op": (tot_e / tot_ops * 1e15) if tot_ops else 0.0,
+        "per_site": per_site,
+    }
+
+
+# --------------------------------------------------------------------------
 # Mapping full LM architectures onto TD-VMM tiles (section 4.2's TDM reuse)
 # --------------------------------------------------------------------------
 def llm_mapping_cost(

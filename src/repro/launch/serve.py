@@ -1,12 +1,14 @@
-"""Sharded serving driver: mesh -> sharded params/caches -> prefill + decode.
+"""Serving driver: by default a thin CLI over the continuous-batching
+engine (``runtime/engine.py`` — paged KV cache, slot scheduler, chunked
+prefill, per-request energy accounting):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
-        --batch 4 --prompt-len 16 --gen 16
+        --requests 8 --slots 4 --chunk 16 --calibrate
 
-The production path in miniature: params and KV caches placed with the same
-FSDP+TP/SP specs the dry-run proves out, steps jitted with cache donation,
-tokens/s reported.  (The continuous-batching slot manager lives in
-examples/serve_lm.py; this driver is the uniform-batch fast path.)
+``--static`` keeps the legacy uniform-batch fast path (``serve()`` below:
+one fixed-shape prefill + a fixed number of decode steps for a uniform
+batch, optionally mesh-sharded with cache donation) — still the right tool
+for uniform offline batches and the only path for SSM/hybrid archs.
 """
 from __future__ import annotations
 
@@ -113,10 +115,71 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, mesh=None, seed: int = 0,
     }
 
 
+def serve_engine(cfg, args, seed: int = 0):
+    """Engine path: synthetic ragged trace -> continuous-batching run."""
+    import numpy as np
+
+    from repro.runtime.engine import Engine, EngineConfig, Request
+
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(key, cfg)
+    calib = None
+    if args.calibrate:
+        calib_batch = {"inputs": jax.random.randint(
+            key, (min(args.slots, 4), args.prompt_len), 0, cfg.vocab_size)}
+        calib = model.calibrate(params, calib_batch, cfg,
+                                max_len=args.prompt_len + args.gen)
+    if args.plan_report:
+        print("[serve] TD-VMM plan:")
+        print(cfg.resolved_tdvmm_plan.describe())
+
+    rng = np.random.default_rng(seed)
+    lo, hi = max(1, args.prompt_len // 4), args.prompt_len + 1
+    reqs = []
+    arrival = 0
+    for rid in range(args.requests):
+        reqs.append(Request(
+            rid=rid,
+            prompt=tuple(int(t) for t in
+                         rng.integers(0, cfg.vocab_size, rng.integers(lo, hi))),
+            max_new_tokens=int(rng.integers(max(1, args.gen // 4), args.gen + 1)),
+            arrival_step=arrival))
+        arrival += int(rng.integers(0, 3))
+    # Block-table width (= per-slot attention span) sized to the workload,
+    # not the pool: every decode step gathers max_pages_per_slot pages per
+    # slot, so leaving it at num_pages would attend over mostly-trash keys.
+    from repro.runtime.paged_cache import pages_for
+    max_pages = min(args.num_pages,
+                    pages_for(args.prompt_len + args.gen, args.page_size))
+    ecfg = EngineConfig(slots=args.slots, page_size=args.page_size,
+                        num_pages=args.num_pages, chunk=args.chunk,
+                        max_pages_per_slot=max_pages)
+    engine = Engine(cfg, params, ecfg, calib=calib)
+    rep = engine.run(reqs)
+    print(f"[serve] engine: {len(reqs)} requests, "
+          f"{rep.generated_tokens} tokens in {rep.steps} steps "
+          f"({rep.prefill_steps} chunk + {rep.decode_steps} decode, "
+          f"{rep.generated_tokens / max(rep.wall_s, 1e-9):.1f} tok/s), "
+          f"utilization {rep.utilization:.2f}, "
+          f"KV high-water {rep.kv_high_water_bytes / 1024:.1f} KiB, "
+          f"compiled steps = {rep.compiled_steps}")
+    if rep.analog_ops:
+        print(f"[serve] analog: {rep.analog_ops:.3g} Ops, "
+              f"{rep.fj_per_op:.2f} fJ/Op, "
+              f"{rep.tokens_per_joule:.3g} tok/J")
+    for r in rep.requests[:4]:
+        print(f"[serve]   req {r['rid']}: {r['finish_reason']} "
+              f"tokens={r['tokens'][:8]}")
+    return rep
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--static", action="store_true",
+                    help="legacy uniform-batch path (serve(); required for "
+                         "SSM/hybrid archs)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
@@ -126,6 +189,13 @@ def main():
                          "before serving (pins every site's ADC window)")
     ap.add_argument("--plan-report", action="store_true",
                     help="print the resolved TD-VMM site table")
+    # engine knobs
+    ap.add_argument("--requests", type=int, default=8,
+                    help="engine path: synthetic ragged trace size")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
@@ -133,6 +203,9 @@ def main():
     if args.kv_int8:
         from repro.models import attention
         attention.set_kv_cache_int8(True)
+    if not args.static:
+        serve_engine(cfg, args)
+        return
     out = serve(cfg, args.batch, args.prompt_len, args.gen,
                 calibrate=args.calibrate, plan_report=args.plan_report)
     print(f"[serve] {args.arch} batch={args.batch} prefill={out['prefill_s']:.2f}s "

@@ -367,6 +367,165 @@ def apply_prefill(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
     return y, new_cache
 
 
+# --------------------------------------------------------------------------
+# Paged KV cache (serving engine): block-table-indexed pages instead of a
+# dense (B, max_len) buffer.  See runtime/paged_cache.py for the layout and
+# the trash-page convention; the engine (runtime/engine.py) owns allocation.
+# --------------------------------------------------------------------------
+class PagedKVCache(NamedTuple):
+    k: jax.Array          # (num_pages+1, page_size, n_kv, head_dim); last
+    #                       page is the write sink for padded/inactive rows
+    v: jax.Array
+    k_scale: jax.Array | None = None   # (num_pages+1, page_size, n_kv) int8 mode
+    v_scale: jax.Array | None = None
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                     dtype) -> PagedKVCache:
+    """One attention layer's page pool (+1 trash page).  Honors the same
+    KV_CACHE_INT8 switch as the dense cache."""
+    if cfg.swa_window is not None:
+        raise NotImplementedError(
+            "paged KV cache does not support sliding-window archs yet "
+            "(the ring buffer already bounds their dense cache)")
+    shape = (num_pages + 1, page_size, cfg.n_kv_heads, cfg.resolved_head_dim)
+    if KV_CACHE_INT8:
+        sshape = shape[:-1]
+        return PagedKVCache(jnp.zeros(shape, jnp.int8),
+                            jnp.zeros(shape, jnp.int8),
+                            jnp.zeros(sshape, jnp.float32),
+                            jnp.zeros(sshape, jnp.float32))
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def _paged_read(cache: PagedKVCache, k_buf, v_buf, k_sc, v_sc, tables, dtype):
+    """Gather a slot's pages into position order.  tables: (..., P) page ids
+    -> k/v (..., P*page_size, n_kv, head_dim) in the compute dtype."""
+    k_read = k_buf[tables]                       # (..., P, ps, kv, hd)
+    v_read = v_buf[tables]
+    flat = k_read.shape[:-4] + (-1,) + k_read.shape[-2:]
+    k_read = k_read.reshape(flat)
+    v_read = v_read.reshape(flat)
+    if cache.k_scale is not None:
+        ks = k_sc[tables].reshape(flat[:-2] + k_sc.shape[-1:])
+        vs = v_sc[tables].reshape(flat[:-2] + v_sc.shape[-1:])
+        return (_kv_dequantize(k_read, ks, dtype),
+                _kv_dequantize(v_read, vs, dtype))
+    return k_read.astype(dtype), v_read.astype(dtype)
+
+
+def apply_prefill_paged(params, x: jax.Array, cfg: ModelConfig,
+                        cache: PagedKVCache, ctx, key=None
+                        ) -> tuple[jax.Array, PagedKVCache]:
+    """One fixed-size prefill chunk for ONE slot (the engine's compiled
+    prefill step body).  x: (1, C, d); ctx: runtime.paged_cache.PrefillChunkCtx.
+
+    Tokens [offset, offset + valid) of the slot's prompt are projected,
+    rope'd at their global positions, written into the slot's pages via the
+    block-table row, and attended against every page the slot owns (earlier
+    chunks included) under the global causal mask.  Padded rows (>= valid)
+    write to the trash page and their outputs are garbage the engine drops.
+    Bit-for-bit identical to ``apply_prefill`` on the whole prompt when the
+    chunk covers it AND the cache is not int8-quantized (per-row
+    encode/attend; masked tail keys contribute exact zeros).  Under
+    KV_CACHE_INT8 this path attends over the quantize->dequantize KV it
+    just wrote (earlier chunks can only be read back dequantized), whereas
+    dense ``apply_prefill`` attends over the full-precision k/v before
+    storing — the engine's isolation contract is therefore engine-vs-solo-
+    engine in int8 mode, not engine-vs-dense."""
+    _, c, _ = x.shape
+    ps = cache.k.shape[1]
+    trash = cache.k.shape[0] - 1
+    n_rows = ctx.block_row.shape[0]
+    gpos = ctx.offset + jnp.arange(c, dtype=jnp.int32)       # (C,) global
+    positions = gpos[None]
+    q, k, v = _qkv(params, x, cfg, key)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    in_chunk = jnp.arange(c, dtype=jnp.int32) < ctx.valid
+    pid = ctx.block_row[jnp.minimum(gpos // ps, n_rows - 1)]
+    pid = jnp.where(in_chunk, pid, trash)                    # (C,)
+    off = gpos % ps
+
+    def write(buf, val):                                     # val: (C, ...)
+        return buf.at[pid, off].set(val.astype(buf.dtype))
+
+    k_sc = v_sc = None
+    if cache.k_scale is not None:
+        k_q, k_s1 = _kv_quantize(k)
+        v_q, v_s1 = _kv_quantize(v)
+        new_k = write(cache.k, k_q[0])
+        new_v = write(cache.v, v_q[0])
+        k_sc = write(cache.k_scale, k_s1[0])
+        v_sc = write(cache.v_scale, v_s1[0])
+    else:
+        new_k = write(cache.k, k[0])
+        new_v = write(cache.v, v[0])
+
+    k_read, v_read = _paged_read(cache, new_k, new_v, k_sc, v_sc,
+                                 ctx.block_row[None], q.dtype)
+    kpos = jnp.arange(n_rows * ps, dtype=jnp.int32)
+    mask = (kpos[None, :] <= gpos[:, None]) \
+        & (kpos[None, :] < ctx.offset + ctx.valid)
+    out = _attend(q, k_read, v_read, mask[None, None], cfg)
+    y = common.dense(params["wo"], _merge_heads(out),
+                     cfg.site_tdvmm("attn.out"), key)
+    return y, PagedKVCache(new_k, new_v, k_sc, v_sc)
+
+
+def apply_decode_paged(params, x: jax.Array, cfg: ModelConfig,
+                       cache: PagedKVCache, ctx, key=None
+                       ) -> tuple[jax.Array, PagedKVCache]:
+    """Batched one-token decode over all B slots (the engine's compiled
+    decode step body).  x: (B, 1, d); ctx: runtime.paged_cache.DecodeCtx.
+
+    Each active slot writes its new KV at position ``pos`` through its
+    block-table row and attends over its own gathered pages; inactive slots
+    write to the trash page, never advance, and produce ignored outputs.
+    There is NO decode-past-capacity poisoning path here: the engine evicts
+    a request *before* its next write would overflow its page budget, so an
+    overflowing write can never corrupt (or NaN) a neighbor slot."""
+    b = x.shape[0]
+    ps = cache.k.shape[1]
+    trash = cache.k.shape[0] - 1
+    n_rows = ctx.block_tables.shape[1]
+    pos = ctx.pos
+    positions = pos[:, None]
+    q, k, v = _qkv(params, x, cfg, key)
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+
+    page_idx = jnp.minimum(pos // ps, n_rows - 1)
+    pid = jnp.take_along_axis(ctx.block_tables, page_idx[:, None], 1)[:, 0]
+    pid = jnp.where(ctx.active, pid, trash)                  # (B,)
+    off = pos % ps
+
+    def write(buf, val):                                     # val: (B, ...)
+        return buf.at[pid, off].set(val.astype(buf.dtype))
+
+    k_sc = v_sc = None
+    if cache.k_scale is not None:
+        k_q, k_s1 = _kv_quantize(k)
+        v_q, v_s1 = _kv_quantize(v)
+        new_k = write(cache.k, k_q[:, 0])
+        new_v = write(cache.v, v_q[:, 0])
+        k_sc = write(cache.k_scale, k_s1[:, 0])
+        v_sc = write(cache.v_scale, v_s1[:, 0])
+    else:
+        new_k = write(cache.k, k[:, 0])
+        new_v = write(cache.v, v[:, 0])
+
+    k_read, v_read = _paged_read(cache, new_k, new_v, k_sc, v_sc,
+                                 ctx.block_tables, q.dtype)
+    kpos = jnp.arange(n_rows * ps, dtype=jnp.int32)
+    mask = (kpos[None, :] <= pos[:, None])[:, None, None, :]  # (B,1,1,cap)
+    out = _attend(q, k_read, v_read, mask, cfg)
+    y = common.dense(params["wo"], _merge_heads(out),
+                     cfg.site_tdvmm("attn.out"), key)
+    return y, PagedKVCache(new_k, new_v, k_sc, v_sc)
+
+
 def apply_decode(params, x: jax.Array, cfg: ModelConfig, cache: KVCache,
                  key=None) -> tuple[jax.Array, KVCache]:
     """One-token decode step.  x: (B, 1, d)."""

@@ -134,6 +134,79 @@ def decode_step(params, batch: dict, caches: dict, cfg: ModelConfig,
     return _head(params, x, cfg), new_caches
 
 
+# --------------------------------------------------------------------------
+# Paged serving (continuous-batching engine, runtime/engine.py)
+# --------------------------------------------------------------------------
+def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
+    """Page pools for every attention layer (attention families only).
+
+    Unlike ``init_caches`` there is no batch/max_len here: capacity is the
+    shared pool, and per-request footprint is decided at admission time by
+    the engine's block tables.  All layers share one logical page allocation
+    (the same page id addresses the same token range in every layer's pool).
+    """
+    if cfg.family not in ("dense", "moe", "vlm", "audio"):
+        raise NotImplementedError(
+            f"paged serving supports attention families, not {cfg.family!r} "
+            "(SSM state is O(1) per slot; use the static path)")
+    dtype = common.resolve_dtype(cfg.dtype)
+
+    def one_attn():
+        return attention.init_paged_cache(cfg, num_pages, page_size, dtype)
+
+    def stack(mk, n):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *[mk() for _ in range(n)])
+
+    caches: dict[str, Any] = {}
+    for i, (kind, n) in enumerate(transformer.segments(cfg)):
+        if kind not in ("attn_ffn", "attn_moe"):
+            raise NotImplementedError(f"paged serving: segment kind {kind!r}")
+        caches[f"seg{i}"] = stack(one_attn, n)
+    return caches
+
+
+def prefill_chunk(params, batch: dict, caches: dict, cfg: ModelConfig,
+                  calib=None):
+    """One fixed-shape prefill chunk for ONE slot (the engine's first
+    compiled step).  batch: {"inputs": (1, C) tokens, "block_row": (P,),
+    "offset": (), "valid": ()}.  Returns (logits at the last valid position
+    — shape (1, 1, V) — and the updated page pools).  ``calib`` as in
+    ``prefill_step`` (close over concrete state at jit time)."""
+    from repro.core.calibration import apply_calibration
+    from repro.runtime.paged_cache import PrefillChunkCtx
+    cfg = apply_calibration(cfg, calib)
+    ctx = PrefillChunkCtx(block_row=batch["block_row"],
+                          offset=batch["offset"], valid=batch["valid"])
+    x = _embed(params, batch, cfg)
+    x, new_caches, _ = transformer.apply(params["blocks"], x, cfg,
+                                         "prefill_paged", caches, None,
+                                         embed0=x, page_ctx=ctx)
+    # logits only at the chunk's last real token (== prefill_step's x[:, -1:]
+    # on the final chunk); padded rows never reach the head.
+    x = jax.lax.dynamic_slice_in_dim(x, ctx.valid - 1, 1, axis=1)
+    x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _head(params, x, cfg), new_caches
+
+
+def decode_slots(params, batch: dict, caches: dict, cfg: ModelConfig,
+                 calib=None):
+    """One token for every occupied slot (the engine's second compiled
+    step).  batch: {"inputs": (B, 1) tokens, "block_tables": (B, P),
+    "pos": (B,), "active": (B,) bool}.  Returns (logits (B, 1, V), updated
+    page pools); inactive rows produce ignored logits."""
+    from repro.core.calibration import apply_calibration
+    from repro.runtime.paged_cache import DecodeCtx
+    cfg = apply_calibration(cfg, calib)
+    ctx = DecodeCtx(block_tables=batch["block_tables"], pos=batch["pos"],
+                    active=batch["active"])
+    x = _embed(params, batch, cfg)
+    x, new_caches, _ = transformer.apply(params["blocks"], x, cfg,
+                                         "decode_paged", caches, None,
+                                         embed0=x, page_ctx=ctx)
+    x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _head(params, x, cfg), new_caches
+
+
 def calibrate(params, batch: dict, cfg: ModelConfig, max_len: int = 0):
     """Model-wide §3.1 readout-window calibration (one prefill pass).
 

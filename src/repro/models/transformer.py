@@ -35,7 +35,8 @@ def _remat(fn, cfg: ModelConfig):
 # --------------------------------------------------------------------------
 # Block bodies (mode: train | prefill | decode)
 # --------------------------------------------------------------------------
-def attn_ffn_block(params, x, cfg: ModelConfig, mode: str, cache, positions, key=None):
+def attn_ffn_block(params, x, cfg: ModelConfig, mode: str, cache, positions, key=None,
+                   page_ctx=None):
     x = common.constrain_batch(x)
     h = common.rmsnorm(params["ln1"], x, cfg.norm_eps)
     if mode == "train":
@@ -43,6 +44,12 @@ def attn_ffn_block(params, x, cfg: ModelConfig, mode: str, cache, positions, key
         new_cache = cache
     elif mode == "prefill":
         a, new_cache = attention.apply_prefill(params["attn"], h, cfg, cache, key)
+    elif mode == "prefill_paged":
+        a, new_cache = attention.apply_prefill_paged(
+            params["attn"], h, cfg, cache, page_ctx, key)
+    elif mode == "decode_paged":
+        a, new_cache = attention.apply_decode_paged(
+            params["attn"], h, cfg, cache, page_ctx, key)
     else:
         a, new_cache = attention.apply_decode(params["attn"], h, cfg, cache, key)
     x = x + a
@@ -56,6 +63,10 @@ def attn_ffn_block(params, x, cfg: ModelConfig, mode: str, cache, positions, key
 
 
 def ssm_block(params, x, cfg: ModelConfig, mode: str, cache, key=None):
+    if mode in ("prefill_paged", "decode_paged"):
+        raise NotImplementedError(
+            "paged serving covers attention families only for now; SSM state "
+            "is O(1) per slot and the engine gates on cfg.family")
     x = common.constrain_batch(x)
     h = common.rmsnorm(params["ln"], x, cfg.norm_eps)
     if mode == "train":
@@ -151,8 +162,15 @@ def _scan_segment(body, stacked_params, x, caches, cfg: ModelConfig):
 
 
 def apply(params, x: jax.Array, cfg: ModelConfig, mode: str,
-          caches: Optional[dict], positions, embed0=None, key=None):
-    """Run the full stack.  Returns (x, new_caches, aux_losses)."""
+          caches: Optional[dict], positions, embed0=None, key=None,
+          page_ctx=None):
+    """Run the full stack.  Returns (x, new_caches, aux_losses).
+
+    ``page_ctx`` (``runtime.paged_cache.PrefillChunkCtx`` / ``DecodeCtx``)
+    rides alongside the paged modes: the block table and positions are the
+    same for every layer (pages are allocated per slot, not per layer), so
+    the context is a loop-invariant side input rather than part of the
+    scanned caches."""
     new_caches: dict[str, Any] = {}
     aux_total = {"lb_loss": jnp.zeros((), jnp.float32),
                  "z_loss": jnp.zeros((), jnp.float32)}
@@ -163,7 +181,8 @@ def apply(params, x: jax.Array, cfg: ModelConfig, mode: str,
 
         if kind in ("attn_ffn", "attn_moe"):
             def body(p, h, c, _kind=kind):
-                h2, nc, aux = attn_ffn_block(p, h, cfg, mode, c, positions, key)
+                h2, nc, aux = attn_ffn_block(p, h, cfg, mode, c, positions, key,
+                                             page_ctx=page_ctx)
                 aux = {k2: aux.get(k2, jnp.zeros((), jnp.float32))
                        for k2 in ("lb_loss", "z_loss")}
                 return h2, nc, aux

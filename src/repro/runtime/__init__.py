@@ -1,0 +1,2 @@
+"""Serving/runtime subsystem: fault tolerance, paged KV cache, slot
+scheduler, and the continuous-batching engine."""

@@ -1,0 +1,357 @@
+"""Continuous-batching TD-VMM serving engine.
+
+The paper's system discipline — fixed conversion circuitry, time-multiplexed
+inputs — maps onto serving as: keep exactly TWO jit-compiled step functions
+(one fixed-shape chunked-prefill step, one fixed-shape batched-decode step,
+both closing over the model's pinned ``CalibrationState``) and multiplex a
+ragged request stream through them.  Ragged traffic is absorbed by:
+
+  * a fixed pool of B decode **slots** (the decode step's batch dimension),
+    admitted FIFO by arrival (``runtime/scheduler.py``);
+  * a **paged** KV cache: attention KV lives in fixed-size pages owned per
+    request via block tables (``runtime/paged_cache.py``), so short requests
+    stop paying ``max_len`` memory and finished requests' pages recycle;
+  * **chunked prefill**: prompts are absorbed ``chunk`` tokens per step
+    through the single compiled prefill shape, interleaved with decode.
+
+Request lifecycle::
+
+    pending --admit(slot+pages)--> prefilling --last chunk--> decoding
+       |                                                         |
+       +--> evicted (prompt exceeds page budget)                 +--> eos
+                                                                 +--> max_tokens
+                                                                 +--> evicted
+                                                   (page budget exhausted —
+                                                    evicted BEFORE the
+                                                    overflowing write)
+
+Capacity overflow is an *admission-control* event here, not a numeric one:
+the dense-cache decode path NaN-poisons a row that decodes past capacity
+(failing loudly under jit), but the engine never lets that write happen —
+a request whose next token has no page is finished with reason "evicted"
+before the step runs, so neighbor slots' logits stay NaN-free (regression
+test: ``tests/test_engine.py``).
+
+Energy: every processed token is priced by the resolved plan's analog-tile
+geometry (``core.energy.serving_energy_model``) into per-request Op counts
+and joules — the fJ/Op currency of the paper, measured at request level.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import energy as energy_model
+from repro.core.calibration import CalibrationState, apply_calibration
+from repro.models import model
+from repro.runtime.paged_cache import PagePool, pages_for
+from repro.runtime.scheduler import (Request, RequestRecord, SlotScheduler,
+                                     static_baseline)
+
+__all__ = ["Engine", "EngineConfig", "EngineReport", "Request",
+           "static_baseline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine shape/capacity knobs (all jit-static: they pin the two
+    compiled step shapes)."""
+    slots: int = 4                # B — decode batch width
+    page_size: int = 16           # tokens per KV page
+    num_pages: int = 64           # shared pool size (excludes the trash page)
+    max_pages_per_slot: int = 0   # per-request page budget; 0 = num_pages
+    chunk: int = 32               # C — prefill tokens absorbed per step
+    eos_id: Optional[int] = None  # greedy decode stops on this token
+    tile_n: int = 256             # analog tile edge for energy accounting
+    slot_order: str = "fifo"      # free-slot pick order (determinism test)
+    max_steps: int = 100_000      # runaway guard
+
+    @property
+    def resolved_max_pages(self) -> int:
+        p = self.max_pages_per_slot or self.num_pages
+        return min(p, self.num_pages)
+
+
+@dataclasses.dataclass
+class EngineReport:
+    """Aggregate run stats + per-request records (rid order)."""
+    requests: list[dict]
+    steps: int
+    prefill_steps: int
+    decode_steps: int
+    idle_steps: int
+    wall_s: float
+    prompt_tokens: int
+    generated_tokens: int
+    utilization: float
+    evictions: int
+    nan_logit_steps: int
+    page_high_water: int
+    page_bytes: int
+    kv_high_water_bytes: int
+    analog_ops: float
+    analog_energy_j: float
+    fj_per_op: float
+    tokens_per_joule: float
+    compiled_steps: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Engine:
+    """Continuous-batching serving engine over ONE model + calibration.
+
+    ``calib`` pins every enabled digital-boundary site's readout window at
+    jit time.  The engine *requires* pinned windows on enabled sites (or
+    ``output_calibration=False``): a data-calibrated per-call window is a
+    max over the whole batch, which would couple slots together and break
+    the per-request bit-identity contract.
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 engine_cfg: EngineConfig = EngineConfig(),
+                 calib: Optional[CalibrationState] = None):
+        if cfg.family not in ("dense", "moe", "vlm", "audio"):
+            raise NotImplementedError(
+                f"engine supports attention families, not {cfg.family!r} "
+                "(use launch.serve --static for SSM/hybrid)")
+        if cfg.input_mode != "tokens":
+            raise NotImplementedError("engine serves token-input models")
+        if cfg.swa_window is not None:
+            raise NotImplementedError(
+                "engine + sliding-window attention not supported yet")
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = engine_cfg
+        self.calib = calib
+        self.cfg_serving = apply_calibration(cfg, calib)
+        self._check_pinned_windows()
+        self.energy = energy_model.serving_energy_model(
+            self.cfg_serving, engine_cfg.tile_n)
+
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill_chunk(p, b, c, cfg, calib=calib),
+            donate_argnums=(2,))
+        self._decode = jax.jit(
+            lambda p, b, c: model.decode_slots(p, b, c, cfg, calib=calib),
+            donate_argnums=(2,))
+
+        # Per-page HBM bytes across all layers (for the high-water stat).
+        shapes = jax.eval_shape(lambda: model.init_paged_caches(
+            cfg, engine_cfg.num_pages, engine_cfg.page_size))
+        total = sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                    for leaf in jax.tree.leaves(shapes))
+        self.page_bytes = int(total // (engine_cfg.num_pages + 1))
+
+    def _check_pinned_windows(self):
+        for site, sc in self.cfg_serving.resolved_tdvmm_plan.sites:
+            if (sc.enabled and sc.io_quantize and sc.output_calibration
+                    and sc.out_scale is None):
+                raise ValueError(
+                    f"engine requires a pinned readout window on enabled "
+                    f"site {site!r}: per-call data calibration is a max over "
+                    f"the whole batch and couples requests together.  Run "
+                    f"models.model.calibrate(...) and pass calib=, or set "
+                    f"out_scale/output_calibration=False in the plan.")
+
+    def compiled_steps(self) -> int:
+        """How many distinct step executables exist (the invariant: 2)."""
+        sizes = []
+        for fn in (self._prefill, self._decode):
+            get = getattr(fn, "_cache_size", None)
+            sizes.append(int(get()) if get is not None else -1)
+        return sum(sizes) if all(s >= 0 for s in sizes) else -1
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request]) -> EngineReport:
+        """Serve a trace to completion; returns the report (token streams,
+        finish reasons, energy, utilization, memory high-water)."""
+        ecfg = self.ecfg
+        ps, cap_pages = ecfg.page_size, ecfg.resolved_max_pages
+        vocab = self.cfg.vocab_size
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("duplicate request ids in trace")
+
+        caches = model.init_paged_caches(self.cfg, ecfg.num_pages, ps)
+        pool = PagePool(ecfg.num_pages, ps)
+        sched = SlotScheduler(ecfg.slots, ecfg.slot_order)
+        sched.add(requests)
+        records = {r.rid: RequestRecord(r) for r in requests}
+
+        steps = prefill_steps = decode_steps = idle_steps = 0
+        prompt_tokens = generated_tokens = evictions = nan_steps = 0
+        util_samples: list[float] = []
+        ops_tok = self.energy["ops_per_token"]
+        e_tok = self.energy["energy_per_token_j"]
+        t0 = time.time()
+
+        def finish(slot, reason: str):
+            nonlocal evictions
+            slot.record.finish_reason = reason
+            slot.record.finished_step = steps
+            if reason == "evicted":
+                evictions += 1
+            pool.free(slot.pages)
+            sched.release(slot)
+
+        def emit(slot, tok: int):
+            """Stream one generated token; finish on eos/budget."""
+            rec = slot.record
+            rec.tokens.append(tok)
+            if rec.first_token_step < 0:
+                rec.first_token_step = steps
+            if ecfg.eos_id is not None and tok == ecfg.eos_id:
+                finish(slot, "eos")
+            elif len(rec.tokens) >= rec.request.max_new_tokens:
+                finish(slot, "max_tokens")
+            else:
+                slot.cur_token = tok
+
+        def account(rec, n: int):
+            rec.analog_ops += n * ops_tok
+            rec.analog_energy_j += n * e_tok
+
+        while True:
+            if steps > ecfg.max_steps:
+                raise RuntimeError(f"engine exceeded max_steps={ecfg.max_steps}")
+            # --- admission (FIFO; head-of-line blocks on pool pressure) ---
+            while True:
+                req = sched.head(steps)
+                if req is None:
+                    break
+                need = pages_for(len(req.prompt), ps)
+                if need > cap_pages:
+                    # can never fit: reject without occupying a slot
+                    sched.pop_head()
+                    rec = records[req.rid]
+                    rec.admitted_step = rec.finished_step = steps
+                    rec.finish_reason = "evicted"
+                    evictions += 1
+                    continue
+                sid = sched.free_slot_id()
+                if sid is None:
+                    break
+                pages = pool.alloc(need)
+                if pages is None:
+                    break
+                sched.pop_head()
+                rec = records[req.rid]
+                rec.admitted_step = steps
+                sched.place(sid, rec, pages)
+
+            occupied = sched.occupied()
+            prefilling = [s for s in occupied if s.prefilling]
+            decoding = [s for s in occupied if not s.prefilling]
+
+            if prefilling:
+                # --- one prefill chunk (oldest admission first) -----------
+                slot = prefilling[0]
+                prompt = slot.record.request.prompt
+                start = slot.prefill_done
+                n = min(ecfg.chunk, len(prompt) - start)
+                tokens = np.zeros((1, ecfg.chunk), np.int32)
+                tokens[0, :n] = prompt[start:start + n]
+                row = np.full((cap_pages,), pool.trash_page, np.int32)
+                row[:len(slot.pages)] = slot.pages
+                batch = {"inputs": jnp.asarray(tokens),
+                         "block_row": jnp.asarray(row),
+                         "offset": jnp.int32(start), "valid": jnp.int32(n)}
+                logits, caches = self._prefill(self.params, batch, caches)
+                prefill_steps += 1
+                slot.prefill_done += n
+                slot.pos += n
+                prompt_tokens += n
+                account(slot.record, n)
+                if not slot.prefilling:
+                    row_logits = logits[0, 0]
+                    tok = int(jnp.argmax(row_logits[:vocab]))
+                    nan_steps += int(bool(jnp.isnan(row_logits).any()))
+                    generated_tokens += 1
+                    account(slot.record, 1)
+                    emit(slot, tok)
+                steps += 1
+
+            elif decoding:
+                # --- evict-before-poison: secure every slot's write page --
+                runnable = []
+                for slot in decoding:
+                    if slot.pos >= len(slot.pages) * ps:
+                        if len(slot.pages) >= cap_pages or \
+                                (new := pool.alloc(1)) is None:
+                            finish(slot, "evicted")
+                            continue
+                        slot.pages.extend(new)
+                    runnable.append(slot)
+                if not runnable:
+                    continue          # state changed (evictions); re-plan
+                b = ecfg.slots
+                tokens = np.zeros((b, 1), np.int32)
+                pos = np.zeros((b,), np.int32)
+                tables = np.full((b, cap_pages), pool.trash_page, np.int32)
+                active = np.zeros((b,), bool)
+                for slot in runnable:
+                    tokens[slot.sid, 0] = slot.cur_token
+                    pos[slot.sid] = slot.pos
+                    tables[slot.sid, :len(slot.pages)] = slot.pages
+                    active[slot.sid] = True
+                batch = {"inputs": jnp.asarray(tokens),
+                         "block_tables": jnp.asarray(tables),
+                         "pos": jnp.asarray(pos),
+                         "active": jnp.asarray(active)}
+                logits, caches = self._decode(self.params, batch, caches)
+                decode_steps += 1
+                util_samples.append(len(runnable) / b)
+                toks = np.asarray(jnp.argmax(logits[:, 0, :vocab], axis=-1))
+                nans = np.asarray(jnp.isnan(logits[:, 0]).any(axis=-1))
+                for slot in runnable:              # admission order
+                    nan_steps += int(nans[slot.sid])
+                    slot.pos += 1
+                    generated_tokens += 1
+                    account(slot.record, 1)
+                    emit(slot, int(toks[slot.sid]))
+                steps += 1
+
+            elif sched.has_pending():
+                # nothing runnable: fast-forward to the next arrival
+                nxt = sched.next_arrival()
+                if nxt is None or nxt <= steps:
+                    raise RuntimeError(
+                        "scheduler stall: pending request cannot be admitted "
+                        "into an empty engine (page budget inconsistency)")
+                idle_steps += nxt - steps
+                steps = nxt
+            else:
+                break
+
+        wall = time.time() - t0
+        tot_ops = sum(r.analog_ops for r in records.values())
+        tot_e = sum(r.analog_energy_j for r in records.values())
+        return EngineReport(
+            requests=[records[r.rid].summary() for r in requests],
+            steps=steps,
+            prefill_steps=prefill_steps,
+            decode_steps=decode_steps,
+            idle_steps=idle_steps,
+            wall_s=wall,
+            prompt_tokens=prompt_tokens,
+            generated_tokens=generated_tokens,
+            utilization=(float(np.mean(util_samples)) if util_samples else 0.0),
+            evictions=evictions,
+            nan_logit_steps=nan_steps,
+            page_high_water=pool.high_water,
+            page_bytes=self.page_bytes,
+            kv_high_water_bytes=(pool.high_water + 1) * self.page_bytes,
+            analog_ops=tot_ops,
+            analog_energy_j=tot_e,
+            fj_per_op=(tot_e / tot_ops * 1e15) if tot_ops else 0.0,
+            tokens_per_joule=(generated_tokens / tot_e) if tot_e else 0.0,
+            compiled_steps=self.compiled_steps(),
+        )

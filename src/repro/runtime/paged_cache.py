@@ -1,0 +1,123 @@
+"""Paged KV cache plumbing: page pool, block tables, and step contexts.
+
+The serving engine replaces the dense per-slot ``init_caches(batch, max_len)``
+allocation with a **page pool**: attention KV lives in fixed-size pages of
+``page_size`` token positions, and every decode slot owns an ordered list of
+page ids (its *block-table row*).  Position ``p`` of a slot lives at
+``(row[p // page_size], p % page_size)`` — the same page ids index every
+layer's pool, so allocation happens once per slot, not per layer.
+
+Why this matters for the TD-VMM story: the analog tiles are weight-stationary
+and the conversion circuitry is fixed, so serving wants ONE compiled prefill
+step and ONE compiled decode step with pinned shapes (pinned readout windows
+ride along as jit-static calibration).  Paging is what lets ragged requests
+multiplex through those fixed shapes without paying ``batch * max_len`` HBM
+for every short request: a finished request's pages go back to the pool and
+the next request reuses them.
+
+Layout per attention layer (see ``models.attention.init_paged_cache``):
+
+    k, v        (num_pages + 1, page_size, n_kv, head_dim)
+    k/v_scale   (num_pages + 1, page_size, n_kv)            int8 KV mode
+
+The **last** page is the trash page: writes from inactive slots (and padded
+prefill-chunk rows) are steered there instead of being predicated out, so the
+compiled step has no data-dependent control flow.  The trash page is never
+read (no block-table row references it as a *valid* position), so its
+nondeterministic contents never touch logits.
+
+Host side, ``PagePool`` is a deterministic free-list allocator (lowest free
+id first) that tracks the in-use high-water mark — the paged counterpart of
+the dense path's ``batch * max_len`` footprint, asserted smaller on ragged
+traces by ``benchmarks/bench_serving.py``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+
+class PrefillChunkCtx(NamedTuple):
+    """Per-chunk step inputs for one slot's chunked prefill (fixed shapes).
+
+    block_row: (P,) int32 — the slot's page ids, padded with the trash page.
+    offset:    ()   int32 — global position of the chunk's first token.
+    valid:     ()   int32 — real tokens in this chunk (rest is padding).
+    """
+    block_row: jax.Array
+    offset: jax.Array
+    valid: jax.Array
+
+
+class DecodeCtx(NamedTuple):
+    """Per-step inputs for the batched decode over all B slots.
+
+    block_tables: (B, P) int32 — page ids per slot (trash-padded).
+    pos:          (B,)   int32 — tokens already absorbed per slot (the new
+                                 token's KV is written at position ``pos``).
+    active:       (B,)   bool  — occupied decode slots; inactive rows write
+                                 to the trash page and their logits are
+                                 ignored by the engine.
+    """
+    block_tables: jax.Array
+    pos: jax.Array
+    active: jax.Array
+
+
+class PagePool:
+    """Deterministic host-side page allocator (lowest free id first).
+
+    Determinism matters: the scheduler invariant is that the same trace +
+    seed produces identical per-request streams regardless of slot
+    assignment order, and page ids feed the compiled steps' block tables.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError(f"need >= 1 page of >= 1 token, got "
+                             f"{num_pages} x {page_size}")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages))      # kept sorted ascending
+        self.high_water = 0
+
+    @property
+    def trash_page(self) -> int:
+        """Id of the write-sink page (allocated on device as page
+        ``num_pages``, beyond the pool)."""
+        return self.num_pages
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """Take the n lowest free page ids, or None (nothing taken) if the
+        pool can't satisfy the request."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages, self._free = self._free[:n], self._free[n:]
+        self.high_water = max(self.high_water, self.in_use)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        if len(set(pages)) != len(pages):
+            raise ValueError(f"duplicate page ids in free: {pages}")
+        for p in pages:
+            if not (0 <= p < self.num_pages):
+                raise ValueError(f"free of out-of-range page {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free = sorted(self._free + list(pages))
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold n_tokens positions (at least one)."""
+    return max(1, -(-n_tokens // page_size))
