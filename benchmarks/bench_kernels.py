@@ -34,6 +34,7 @@ def bench_tdvmm_backends():
     of the row pair is the parity column (max |jnp - pallas|, must be 0) and
     the jnp-path GFLOP/s at shapes a model actually emits.
     """
+    from repro.kernels.tdvmm import ops as tdops
     for (m, k, n) in [(512, 1024, 4096), (256, 896, 896), (33, 300, 130)]:
         kx, kw = jax.random.split(jax.random.PRNGKey(m + n))
         xc = _codes(kx, (m, k), jnp.float32)
@@ -43,14 +44,23 @@ def bench_tdvmm_backends():
         flops = 2 * m * k * n
         outs = {}
         for backend in ("jnp", "pallas"):
+            # Plan through plan_kernel so each row records the chosen blocks
+            # and whether the autotune table answered (miss = heuristic
+            # fallback, visible here instead of quietly slow).
+            kp = tdops.plan_kernel(backend, m, k, n, "f32")
             fn = jax.jit(functools.partial(
-                tdvmm_matmul, gain=1e-4, out_bits=6, backend=backend))
+                tdvmm_matmul, gain=1e-4, out_bits=6, backend=backend,
+                block_sizes=kp.blocks))
             outs[backend] = fn(xc, wc, xs, ws)
             us = time_call(fn, xc, wc, xs, ws, iters=3)
             emit(f"tdvmm_{backend}_{m}x{k}x{n}", us,
-                 f"GFLOP/s={flops/us*1e-3:.1f}",
+                 f"GFLOP/s={flops/us*1e-3:.1f}|blocks={kp.blocks}"
+                 f"|hit={kp.autotune_hit}",
                  data={"m": m, "k": k, "n": n,
-                       "gflops_per_s": round(flops / us * 1e-3, 1)})
+                       "gflops_per_s": round(flops / us * 1e-3, 1),
+                       "plan_blocks": list(kp.blocks),
+                       "autotune_hit": kp.autotune_hit,
+                       "autotune_platform": kp.platform})
         parity = float(jnp.max(jnp.abs(outs["jnp"] - outs["pallas"])))
         emit(f"tdvmm_parity_{m}x{k}x{n}", 0.0, f"max_abs_diff={parity}",
              data={"max_abs_diff": parity})
@@ -140,6 +150,71 @@ def bench_int8_vs_f32_codes():
                    "int8_reduces_hbm_bytes": ratio > 1.0 and int8_verified})
 
 
+def _pallas_input_bytes(fn, args):
+    """Total bytes of the first pallas_call's operands in the traced program
+    — the actual HBM->VMEM stream footprint of the kernel launch, which is
+    how the int4 packing claim is verified (the packed launch must stream
+    about half the int8 code bytes, not just claim to)."""
+    for eqn in _iter_eqns(fn, args):
+        if eqn.primitive.name == "pallas_call":
+            total = 0
+            for v in eqn.invars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "shape", None) is not None:
+                    size = 1
+                    for d in aval.shape:
+                        size *= d
+                    total += size * jnp.dtype(aval.dtype).itemsize
+            return total
+    return 0
+
+
+def bench_int4_packing():
+    """int4 code packing (p <= 3): two codes per byte in the HBM stream.
+
+    The Pallas launch consumes nibble-packed int8 arrays (K in packed units)
+    and unpacks in-VMEM right before the dot — the analytic code-byte ratio
+    vs int8 is 0.5, cross-checked against the traced pallas_call's actual
+    operand bytes, and the outputs must be bit-for-bit identical to int8
+    (same int32 accumulation, order-independent).
+    """
+    for (m, k, n) in [(512, 2048, 512), (512, 1024, 4096)]:
+        kx, kw = jax.random.split(jax.random.PRNGKey(k + 1))
+        xc = jnp.round(jax.random.uniform(
+            kx, (m, k), minval=-7, maxval=7)).astype(jnp.int8)
+        wc = jnp.round(jax.random.uniform(
+            kw, (k, n), minval=-7, maxval=7)).astype(jnp.int8)
+        xs = jnp.ones((m,))
+        ws = jnp.ones((n,))
+        outs, code_bytes, stream_bytes = {}, {}, {}
+        for name in ("int8", "int4"):
+            fn = jax.jit(functools.partial(
+                tdvmm_matmul, gain=1e-4, out_bits=6, out_scale=0.5,
+                backend="pallas", code_dtype=name))
+            outs[name] = fn(xc, wc, xs, ws)
+            kb = (k + 1) // 2 if name == "int4" else k
+            code_bytes[name] = m * kb + kb * n
+            stream_bytes[name] = _pallas_input_bytes(fn, (xc, wc, xs, ws))
+            us = time_call(fn, xc, wc, xs, ws, iters=3)
+            emit(f"tdvmm_codes_{name}_pallas_{m}x{k}x{n}", us,
+                 f"code_MB={code_bytes[name]/2**20:.2f}",
+                 data={"m": m, "k": k, "n": n, "code_dtype": name,
+                       "code_bytes": code_bytes[name],
+                       "pallas_stream_bytes": stream_bytes[name]})
+        parity = float(jnp.max(jnp.abs(outs["int8"] - outs["int4"])))
+        ratio = code_bytes["int4"] / code_bytes["int8"]
+        # Scale vectors ride along in both launches; <= 0.6 still requires
+        # the code operands themselves to have halved.
+        streamed = stream_bytes["int4"] <= 0.6 * stream_bytes["int8"]
+        emit(f"tdvmm_int4_codes_ratio_{m}x{k}x{n}", 0.0,
+             f"int4_bytes/int8_bytes={ratio:.2f}|max_abs_diff={parity}",
+             data={"code_bytes_ratio": round(ratio, 3),
+                   "max_abs_diff_vs_int8": parity,
+                   "packed_stream_verified": streamed,
+                   "int4_halves_code_bytes": (
+                       ratio <= 0.5 and parity == 0.0 and streamed)})
+
+
 def _count_launches(fn, args):
     """Codes-matmul dispatches in the traced program: each td_matmul is one
     contraction (a dot_general — inside the pallas_call body on the Pallas
@@ -164,17 +239,18 @@ def _count_encodes(fn, args, m, k):
 
 def bench_grouped_projection():
     """Grouped-projection TD-VMM: attn.qkv (G=3) and ssm.in_proj (G=5) as ONE
-    shared-input batched launch vs G sequential td_matmul dispatches.
+    shared-input ragged concat launch vs G sequential td_matmul dispatches.
 
     The paper's NxN tile amortizes one DAC encode across every output column;
     the grouped launch is the model-level analog — the metrics are the launch
     count (G -> 1), the encode-bytes reduction (the input code matrix is
     materialized once instead of G times), and the grouped-vs-sequential
     parity (bit-for-bit 0.0 under matching per-member windows, both
-    backends).  Padded-N overhead reports the zero-code columns added to
-    stack uneven member widths onto one block-rounded grid.
+    backends).  Padded-N overhead reports the zero-code columns the ragged
+    concat adds: each member rounds only to the 128 lane (the old batched
+    stacking padded every member to the widest — 2.33x on attn.qkv under
+    heavy GQA; the ragged grid is ~1.0x).
     """
-    from repro.kernels.tdvmm import ops as tdops
     from repro.kernels.tdvmm import tdvmm
     cases = {
         "attn_qkv": (64, 896, (896, 128, 128)),          # wq / wk / wv
@@ -207,8 +283,9 @@ def bench_grouped_projection():
         cross = max(
             float(jnp.max(jnp.abs(a - b)))
             for a, b in zip(outs["jnp"][0], outs["pallas"][0]))
-        kp = tdops.plan_kernel("jnp", m, k, max(ns), "int8")
-        n_pad = tdvmm.padded_size(max(ns), kp.bn, tdvmm.LANE)
+        widths = tuple(
+            tdvmm.padded_size(nn, tdvmm.LANE, tdvmm.LANE) for nn in ns)
+        n_total = sum(widths)
         emit(f"tdvmm_grouped_{name}_jnp", us_g,
              f"sequential_us={us_s:.1f}|launches={launches['grouped']}v"
              f"{launches['sequential']}",
@@ -229,19 +306,55 @@ def bench_grouped_projection():
                        encodes["sequential"] / max(encodes["grouped"], 1), 2),
                    "encode_bytes_grouped": encodes["grouped"] * m * k,
                    "encode_bytes_sequential": encodes["sequential"] * m * k,
-                   "padded_n": n_pad,
-                   "padded_n_overhead": round(g * n_pad / sum(ns), 3),
+                   "member_widths": list(widths),
+                   "n_total": n_total,
+                   "padded_n_overhead": round(n_total / sum(ns), 3),
                    "max_abs_diff_vs_sequential": parity,
                    "max_abs_diff_jnp_vs_pallas": cross})
 
 
-def _count_mn_materializations(fn, args, m, n):
-    """Count jaxpr equations that materialize an (M, N)-shaped array — each
-    one is an HBM round-trip of the full output tile before XLA fusion (the
-    fused kernel's guarantee is exactly one such write)."""
-    return sum(
-        any(getattr(v.aval, "shape", ())[-2:] == (m, n) for v in eqn.outvars)
-        for eqn in _iter_eqns(fn, args))
+# Pure view/layout primitives: no HBM materialization of their own.
+_VIEW_PRIMS = {"squeeze", "reshape", "broadcast_in_dim", "transpose"}
+
+
+def _count_mn_hbm_materializations(fn, args, m, n):
+    """Count *top-level* jaxpr equations that materialize an (M, N)-shaped
+    array — each one is an HBM round-trip of the full output tile before XLA
+    fusion (the fused kernel's guarantee is exactly one such write).
+
+    Does NOT recurse into pallas_call bodies: with autotuned interpret
+    blocks a kernel-body block can equal the whole (M, N) tile, but block
+    values live in VMEM — only the pallas_call's own output is an HBM
+    write.  View primitives (squeeze/reshape/...) are excluded for the same
+    reason."""
+    count = 0
+
+    def walk(jx):
+        nonlocal count
+        for eqn in jx.eqns:
+            if eqn.primitive.name in _VIEW_PRIMS:
+                continue
+            mn_out = any(getattr(v.aval, "shape", ())[-2:] == (m, n)
+                         for v in eqn.outvars)
+            if eqn.primitive.name == "pallas_call":
+                # The kernel's own output IS the one HBM write; block values
+                # inside the body live in VMEM, so don't recurse.
+                count += mn_out
+                continue
+            subs = [sub for val in eqn.params.values()
+                    for sub in (val if isinstance(val, (list, tuple))
+                                else [val])
+                    if hasattr(sub, "eqns") or hasattr(sub, "jaxpr")]
+            if subs:
+                # Call-like wrapper (pjit / custom_vjp / scan): not a
+                # materialization itself — count what happens inside.
+                for sub in subs:
+                    walk(sub if hasattr(sub, "eqns") else sub.jaxpr)
+                continue
+            count += mn_out
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return count
 
 
 def bench_fused_epilogue():
@@ -265,7 +378,8 @@ def bench_fused_epilogue():
         fn = jax.jit(functools.partial(
             tdvmm_matmul, gain=1e-4, out_bits=6, out_scale=0.5,
             backend=backend))
-        counts[backend] = _count_mn_materializations(fn, (xc, wc, xs, ws), m, n)
+        counts[backend] = _count_mn_hbm_materializations(
+            fn, (xc, wc, xs, ws), m, n)
         y = fn(xc, wc, xs, ws)
         jax.block_until_ready(y)
         times[backend] = time_call(fn, xc, wc, xs, ws, iters=3)
@@ -283,11 +397,47 @@ def bench_fused_epilogue():
                "cpu_us_jnp": round(times["jnp"], 1),
                "cpu_us_pallas_interpret": round(times["pallas"], 1)})
 
+    # Data-calibrated readout (out_scale=None, the output_calibration=True
+    # serving path): the two-phase calibrated kernel folds the per-slot
+    # max|z| into the accumulator walk — one launch, ONE (M, N) HBM write —
+    # vs the legacy two-pass path (integrate kernel + unfused jnp epilogue).
+    cal_counts, cal_outs = {}, {}
+    for mode, fused in (("fused", True), ("unfused", False)):
+        fn = jax.jit(functools.partial(
+            tdvmm_matmul, gain=1e-4, out_bits=6, backend="pallas",
+            fused_calibration=fused))
+        cal_outs[mode] = fn(xc, wc, xs, ws)
+        cal_counts[mode] = _count_mn_hbm_materializations(
+            fn, (xc, wc, xs, ws), m, n)
+        cal_counts[f"us_{mode}"] = time_call(fn, xc, wc, xs, ws, iters=3)
+    jnp_fn = jax.jit(functools.partial(
+        tdvmm_matmul, gain=1e-4, out_bits=6, backend="jnp"))
+    cal_outs["jnp"] = jnp_fn(xc, wc, xs, ws)
+    parity = float(jnp.max(jnp.abs(cal_outs["fused"] - cal_outs["unfused"])))
+    parity_jnp = float(jnp.max(jnp.abs(cal_outs["fused"] - cal_outs["jnp"])))
+    emit(f"tdvmm_calibrated_epilogue_{m}x{k}x{n}", cal_counts["us_fused"],
+         f"MN_writes fused={cal_counts['fused']} "
+         f"unfused={cal_counts['unfused']}|max_abs_diff={parity}",
+         data={"m": m, "k": k, "n": n,
+               "fused_mn_materializations": cal_counts["fused"],
+               "unfused_mn_materializations": cal_counts["unfused"],
+               "single_mn_write": cal_counts["fused"] == 1,
+               "max_abs_diff_fused_vs_unfused": parity,
+               "max_abs_diff_vs_jnp": parity_jnp,
+               "cpu_us_unfused": round(cal_counts["us_unfused"], 1)})
 
-def check_invariants(doc: dict) -> None:
+
+def check_invariants(doc: dict, baseline: dict | None = None) -> None:
     """Assert the report's perf/parity invariants (shared by the CI
     bench-smoke job and ``benchmarks/run.py``, which re-asserts them in the
-    same run as the serving bench so the suite stays one command)."""
+    same run as the serving bench so the suite stays one command).
+
+    When ``baseline`` (a previously checked-in BENCH_kernels.json doc) is
+    given, wall-clock invariants are also checked *relative* to it: the
+    pallas/jnp time ratio at the model shapes must not regress by more than
+    25% vs the baseline's ratio.  Ratios (not absolute us) so a slower or
+    faster CI machine doesn't flap the gate.
+    """
     rows = {r["name"]: r for r in doc["rows"]}
     # jnp and pallas backends must agree bit for bit on integer codes
     parity = [r for n, r in rows.items() if n.startswith("tdvmm_parity")]
@@ -296,12 +446,30 @@ def check_invariants(doc: dict) -> None:
     ratios = [r for n, r in rows.items()
               if n.startswith("tdvmm_codes_bytes_ratio")]
     assert ratios and all(r["int8_reduces_hbm_bytes"] for r in ratios)
+    # int4 packing must halve the code bytes bit-for-bit vs int8, and the
+    # traced pallas launch must actually stream the packed operands
+    int4 = [r for n, r in rows.items()
+            if n.startswith("tdvmm_int4_codes_ratio")]
+    assert int4, "no int4 packing rows"
+    for r in int4:
+        assert r["max_abs_diff_vs_int8"] == 0.0, r
+        assert r["code_bytes_ratio"] <= 0.5, r
+        assert r["packed_stream_verified"], r
+        assert r["int4_halves_code_bytes"], r
     # the fused epilogue must materialize fewer (M, N) arrays
     fused = next(r for n, r in rows.items()
                  if n.startswith("tdvmm_fused_epilogue_opcount"))
     assert fused["fused_beats_unfused_opcount"], fused
+    # the data-calibrated readout must be single-pass (ONE (M, N) HBM write)
+    # and bit-for-bit with the legacy two-pass path
+    cal = next(r for n, r in rows.items()
+               if n.startswith("tdvmm_calibrated_epilogue"))
+    assert cal["single_mn_write"], cal
+    assert cal["max_abs_diff_fused_vs_unfused"] == 0.0, cal
+    assert cal["max_abs_diff_vs_jnp"] == 0.0, cal
     # grouped projections (attn.qkv G=3, ssm.in_proj G=5) must run as ONE
-    # launch with ONE input encode, bit-for-bit vs sequential
+    # launch with ONE input encode, bit-for-bit vs sequential — and the
+    # ragged concat must not pad members beyond lane rounding
     grouped = [r for n, r in rows.items()
                if n.startswith("tdvmm_grouped_launch_count")]
     assert len(grouped) == 2, grouped
@@ -311,14 +479,40 @@ def check_invariants(doc: dict) -> None:
         assert r["encode_bytes_reduction"] == r["group"], r
         assert r["max_abs_diff_vs_sequential"] == 0.0, r
         assert r["max_abs_diff_jnp_vs_pallas"] == 0.0, r
+        assert r["padded_n_overhead"] <= 1.05, r
+    # autotuned pallas wall-clock: the model-shape rows must be table hits
+    # with their chosen blocks recorded, and the headline shape must clear
+    # the 3x-over-pre-autotune floor (9.1 GFLOP/s before the table existed)
+    for shape in ("512x1024x4096", "256x896x896"):
+        r = rows[f"tdvmm_pallas_{shape}"]
+        assert r["autotune_hit"], r
+        assert len(r["plan_blocks"]) == 3, r
+    assert rows["tdvmm_pallas_512x1024x4096"]["gflops_per_s"] >= 27.3, \
+        rows["tdvmm_pallas_512x1024x4096"]
+    if baseline is not None:
+        base_rows = {r["name"]: r for r in baseline.get("rows", [])}
+        for shape in ("512x1024x4096", "256x896x896"):
+            pk, jk = f"tdvmm_pallas_{shape}", f"tdvmm_jnp_{shape}"
+            if pk not in base_rows or jk not in base_rows:
+                continue
+            base_ratio = (base_rows[pk]["us_per_call"]
+                          / base_rows[jk]["us_per_call"])
+            ratio = rows[pk]["us_per_call"] / rows[jk]["us_per_call"]
+            assert ratio <= base_ratio * 1.25, (
+                f"pallas/jnp ratio regressed at {shape}: "
+                f"{ratio:.2f} vs baseline {base_ratio:.2f}")
 
 
 def run():
+    from repro.kernels.tdvmm import ops as tdops
+
     reset_rows()
+    tdops.reset_autotune_report()
     k = jax.random.PRNGKey(0)
 
     bench_tdvmm_backends()
     bench_int8_vs_f32_codes()
+    bench_int4_packing()
     bench_fused_epilogue()
     bench_grouped_projection()
 
@@ -357,7 +551,9 @@ def run():
     emit("ssd_naive_L512", us_n, "token-recurrence")
     emit("ssd_chunked_L512", us_c, f"speedup_vs_naive={us_n/us_c:.1f}x")
 
-    save_json("BENCH_kernels.json", meta={"suite": "kernels"})
+    save_json("BENCH_kernels.json",
+              meta={"suite": "kernels",
+                    "autotune": tdops.autotune_report()})
 
 
 if __name__ == "__main__":

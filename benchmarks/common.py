@@ -21,8 +21,31 @@ def reset_rows() -> None:
     ROWS[:] = []
 
 
-def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall time per call in microseconds (post-jit)."""
+class Timing(float):
+    """A median-microseconds wall time that also carries how it was measured.
+
+    Subclasses float (the median), so every existing consumer that divides
+    or compares a ``time_call`` result is unchanged; ``emit`` additionally
+    records the repeat count and min-to-max spread so a noisy median can't
+    silently masquerade as a stable one in the JSON report.
+    """
+    repeats: int
+    spread_us: float
+
+    def __new__(cls, median_us: float, repeats: int, spread_us: float):
+        self = super().__new__(cls, median_us)
+        self.repeats = repeats
+        self.spread_us = spread_us
+        return self
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Timing:
+    """Median-of-``iters`` wall time per call in microseconds (post-jit).
+
+    Every sample is ``block_until_ready``-fenced (async dispatch would
+    otherwise time the enqueue, not the compute), warmup runs absorb
+    compilation and first-touch allocation, and the min-to-max spread across
+    the repeats rides along on the returned ``Timing``."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -33,7 +56,8 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return Timing(times[len(times) // 2] * 1e6, iters,
+                  (times[-1] - times[0]) * 1e6)
 
 
 def emit(name: str, us_per_call: float, derived: str,
@@ -42,6 +66,9 @@ def emit(name: str, us_per_call: float, derived: str,
     metrics (bytes moved, GB/s, speedups) into the JSON report."""
     row = {"name": name, "us_per_call": round(us_per_call, 1),
            "derived": derived}
+    if isinstance(us_per_call, Timing):
+        row["timing_repeats"] = us_per_call.repeats
+        row["timing_spread_us"] = round(us_per_call.spread_us, 1)
     if data:
         row.update(data)
     ROWS.append(row)

@@ -167,6 +167,46 @@ def site_linear_shapes(cfg: ModelConfig) -> dict[str, dict]:
     return shapes
 
 
+def plan_launch_shapes(
+    cfg: ModelConfig, m: int
+) -> tuple[tuple[int, int, int, str], ...]:
+    """The deduplicated (M, K, N, code_dtype) kernel launch shapes this
+    model's resolved plan emits for an M-token step — the autotune work list
+    ``scripts/autotune_tdvmm.py`` sweeps.
+
+    Grouped sites emit their ragged concat launch (one (K, sum of
+    lane-rounded member widths) shape, exactly what
+    ``core.layers.td_grouped_matmul`` dispatches); everything else emits its
+    distinct (d_in, d_out) weight shapes.  ``code_dtype`` is the noise-free
+    serving storage the plan would pick (noisy codes force f32 at runtime
+    but are a training-only path, not a tuning target).  Sites are included
+    whether or not the resolved plan currently enables them — the work list
+    is the geometry TD-VMM *would* run on this model, so tuning is not
+    invalidated by flipping a site on.
+    """
+    from repro.core.layers import _plan_code_dtype
+    from repro.kernels.tdvmm import tdvmm
+
+    plan = resolve_plan(cfg)
+    out: dict[tuple[int, int, int, str], None] = {}
+    for site, info in site_linear_shapes(cfg).items():
+        sc = plan.get(site)
+        if sc is None:
+            continue
+        mats = info["matrices"]
+        if site in GROUPED_SITES:
+            k = mats[0][0]
+            n_total = sum(
+                tdvmm.padded_size(n_g, tdvmm.LANE, tdvmm.LANE)
+                for _, n_g in mats)
+            shapes = [(k, n_total)]
+        else:
+            shapes = sorted(set(mats))
+        for k, n in shapes:
+            out[(m, k, n, _plan_code_dtype(sc, k, noisy=False))] = None
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class ResolvedPlan:
     """Concrete site table: every site in the model mapped to its config.

@@ -25,9 +25,10 @@ each output tile is written to HBM exactly once.
 expert banks: one analog tile per expert, per-expert scales, the expert dim
 mapped onto the kernel's batched grid axis.  ``td_grouped_matmul`` is the
 shared-input sibling: G same-input projection matrices (attention q/k/v, the
-SSM in_proj fan-out) stack onto the same batched axis while the input is
-encoded once and read by every tile — the paper's shared-DAC amortization at
-the model level, one kernel dispatch instead of G.
+SSM in_proj fan-out) concatenate along N into one ragged 2-D launch — each
+member rounded only to the 128 lane, not to the widest member — while the
+input is encoded once and read by every column — the paper's shared-DAC
+amortization at the model level, one kernel dispatch instead of G.
 
 Gradients: straight-through estimators on every quantizer (standard QAT) and
 a plain-matmul custom VJP on the integrate stage, so the layer is trainable
@@ -41,6 +42,7 @@ codes are flattened to (M, K) and zero-padded to the kernel's block multiples
 """
 from __future__ import annotations
 
+import math
 import warnings
 from typing import NamedTuple, Optional
 
@@ -62,7 +64,7 @@ class MatmulPlan(NamedTuple):
     k: int                           # N_in: sources per output column
     n: int
     backend: str                     # resolved: "jnp" | "pallas"
-    code_dtype: str                  # "int8" | "f32" code storage for K
+    code_dtype: str                  # "int4" | "int8" | "f32" code storage
     blocks: tuple[int, int, int]     # autotuned (bm, bk, bn)
 
 
@@ -79,6 +81,12 @@ def _plan_code_dtype(cfg: TDVMMLayerConfig, k: int, noisy: bool) -> str:
     fits_int8 = (quant.storage_dtype(cfg.bits) == jnp.int8
                  and quant.storage_dtype(cfg.weight_bits) == jnp.int8)
     if not noisy and fits_int8 and worst < (1 << 31):
+        # p <= 3 on both operands fits a signed nibble: the Pallas stream
+        # packs two codes per byte (half the int8 HBM bytes) and unpacks
+        # in-kernel — still exact int32 accumulation, bit-for-bit vs int8.
+        if cfg.bits <= quant.INT4_MAX_BITS and \
+                cfg.weight_bits <= quant.INT4_MAX_BITS:
+            return "int4"
         return "int8"
     # f32 integer-exactness envelope: the backend-parity guarantee (and exact
     # charge accumulation) needs worst-case |acc| < 2^24.  6-bit codes are
@@ -145,19 +153,30 @@ def _latch_gain(levels_x: int, levels_w: int, k: int) -> float:
 
 
 def _record_window(cfg: TDVMMLayerConfig, x_view, w_view, backend: str,
-                   code_dtype: str, gain: float, per_tile: bool) -> None:
+                   code_dtype: str, gain: float, per_tile: bool,
+                   group_widths: Optional[tuple[int, ...]] = None) -> None:
     """Calibration capture: when a ``core.calibration`` collector is active
     and the site has a digital readout boundary, record its latch-normalized
-    max|z| — a scalar, or the per-expert-tile ``(E,)`` vector when
-    ``per_tile`` — exactly the window per-call data calibration would use.
-    Costs one extra codes matmul per site, paid only during the (one-time)
-    calibration pass."""
+    max|z| — a scalar, the per-expert-tile ``(E,)`` vector when ``per_tile``,
+    or the per-member ``(G,)`` vector over a ragged concat launch's column
+    spans (``group_widths``) — exactly the window per-call data calibration
+    would use.  Costs one extra codes matmul per site, paid only during the
+    (one-time) calibration pass."""
     from repro.core import calibration
     if not calibration.active() or not cfg.io_quantize:
         return
     from repro.kernels.tdvmm import ops
     acc = ops.codes_matmul(x_view, w_view, backend, code_dtype=code_dtype)
     z = jnp.abs(acc.astype(jnp.float32) * gain)
+    if group_widths is not None:
+        # Member g owns columns [off, off + width_g); pad columns are zero
+        # charge, so the span max equals the member's standalone max.
+        off, maxes = 0, []
+        for wd in group_widths:
+            maxes.append(jnp.max(z[..., off:off + wd], initial=0.0))
+            off += wd
+        calibration.record(cfg.site, jnp.stack(maxes))
+        return
     calibration.record(
         cfg.site,
         jnp.max(z, axis=((-2, -1) if per_tile else None), initial=0.0))
@@ -282,18 +301,19 @@ def td_grouped_matmul(
     the whole tile — one DAC encode feeds every output column.  Call sites
     that project the *same* activation through several matrices (attention
     q/k/v, the SSM z/x/B/C/dt input projection) are the model-level analog:
-    this encodes ``x`` once and maps the G weight matrices onto the kernel's
-    batched grid axis as a shared-input launch, instead of G separate
-    ``td_matmul`` dispatches that each re-encode ``x``.
+    this encodes ``x`` once and runs the G weight matrices as a single
+    **ragged concat** launch — the members concatenate along N into one 2-D
+    ``(K, sum N_g)`` bank, each member rounded only to the 128 lane instead
+    of padded to the widest member (the old batched-grid stacking cost
+    attn.qkv with small KV heads a 2.3x padded-N overhead).
 
-    Uneven output widths are zero-padded to the group's block-rounded max-N
-    (padding is exact — zero codes integrate zero charge); per-member
-    per-channel weight scales and per-member readout windows ride the same
-    ``(G, ...)`` epilogue operands as per-expert calibration, so a grouped
-    launch is bit-for-bit identical to the G sequential calls whenever the
-    readout windows match (data calibration computes a per-member-tile
-    window, which *is* the per-call window).  Returns a tuple of G arrays
-    shaped ``(..., N_g)``.
+    Padding is exact — zero codes integrate zero charge; per-member
+    per-channel weight scales concatenate into the epilogue's per-column
+    scale row, and per-member readout windows resolve by column span
+    (``group_widths``), so a grouped launch is bit-for-bit identical to the
+    G sequential calls whenever the readout windows match (data calibration
+    computes a per-member-span window, which *is* the per-call window).
+    Returns a tuple of G arrays shaped ``(..., N_g)``.
     """
     ws = tuple(ws)
     if not ws:
@@ -308,7 +328,6 @@ def td_grouped_matmul(
     ns = tuple(w.shape[-1] for w in ws)
     for w in ws:
         assert w.ndim == 2 and w.shape[0] == k, (x.shape, w.shape)
-    g = len(ws)
     batch_shape = tuple(x.shape[:-1])
     m = 1
     for d in batch_shape:
@@ -316,25 +335,30 @@ def td_grouped_matmul(
     noisy = cfg.noise and key is not None
     code_dtype = _plan_code_dtype(cfg, k, noisy)
     from repro.kernels.tdvmm import ops, tdvmm
-    kp = ops.plan_kernel(cfg.backend, m, k, max(ns), code_dtype)
-    # One padded width for the whole group: the max member width rounded to
-    # the launch's N block (so the stacking pad is the only pad).
-    n_pad = tdvmm.padded_size(max(ns), kp.bn, tdvmm.LANE)
+    # Per-member column spans: each member rounds to the 128 lane only.
+    widths = tuple(
+        tdvmm.padded_size(n, tdvmm.LANE, tdvmm.LANE) for n in ns)
+    n_total = sum(widths)
+    kp = ops.plan_kernel(cfg.backend, m, k, n_total, code_dtype)
+    # No N block may span two members' readout windows: shrink block_n to
+    # the gcd of the plan's choice and every member span (all multiples of
+    # the 128 lane, so the gcd stays lane-aligned).
+    bn_g = math.gcd(kp.bn, *widths)
 
     qx = quant.encode_input(x, cfg.bits)                       # encode ONCE
-    qw = quant.stack_group(
+    qw = quant.concat_group(
         [quant.program_weights(w, cfg.weight_bits, cfg.per_channel)
-         for w in ws], n_pad)
+         for w in ws], widths)
     if noisy:
         qw = quant.program_noise(qw, cfg.spec, key)
 
     gain = _latch_gain(qx.levels, qw.levels, k)
-    w_scale = qw.scale.reshape(g, n_pad) * (2.0 * k)
-    out_bits, out_scale = _readout_args(cfg, n_experts=g)
-    # Per-member windows: each group member is its own analog tile on the
-    # batched grid, so calibration records one (G,) vector for the site.
+    w_scale = qw.scale.reshape(n_total) * (2.0 * k)
+    out_bits, out_scale = _readout_args(cfg, n_experts=len(ws))
+    # Per-member windows: each member's column span is its own analog tile,
+    # so calibration records one (G,) vector for the site.
     _record_window(cfg, qx.view().reshape(m, k), qw.view(), kp.backend,
-                   code_dtype, gain, per_tile=True)
+                   code_dtype, gain, per_tile=True, group_widths=widths)
     y = ops.tdvmm_matmul(
         qx.view().reshape(m, k),
         qw.view(),
@@ -345,11 +369,15 @@ def td_grouped_matmul(
         out_scale=out_scale,
         backend=kp.backend,
         code_dtype=code_dtype,
-        block_sizes=kp.blocks,
-    )                                                          # (G, M, n_pad)
-    return tuple(
-        y[i, :, :n].reshape(batch_shape + (n,)).astype(x.dtype)
-        for i, n in enumerate(ns))
+        block_sizes=(kp.bm, kp.bk, bn_g),
+        group_widths=widths,
+    )                                                          # (M, n_total)
+    outs, off = [], 0
+    for n, wd in zip(ns, widths):
+        outs.append(
+            y[:, off:off + n].reshape(batch_shape + (n,)).astype(x.dtype))
+        off += wd
+    return tuple(outs)
 
 
 def calibrate_out_scale(

@@ -49,11 +49,59 @@ from repro.core import encoding as enc
 
 # Signed-magnitude codes span [-(2^p - 1), 2^p - 1]: int8 holds p <= 7.
 INT8_MAX_BITS = 7
+# A signed nibble holds [-8, 7] ⊇ [-7, 7]: p <= 3 packs two codes per byte.
+INT4_MAX_BITS = 3
 
 
 def storage_dtype(bits: int):
     """Canonical code storage: int8 when the signed code range fits."""
     return jnp.int8 if bits <= INT8_MAX_BITS else jnp.float32
+
+
+def pack_int4(codes: jax.Array, axis: int) -> jax.Array:
+    """Pack int8 codes with |code| <= 7 (p <= 3) two-per-byte along ``axis``.
+
+    Byte ``kp`` holds code ``2*kp`` in the low nibble and ``2*kp + 1`` in the
+    high nibble.  An odd-length axis is zero-padded to even first — a zero
+    code is an inert (never-on) current source, so the pad contributes no
+    charge and the unpacked tail column multiplies to exactly zero.  The
+    result is an int8 array of half the (even-padded) extent: the HBM word
+    the Pallas kernel streams and unpacks in-VMEM (``tdvmm._unpack_nibbles``).
+    """
+    axis = axis % codes.ndim
+    k = codes.shape[axis]
+    if k % 2:
+        pad = [(0, 0)] * codes.ndim
+        pad[axis] = (0, 1)
+        codes = jnp.pad(codes, pad)
+    codes = codes.astype(jnp.int8)
+    idx_lo = [slice(None)] * codes.ndim
+    idx_hi = [slice(None)] * codes.ndim
+    idx_lo[axis] = slice(0, None, 2)
+    idx_hi[axis] = slice(1, None, 2)
+    lo = codes[tuple(idx_lo)]
+    hi = codes[tuple(idx_hi)]
+    return (lo & jnp.int8(0x0F)) | (hi << 4).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, k: int, axis: int) -> jax.Array:
+    """Inverse of ``pack_int4``: int8 nibble pairs -> ``k`` int8 codes.
+
+    Arithmetic shifts sign-extend the nibbles ((v << 4) >> 4 for the low,
+    v >> 4 for the high), then the even/odd columns interleave back along
+    ``axis``; a pad column from an odd ``k`` is dropped.
+    """
+    axis = axis % packed.ndim
+    packed = packed.astype(jnp.int8)
+    lo = ((packed << 4).astype(jnp.int8) >> 4).astype(jnp.int8)
+    hi = (packed >> 4).astype(jnp.int8)
+    out = jnp.stack([lo, hi], axis=axis + 1)
+    shape = list(packed.shape)
+    shape[axis] = 2 * packed.shape[axis]
+    out = out.reshape(shape)
+    idx = [slice(None)] * out.ndim
+    idx[axis] = slice(0, k)
+    return out[tuple(idx)]
 
 
 def ste(x_quant: jax.Array, x: jax.Array) -> jax.Array:
@@ -112,7 +160,13 @@ class QuantizedTensor:
         qf = self.codes.astype(jnp.float32)
         if self.ste is None:
             return qf
-        return self.ste + jax.lax.stop_gradient(qf - self.ste)
+        # qf + (ste - sg(ste)), not ste + sg(qf - ste): the correction term
+        # is exactly +0.0 in IEEE arithmetic, so the forward value is the
+        # *integer* code — float summation over integer products is then
+        # order-independent, which is what keeps ragged/blocked launches
+        # bit-for-bit with their sequential counterparts even under QAT.
+        # The old form rounds twice and lands an ulp off the code grid.
+        return qf + (self.ste - jax.lax.stop_gradient(self.ste))
 
     def dequantize(self) -> jax.Array:
         """Back to model units: codes / L * scale."""
@@ -214,6 +268,53 @@ def stack_group(qws: "list[QuantizedTensor] | tuple[QuantizedTensor, ...]",
     stes = None
     if all(q.ste is not None for q in qws):
         stes = jnp.stack([pad_codes(q.ste) for q in qws])
+    return QuantizedTensor(codes=codes, scale=scale, bits=bits, ste=stes)
+
+
+def concat_group(qws: "list[QuantizedTensor] | tuple[QuantizedTensor, ...]",
+                 widths: "tuple[int, ...]") -> QuantizedTensor:
+    """Concatenate G programmed (K, N_g) members along N into one ragged bank.
+
+    The ragged grouped TD-VMM launch (``core.layers.td_grouped_matmul``) runs
+    one shared input against the column concat of G same-input projections —
+    a single 2-D (K, sum widths) launch in which member g owns the
+    ``widths[g]``-wide column span.  Each member zero-pads only up to its own
+    ``widths[g]`` (its lane-rounded width), NOT to the widest member — that
+    per-member rounding is the whole point versus ``stack_group``'s
+    (G, K, max-N) batched bank under uneven widths (heavy GQA).  Zero codes
+    are inert, so pad columns integrate zero charge; padded scale entries are
+    1.0 (never multiplied against a nonzero code).  STE linear terms concat
+    alongside the codes.
+    """
+    if not qws:
+        raise ValueError("concat_group needs at least one member")
+    if len(widths) != len(qws):
+        raise ValueError(f"{len(widths)} widths for {len(qws)} members")
+    bits = qws[0].bits
+    if any(q.bits != bits for q in qws):
+        raise ValueError(
+            f"grouped members must share a code width, got "
+            f"{[q.bits for q in qws]}")
+    if any(q.codes.ndim != 2 for q in qws):
+        raise ValueError("concat_group concatenates 2-D (K, N) members")
+    if any(q.codes.shape[-1] > wd for q, wd in zip(qws, widths)):
+        raise ValueError(
+            f"member widths {[q.codes.shape[-1] for q in qws]} exceed the "
+            f"declared spans {tuple(widths)}")
+
+    def pad_codes(c, wd):
+        return jnp.pad(c, ((0, 0), (0, wd - c.shape[-1])))
+
+    codes = jnp.concatenate(
+        [pad_codes(q.codes, wd) for q, wd in zip(qws, widths)], axis=-1)
+    scale = jnp.concatenate(
+        [jnp.pad(jnp.broadcast_to(q.scale, (1, q.codes.shape[-1])),
+                 ((0, 0), (0, wd - q.codes.shape[-1])), constant_values=1.0)
+         for q, wd in zip(qws, widths)], axis=-1)
+    stes = None
+    if all(q.ste is not None for q in qws):
+        stes = jnp.concatenate(
+            [pad_codes(q.ste, wd) for q, wd in zip(qws, widths)], axis=-1)
     return QuantizedTensor(codes=codes, scale=scale, bits=bits, ste=stes)
 
 

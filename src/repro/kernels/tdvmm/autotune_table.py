@@ -1,0 +1,96 @@
+"""Block-size autotune tables for the TD-VMM kernel (GENERATED FILE).
+
+Regenerate with ``python scripts/autotune_tdvmm.py`` — the script sweeps
+(bm, bk, bn) candidates per (M, K, N, dtype) launch shape and rewrites the
+table for the platform it ran on, preserving the other platform's entries.
+Hand edits survive only until the next script run; tune through the script.
+
+Two tables, selected by ``tdvmm.autotune_platform()``:
+
+  MOSAIC_TABLE     real-TPU block choices: VMEM-budgeted MXU tiles (int8
+                   tiles carry 4x the codes per VMEM byte, so K blocks
+                   double at equal budget).  Entries come from sizing
+                   arithmetic until measured on hardware (ROADMAP).
+  INTERPRET_TABLE  CPU interpret-mode choices: interpret wall-clock scales
+                   with the *grid step count* (each step is a Python-level
+                   block dispatch), so the sweep lands on the largest
+                   launchable blocks — the opposite regime from VMEM-bound
+                   Mosaic tiling.
+
+Keys are the *unpadded* (M, K, N, dtype-name) of the codes matmul with
+dtype-name in {"float32", "int8", "int4"}; int4 keys use the unpacked K.
+Values are (bm, bk, bn).  Misses fall back to the per-platform heuristic in
+``tdvmm.autotune_blocks`` (and warn once via ``ops.plan_kernel``).
+"""
+
+# fmt: off
+MOSAIC_TABLE: dict[tuple[int, int, int, str], tuple[int, int, int]] = {
+    (8, 128, 64, "float32"): (8, 128, 64),
+    (8, 128, 64, "int8"): (32, 128, 64),
+    (256, 896, 896, "float32"): (128, 448, 128),
+    (256, 896, 896, "int8"): (128, 896, 128),
+    (512, 1024, 4096, "float32"): (128, 512, 256),
+    (512, 1024, 4096, "int8"): (128, 1024, 256),
+    (512, 2048, 512, "float32"): (128, 512, 128),
+    (512, 2048, 512, "int8"): (128, 1024, 128),
+}
+
+INTERPRET_TABLE: dict[tuple[int, int, int, str], tuple[int, int, int]] = {
+    (8, 128, 64, "float32"): (16384, 32768, 32768),
+    (8, 128, 64, "int8"): (16384, 32768, 2048),
+    (33, 300, 130, "float32"): (16384, 32768, 32768),
+    (64, 512, 2432, "int8"): (16384, 32768, 32768),
+    (64, 896, 1152, "int8"): (16384, 32768, 2048),
+    (256, 896, 896, "float32"): (16384, 32768, 32768),
+    (256, 1024, 512, "int8"): (512, 4096, 1024),
+    (256, 1024, 4096, "int8"): (16384, 32768, 32768),
+    (512, 1024, 1024, "int8"): (16384, 32768, 2048),
+    (512, 1024, 2816, "int8"): (16384, 32768, 32768),
+    (512, 1024, 3072, "int8"): (16384, 32768, 32768),
+    (512, 1024, 4096, "float32"): (16384, 32768, 32768),
+    (512, 1024, 4096, "int4"): (16384, 32768, 32768),
+    (512, 1024, 4096, "int8"): (16384, 32768, 32768),
+    (512, 2048, 512, "float32"): (16384, 32768, 2048),
+    (512, 2048, 512, "int4"): (512, 8192, 1024),
+    (512, 2048, 512, "int8"): (512, 32768, 2048),
+    (512, 2048, 2048, "int8"): (512, 32768, 2048),
+    (512, 2048, 6144, "int8"): (512, 4096, 1024),
+    (512, 2048, 7168, "int8"): (16384, 32768, 32768),
+    (512, 2048, 8192, "int8"): (512, 4096, 1024),
+    (512, 2048, 8576, "int8"): (16384, 32768, 32768),
+    (512, 2048, 50432, "int8"): (16384, 32768, 32768),
+    (512, 2560, 2560, "int8"): (16384, 32768, 32768),
+    (512, 2560, 7680, "int8"): (16384, 32768, 32768),
+    (512, 2560, 10240, "int8"): (16384, 32768, 32768),
+    (512, 2560, 10624, "int8"): (16384, 32768, 32768),
+    (512, 2560, 32000, "int8"): (16384, 32768, 32768),
+    (512, 2816, 1024, "int8"): (16384, 32768, 32768),
+    (512, 4096, 2048, "int8"): (512, 32768, 2048),
+    (512, 4096, 4096, "int8"): (16384, 32768, 32768),
+    (512, 4096, 6144, "int8"): (16384, 32768, 32768),
+    (512, 4096, 14336, "int8"): (16384, 32768, 32768),
+    (512, 4096, 32000, "int8"): (16384, 32768, 32768),
+    (512, 5120, 2560, "int8"): (16384, 32768, 32768),
+    (512, 5120, 5120, "int8"): (16384, 32768, 32768),
+    (512, 5120, 7168, "int8"): (16384, 32768, 32768),
+    (512, 5120, 13824, "int8"): (16384, 32768, 32768),
+    (512, 5120, 152064, "int8"): (16384, 32768, 32768),
+    (512, 6144, 6144, "int8"): (16384, 32768, 32768),
+    (512, 6144, 8192, "int8"): (16384, 32768, 32768),
+    (512, 6144, 24576, "int8"): (16384, 32768, 32768),
+    (512, 6144, 256000, "int8"): (16384, 32768, 32768),
+    (512, 7168, 2048, "int8"): (16384, 32768, 2048),
+    (512, 7168, 7168, "int8"): (16384, 32768, 32768),
+    (512, 7168, 8960, "int8"): (16384, 32768, 32768),
+    (512, 7168, 9216, "int8"): (16384, 32768, 32768),
+    (512, 7168, 20480, "int8"): (16384, 32768, 32768),
+    (512, 7168, 64000, "int8"): (16384, 32768, 32768),
+    (512, 7168, 163840, "int8"): (16384, 32768, 32768),
+    (512, 8192, 2048, "int8"): (16384, 32768, 2048),
+    (512, 10240, 2560, "int8"): (16384, 32768, 32768),
+    (512, 13824, 5120, "int8"): (16384, 32768, 32768),
+    (512, 14336, 4096, "int8"): (16384, 32768, 32768),
+    (512, 20480, 7168, "int8"): (16384, 32768, 32768),
+    (512, 24576, 6144, "int8"): (16384, 32768, 32768),
+}
+# fmt: on

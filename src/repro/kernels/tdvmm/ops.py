@@ -17,18 +17,23 @@ Code dtypes (``code_dtype``): ``"int8"`` stores the codes as int8 in HBM
 (quarter the f32 bytes) and accumulates exactly in int32 on both backends —
 the MXU int8 path on TPU, an s8 x s8 -> s32 dot under XLA elsewhere — so the
 backends are bit-for-bit identical for *any* K with |acc| < 2^31, with no
-2^24 f32 envelope.  ``"f32"`` is the legacy float-code path (8-bit codes,
-noise-perturbed analog currents); exact only while |acc| < 2^24.  ``"auto"``
-follows the input arrays' dtypes.
+2^24 f32 envelope.  ``"int4"`` (codes with |code| <= 7, p <= 3) additionally
+packs two codes per byte for the Pallas stream (``core.quant.pack_int4``,
+unpacked in-kernel) — half the int8 bytes, still exact int32 accumulation,
+bit-for-bit identical to int8.  ``"f32"`` is the legacy float-code path
+(8-bit codes, noise-perturbed analog currents); exact only while
+|acc| < 2^24.  ``"auto"`` follows the input arrays' dtypes.
 
-Epilogue placement: with a *fixed* readout window (``out_scale`` given, the
-serving-path calibration cache) or no readout at all, the Pallas backend runs
-the whole epilogue inside the kernel's final K step (tdvmm_fused_kernel) —
-each output tile is written to HBM exactly once, already in model units.  A
-data-calibrated window (``out_scale=None`` with ``out_bits``) needs a global
-max|z| and falls back to the unfused jnp epilogue after the codes matmul.
-Both epilogues evaluate the same expression term for term, so fused and
-unfused results are bit-for-bit identical.
+Epilogue placement (Pallas backend): a *fixed* readout window (``out_scale``
+given) or no readout runs the whole epilogue inside the kernel's final K
+step (tdvmm_fused_kernel); a data-calibrated window (``out_scale=None`` with
+``out_bits``) runs the two-phase ``tdvmm_calibrated_kernel``, which folds
+the per-slot max|z| reduction into the accumulator walk and applies the
+windowed readout in the same launch.  Either way each output tile
+materializes in HBM exactly once, already in model units
+(``fused_calibration=False`` forces the legacy unfused jnp epilogue for the
+calibrated case).  All epilogues evaluate the same expression term for term,
+so every pairing is bit-for-bit identical.
 
 Batching: 3-D inputs (E, M, K) x (E, K, N) map the expert dim onto the
 kernel's batched grid axis (scales (E, M) / (E, N)); 2-D inputs run as E=1.
@@ -37,6 +42,19 @@ grid — the paper's shared-DAC dataflow: one (M, K) code matrix (and one
 (M,) scale vector) feeds all G weight tiles in a single launch, returning
 (G, M, N).  Per-group w_scale/out_scale ride the same (G, ...) operands as
 per-expert batching.
+
+Ragged grouped launches (``group_widths``): G same-input projections of
+uneven widths concatenate along N into ONE 2-D (M, K) x (K, sum N_g) launch
+— each member zero-padded only to the 128 lane, not to the widest member —
+with per-member readout windows addressed by column span (a tuple
+``out_scale`` maps per member; data calibration reduces per member).  This
+is how ``core.layers.td_grouped_matmul`` runs attn.qkv / ssm.in_proj without
+padding every member to max(N_g).
+
+Block sizes: ``plan_kernel`` resolves the backend and consults the
+per-platform autotune tables (tdvmm.autotune_lookup), records every lookup
+in ``autotune_report()``, and warns ONCE per untuned shape instead of
+silently falling back to heuristic blocks.
 
 Gradients flow through a shared custom VJP (plain matmul cotangents on the
 STE-wrapped codes, identity through the readout quantizer), so every backend
@@ -47,14 +65,16 @@ the QAT path feeds the f32 STE view and lets the forward cast to int8.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import logging
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.tdvmm.tdvmm import (
-    acc_dtype_for, autotune_blocks, pad_to_blocks, tdvmm_fused_kernel,
+    acc_dtype_for, autotune_blocks, autotune_lookup, autotune_platform,
+    pad_to_blocks, tdvmm_calibrated_kernel, tdvmm_fused_kernel,
     tdvmm_matmul_kernel)
 
 
@@ -66,7 +86,8 @@ def resolve_backend(backend: str) -> str:
     """'auto' | 'jnp' | 'pallas' -> concrete integrate implementation.
 
     Shape-aware form: ``plan_kernel`` additionally consults the block-size
-    autotune table (tdvmm.AUTOTUNE_TABLE) keyed on (M, K, N, dtype).
+    autotune tables (kernels/tdvmm/autotune_table.py) keyed on
+    (M, K, N, dtype).
     """
     if backend == "auto":
         return "pallas" if _on_tpu() else "jnp"
@@ -81,38 +102,107 @@ class KernelPlan(NamedTuple):
     bm: int
     bk: int
     bn: int
+    code_dtype: str = "f32"
+    autotune_hit: bool = False   # False = heuristic fallback (untuned shape)
+    platform: str = "interpret"  # which autotune table answered
 
     @property
     def blocks(self) -> tuple[int, int, int]:
         return (self.bm, self.bk, self.bn)
 
 
+# Every plan_kernel lookup of this process, keyed (M, K, N, dtype-name) —
+# the kernel report that makes untuned (heuristic-fallback) shapes visible
+# in BENCH_kernels.json instead of quietly slow.
+_AUTOTUNE_LOG: dict[tuple[int, int, int, str], dict] = {}
+_AUTOTUNE_WARNED: set[tuple[int, int, int, str]] = set()
+_logger = logging.getLogger(__name__)
+
+
 def plan_kernel(backend: str, m: int, k: int, n: int,
                 code_dtype: str = "f32") -> KernelPlan:
-    """resolve_backend + the (M, K, N, dtype)-keyed block autotune table."""
-    dt = jnp.int8 if code_dtype == "int8" else jnp.float32
-    bm, bk, bn = autotune_blocks(m, k, n, dt)
-    return KernelPlan(resolve_backend(backend), bm, bk, bn)
+    """resolve_backend + the (M, K, N, dtype)-keyed block autotune table.
+
+    Records the lookup (blocks, hit/miss, platform) into
+    ``autotune_report()`` and warns once per untuned shape — run
+    ``scripts/autotune_tdvmm.py`` to backfill the table."""
+    name = "float32" if code_dtype in ("f32", "auto") else code_dtype
+    platform = autotune_platform()
+    blocks, hit = autotune_lookup(m, k, n, name, platform)
+    key = (m, k, n, name)
+    _AUTOTUNE_LOG[key] = {"blocks": blocks, "hit": hit, "platform": platform}
+    if not hit and key not in _AUTOTUNE_WARNED:
+        _AUTOTUNE_WARNED.add(key)
+        # One-time log (not warnings.warn: planning runs on hot, otherwise
+        # warning-free paths); the miss also lands in autotune_report().
+        _logger.warning(
+            "TD-VMM autotune miss: no %s table entry for (M, K, N, dtype)="
+            "(%d, %d, %d, %s); using heuristic blocks %s.  Run "
+            "scripts/autotune_tdvmm.py to tune this shape.",
+            platform, m, k, n, name, blocks)
+    return KernelPlan(resolve_backend(backend), *blocks,
+                      code_dtype=code_dtype, autotune_hit=hit,
+                      platform=platform)
+
+
+def autotune_report() -> dict:
+    """Every (M, K, N, dtype) this process planned, with the chosen blocks
+    and whether the autotune table answered — benches attach this to their
+    JSON report so CI sees exactly which shapes ran untuned."""
+    entries = {
+        f"{m}x{k}x{n}:{name}": dict(v)
+        for (m, k, n, name), v in sorted(_AUTOTUNE_LOG.items())}
+    return {"platform": autotune_platform(),
+            "entries": entries,
+            "misses": sorted(k for k, v in entries.items() if not v["hit"])}
+
+
+def reset_autotune_report() -> None:
+    _AUTOTUNE_LOG.clear()
+
+
+def _member_window_cols(values, group_widths, n: int) -> jax.Array:
+    """(G,) per-member window values -> a (1, 1, N) per-column vector over
+    the ragged concat span (pad columns get 1.0 — they only ever multiply
+    zero-code outputs)."""
+    parts = [jnp.full((wd,), np.float32(v), jnp.float32)
+             for v, wd in zip(values, group_widths)]
+    tail = n - sum(group_widths)
+    if tail:
+        parts.append(jnp.ones((tail,), jnp.float32))
+    return jnp.concatenate(parts).reshape(1, 1, n)
 
 
 # ---------------------------------------------------------------------------
-# Epilogue (unfused form; the fused kernel mirrors this term for term)
+# Epilogue (unfused form; the fused kernels mirror this term for term)
 # ---------------------------------------------------------------------------
-def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale):
+def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
+              group_widths=None):
     """gain -> optional p-bit readout -> per-row x per-channel rescale.
 
     acc: (E, M, N) int32 or f32; x_scale: (E, M); w_scale: (E, N).
     ``out_scale=None`` calibrates the ADC window to max|z| *per expert tile*
     (each expert is its own analog array; E=1 reproduces the global window).
     A tuple ``out_scale`` is an (E,)-vector of fixed per-expert windows —
-    one calibrated readout window per expert's analog tile.
+    one calibrated readout window per expert's analog tile.  With
+    ``group_widths`` (ragged concat launch) windows are per *member column
+    span* instead: a tuple maps one window per member, and data calibration
+    reduces max|z| over each member's columns.
     """
-    z = acc.astype(jnp.float32) * gain
+    # Pin the inputs and (acc * gain) as units: under a caller's jit the
+    # latch gain and the caller's scale chains are visible to XLA, which
+    # sinks their constant factors through the readout multiplies — e.g.
+    # (w_scale * 2K) * back reassociates into w_scale * (2K * back), 1 ulp
+    # off the eager / in-kernel association.
+    x_scale = jax.lax.optimization_barrier(x_scale.astype(jnp.float32))
+    w_scale = jax.lax.optimization_barrier(w_scale.astype(jnp.float32))
+    z = jax.lax.optimization_barrier(
+        acc.astype(jnp.float32) * jnp.float32(gain))
     ws_row = w_scale[..., None, :]
     if out_bits is not None:
         # Bit-for-bit contract: a calibration-pinned window must reproduce
         # the per-call data-calibrated window it was captured from, and the
-        # fused Pallas epilogue must match this unfused form exactly.  Two
+        # fused Pallas epilogues must match this unfused form exactly.  Two
         # XLA behaviors break that if window-derived factors enter the graph
         # as literals: division by a constant strength-reduces into a
         # 1-ulp-off reciprocal multiply, and constant factors get
@@ -120,27 +210,71 @@ def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale):
         # window is always a *runtime* value (constants pass through an
         # optimization_barrier), divisions are explicit, and the post-round
         # rescale chain ``(q * xs) * (ws * back)`` carries no constants —
-        # matching the fused kernel's association term for term.
+        # matching the fused kernels' association term for term.
         s = out_scale
         if s is None:
-            s = jax.lax.stop_gradient(jnp.maximum(jnp.max(
-                jnp.abs(z), axis=(-2, -1), keepdims=True, initial=0.0), 1e-9))
+            if group_widths is not None:
+                # Per-member windows over the concat columns: f32 max is
+                # exact, so the per-span reduction equals each member's
+                # standalone max bit for bit.
+                off, segs = 0, []
+                for wd in group_widths:
+                    seg = jnp.max(jnp.abs(z[..., off:off + wd]),
+                                  axis=(-2, -1), keepdims=True, initial=0.0)
+                    segs.append(jnp.broadcast_to(
+                        seg, seg.shape[:-1] + (wd,)))
+                    off += wd
+                s = jnp.concatenate(segs, axis=-1)
+            else:
+                s = jnp.max(jnp.abs(z), axis=(-2, -1), keepdims=True,
+                            initial=0.0)
+            s = jax.lax.stop_gradient(jnp.maximum(s, 1e-9))
         elif isinstance(s, tuple):
-            s = jnp.asarray(s, jnp.float32).reshape(-1, 1, 1)
+            if group_widths is not None:
+                s = _member_window_cols(s, group_widths, z.shape[-1])
+            else:
+                s = jnp.asarray(s, jnp.float32).reshape(-1, 1, 1)
         else:
             s = jnp.float32(s)
         s = jax.lax.optimization_barrier(s.astype(jnp.float32))
         levels = float((1 << out_bits) - 1)
-        inv = jnp.float32(1.0) / s
+        # The barrier pins mul(z, inv): XLA otherwise strength-reduces
+        # mul(z, div(1, s)) back into div(z, s) — 1 ulp off, and only in
+        # programs where s is a scalar broadcast, so a grouped (vector
+        # window) launch and its sequential counterpart would disagree.
+        inv = jax.lax.optimization_barrier(jnp.float32(1.0) / s)
         z = jnp.round(jnp.clip(z * inv, -1.0, 1.0) * levels)
         back = jax.lax.optimization_barrier(
             s * (np.float32(1.0) / np.float32(levels)))
-        ws_row = ws_row * back
-    return (z * x_scale[..., :, None]) * ws_row
+        ws_row = jax.lax.optimization_barrier(ws_row * back)
+    # Pin (z * xs) before the ws_row multiply: with both factors broadcasts,
+    # XLA reassociates the chain shape-dependently; the kernels' in-VMEM
+    # epilogues evaluate exactly this association, term for term.
+    zx = jax.lax.optimization_barrier(z * x_scale[..., :, None])
+    return zx * ws_row
+
+
+def _calib_slots(e: int, n: int, bn: int,
+                 group_widths) -> tuple[jax.Array, int]:
+    """(slots, nslots) for the calibrated kernel: the readout-slot id of
+    every N column block — the expert id for batched launches, the group
+    member owning the span for ragged launches (pad-tail blocks fold into
+    the last member; their zero accumulators can't move an abs-max)."""
+    bn = min(bn, n)
+    nn = n // bn
+    if group_widths is None:
+        ids = jnp.broadcast_to(
+            jnp.arange(e, dtype=jnp.int32)[:, None], (e, nn))
+        return ids, e
+    bounds = np.cumsum(group_widths)
+    ids = np.searchsorted(bounds, np.arange(nn) * bn, side="right")
+    ids = np.minimum(ids, len(group_widths) - 1).astype(np.int32)
+    return jnp.asarray(ids)[None, :], len(group_widths)
 
 
 def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                out_scale, backend, interpret, code_dtype, blocks):
+                out_scale, backend, interpret, code_dtype, blocks,
+                group_widths, fused_calibration):
     ex, m, k = x_codes.shape
     e, _, n = w_codes.shape
     shared_x = ex == 1 and e > 1
@@ -149,17 +283,18 @@ def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
         # Empty expert batch / filtered serving batch / zero-width contraction:
         # zero charge everywhere, and readout(0) * scales == 0 on every path.
         return jnp.zeros((e, m, n), jnp.float32)
-    if code_dtype == "int8":
-        # Codes are integer-valued with |code| <= 127 by the caller's
-        # contract (p <= 7); the cast is exact and XLA fuses it into the
-        # producer, so the kernel streams 1-byte codes from HBM.
+    if code_dtype in ("int8", "int4"):
+        # Codes are integer-valued within the storage range by the caller's
+        # contract (p <= 7 / p <= 3); the cast is exact and XLA fuses it
+        # into the producer, so the kernel streams 1-byte codes from HBM.
         xi = x_codes.astype(jnp.int8)
         wi = w_codes.astype(jnp.int8)
     else:
         xi = x_codes.astype(jnp.float32)
         wi = w_codes.astype(jnp.float32)
     if blocks is None:
-        blocks = autotune_blocks(m, k, n, xi.dtype)
+        blocks = autotune_blocks(
+            m, k, n, "int4" if code_dtype == "int4" else xi.dtype)
     bm, bk, bn = blocks
 
     if backend == "jnp":
@@ -171,47 +306,81 @@ def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
         else:
             acc = jnp.einsum("emk,ekn->emn", xi, wi,
                              preferred_element_type=acc_dtype_for(xi.dtype))
-        return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale)
+        return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
+                         group_widths)
 
+    unpack4 = code_dtype == "int4"
+    if unpack4:
+        # Two codes per byte for the HBM stream; launch geometry (K, bk)
+        # switches to packed units — the kernel unpacks per block.
+        from repro.core.quant import pack_int4
+        xi = pack_int4(xi, axis=-1)
+        wi = pack_int4(wi, axis=-2)
+        bk = max(bk // 2, 1)
     xp, wp = pad_to_blocks(xi, wi, bm, bk, bn)
     mp, np_ = xp.shape[-2], wp.shape[-1]
+    exact = (mp, np_) == (m, n)
+
     if out_bits is None or out_scale is not None:
         # Fixed readout window (or no readout): fully fused epilogue — the
         # (bm, bn) tile leaves VMEM exactly once, already in model units.
         xsp = jnp.pad(x_scale, ((0, 0), (0, mp - m)))[..., :, None]
         wsp = jnp.pad(w_scale, ((0, 0), (0, np_ - n)))[..., None, :]
+        window, scale_arg = None, out_scale
+        if (out_bits is not None and group_widths is not None
+                and isinstance(out_scale, tuple)):
+            window, scale_arg = _member_window_cols(
+                out_scale, group_widths, np_), None
         y = tdvmm_fused_kernel(
-            xp, wp, xsp, wsp, gain=gain, out_bits=out_bits,
-            out_scale=out_scale, bm=bm, bk=bk, bn=bn, interpret=interpret)
-        return y[:, :m, :n]
-    # Data-calibrated readout window: needs a global (per-expert) max over
-    # the latch-normalized accumulation — integrate in the kernel, run the
-    # epilogue unfused.
+            xp, wp, xsp, wsp, window=window, gain=gain, out_bits=out_bits,
+            out_scale=scale_arg, bm=bm, bk=bk, bn=bn, interpret=interpret,
+            unpack4=unpack4)
+        return y if exact else y[:, :m, :n]
+    if fused_calibration:
+        # Data-calibrated window, still one launch / one HBM output: the
+        # two-phase kernel folds the per-slot max into the accumulator walk.
+        xsp = jnp.pad(x_scale, ((0, 0), (0, mp - m)))[..., :, None]
+        wsp = jnp.pad(w_scale, ((0, 0), (0, np_ - n)))[..., None, :]
+        slots, nslots = _calib_slots(e, np_, bn, group_widths)
+        y = tdvmm_calibrated_kernel(
+            xp, wp, xsp, wsp, slots, gain=gain, out_bits=out_bits,
+            nslots=nslots, bm=bm, bk=bk, bn=bn, interpret=interpret,
+            unpack4=unpack4)
+        return y if exact else y[:, :m, :n]
+    # Legacy two-pass: integrate in the kernel, epilogue unfused in jnp.
     acc = tdvmm_matmul_kernel(
-        xp, wp, bm=bm, bk=bk, bn=bn, interpret=interpret)[:, :m, :n]
-    return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale)
+        xp, wp, bm=bm, bk=bk, bn=bn, interpret=interpret, unpack4=unpack4)
+    acc = acc if exact else acc[:, :m, :n]
+    return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
+                     group_widths)
 
 
 # ---------------------------------------------------------------------------
 # Shared custom VJP (all backends / dtypes / fusion modes)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10))
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12))
 def _tdvmm_core(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                out_scale, backend, interpret, code_dtype, blocks):
+                out_scale, backend, interpret, code_dtype, blocks,
+                group_widths, fused_calibration):
     """Differentiable integrate+epilogue on canonical (E, M, K) shapes."""
     return _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                       out_scale, backend, interpret, code_dtype, blocks)
+                       out_scale, backend, interpret, code_dtype, blocks,
+                       group_widths, fused_calibration)
 
 
 def _tdvmm_core_fwd(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                    out_scale, backend, interpret, code_dtype, blocks):
+                    out_scale, backend, interpret, code_dtype, blocks,
+                    group_widths, fused_calibration):
     y = _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                    out_scale, backend, interpret, code_dtype, blocks)
+                    out_scale, backend, interpret, code_dtype, blocks,
+                    group_widths, fused_calibration)
     return y, (x_codes, w_codes, x_scale, w_scale, y)
 
 
 def _tdvmm_core_bwd(gain, out_bits, out_scale, backend, interpret,
-                    code_dtype, blocks, res, g):
+                    code_dtype, blocks, group_widths, fused_calibration,
+                    res, g):
     x_codes, w_codes, x_scale, w_scale, y = res
     denom = x_scale[..., :, None] * w_scale[..., None, :]
     # Recover the post-readout latch value z = y / (xs * ws); internal
@@ -224,7 +393,9 @@ def _tdvmm_core_bwd(gain, out_bits, out_scale, backend, interpret,
     wf = w_codes.astype(jnp.float32)
     if x_codes.shape[0] == 1 and dacc.shape[0] > 1:
         # Shared-input grouped launch: the one x (and x_scale) fed every
-        # group tile, so its cotangent sums over the group axis.
+        # group tile, so its cotangent sums over the group axis.  (Ragged
+        # concat launches are plain 2-D matmuls here: member columns sum
+        # into the shared x cotangent through the ordinary contraction.)
         gx = jnp.einsum("gmn,gkn->mk", dacc, wf,
                         preferred_element_type=jnp.float32)[None]
         gw = jnp.einsum("mk,gmn->gkn", xf[0], dacc,
@@ -269,26 +440,30 @@ def codes_matmul(
     ones_n = jnp.ones((e, n), jnp.float32)
     acc = _dispatch(x_codes, w_codes, ones_m, ones_n, 1.0, None, None,
                     resolve_backend(backend), bool(interpret), code_dtype,
-                    None)
+                    None, None, True)
     return acc[0] if squeeze else acc
 
 
 def _dispatch(x_codes, w_codes, x_scale, w_scale, gain, out_bits, out_scale,
-              backend, interpret, code_dtype, blocks):
+              backend, interpret, code_dtype, blocks, group_widths,
+              fused_calibration):
     """Route int inputs straight to the impl (no float cotangents exist);
     float inputs go through the shared custom VJP."""
     if jnp.issubdtype(x_codes.dtype, jnp.integer):
         return _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain,
                            out_bits, out_scale, backend, interpret,
-                           code_dtype, blocks)
+                           code_dtype, blocks, group_widths,
+                           fused_calibration)
     return _tdvmm_core(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                       out_scale, backend, interpret, code_dtype, blocks)
+                       out_scale, backend, interpret, code_dtype, blocks,
+                       group_widths, fused_calibration)
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("gain", "out_bits", "out_scale", "backend", "interpret",
-                     "code_dtype", "block_sizes"))
+                     "code_dtype", "block_sizes", "group_widths",
+                     "fused_calibration"))
 def tdvmm_matmul(
     x_codes: jax.Array,      # (M, K) or (E, M, K) signed time codes
     w_codes: jax.Array,      # (K, N) or (E, K, N) signed weight codes
@@ -301,20 +476,28 @@ def tdvmm_matmul(
     interpret: bool | None = None,
     code_dtype: str = "auto",
     block_sizes: tuple[int, int, int] | None = None,
+    group_widths: Optional[tuple[int, ...]] = None,
+    fused_calibration: bool = True,
 ) -> jax.Array:
     """Quantized four-quadrant TD-VMM: codes matmul + readout + scale epilogue.
 
-    ``out_scale=None`` calibrates the readout window from the data (§3.1);
-    pass the value captured by ``core.layers.calibrate_out_scale`` (or the
-    model-wide calibration pass) to skip the per-call max *and* unlock the
-    fused-epilogue kernel on the serving path.  A tuple is an (E,)-vector of
-    fixed per-expert windows for batched inputs — still static, still fused.
-    Arbitrary M/K/N are zero-padded to the kernel's block shape;
-    ``block_sizes=None`` consults the autotune table.
+    ``out_scale=None`` calibrates the readout window from the data (§3.1) —
+    on the Pallas backend via the fused two-phase ``tdvmm_calibrated_kernel``
+    (``fused_calibration=False`` forces the legacy unfused epilogue); pass
+    the value captured by ``core.layers.calibrate_out_scale`` (or the
+    model-wide calibration pass) to skip the per-call max entirely.  A tuple
+    is an (E,)-vector of fixed per-expert windows for batched inputs — still
+    static, still fused.  Arbitrary M/K/N are zero-padded to the kernel's
+    block shape; ``block_sizes=None`` consults the autotune table.
 
     Shared-x grouped: a 2-D (M, K) x against a 3-D (G, K, N) weight bank
     (x_scale (M,), w_scale (G, N)) runs one launch whose G tiles all read
     the same code matrix, returning (G, M, N) un-squeezed.
+
+    Ragged grouped: ``group_widths=(N_1, ..., N_G)`` declares a 2-D
+    (M, K) x (K, sum N_g) launch as the column concat of G same-input
+    members; readout windows (tuple ``out_scale``, or data calibration)
+    resolve per member column span instead of per launch.
     """
     backend = resolve_backend(backend)
     if interpret is None:
@@ -330,7 +513,21 @@ def tdvmm_matmul(
         raise ValueError(
             f"batched x/w mismatch: x batch {ex} vs w batch {e} "
             "(shared-x grouped launches carry a single x batch entry)")
-    if isinstance(out_scale, tuple) and len(out_scale) != e:
+    if group_widths is not None:
+        group_widths = tuple(int(w) for w in group_widths)
+        if ex != 1 or e != 1:
+            raise ValueError(
+                "group_widths describes a 2-D ragged concat launch; got "
+                f"batched codes (x batch {ex}, w batch {e})")
+        if sum(group_widths) != n:
+            raise ValueError(
+                f"group_widths {group_widths} sum to {sum(group_widths)} "
+                f"but the concat weight bank has N={n}")
+        if isinstance(out_scale, tuple) and len(out_scale) != len(group_widths):
+            raise ValueError(
+                f"out_scale has {len(out_scale)} member windows for "
+                f"{len(group_widths)} group members")
+    elif isinstance(out_scale, tuple) and len(out_scale) != e:
         raise ValueError(
             f"out_scale has {len(out_scale)} per-expert windows for "
             f"E={e} batched tiles")
@@ -341,5 +538,7 @@ def tdvmm_matmul(
     w_scale = w_scale.reshape(e, n).astype(jnp.float32)
     y = _dispatch(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
                   out_scale, backend, bool(interpret), code_dtype,
-                  block_sizes)
-    return y[0] if squeeze else y
+                  block_sizes, group_widths, bool(fused_calibration))
+    # lax.squeeze, not y[0]: integer indexing lowers to a full-range slice
+    # copy of the (M, N) output before the squeeze view.
+    return jax.lax.squeeze(y, (0,)) if squeeze else y

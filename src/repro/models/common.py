@@ -114,9 +114,11 @@ def dense_group(param_group, x: jax.Array, td: TDVMMLayerConfig,
 
     The grouped sites (``attn.qkv``: wq/wk/wv, ``ssm.in_proj``:
     wz/wx/wB/wC/wdt) project the same activation through several matrices;
-    this encodes x once and runs all G weight tiles in a single batched
-    kernel dispatch (``core.layers.td_grouped_matmul``) instead of G
-    ``dense`` calls.  Biases stay per-member digital adds."""
+    this encodes x once and runs all G members as a single ragged column
+    concat launch (``core.layers.td_grouped_matmul`` — each member padded
+    only to the 128 lane, not to the widest member, so uneven GQA widths
+    carry no padding overhead) instead of G ``dense`` calls.  Biases stay
+    per-member digital adds."""
     ys = td_grouped_matmul(x, tuple(p["w"] for p in param_group), td, key)
     return tuple(
         y + p["b"].astype(y.dtype) if "b" in p else y

@@ -212,6 +212,93 @@ def test_autotune_table_and_padding_alignment():
         2 * autotune_blocks(999, 4096, 999, jnp.float32)[1]
 
 
+@pytest.mark.parametrize("k", [96, 95, 1])
+def test_tdvmm_int4_ops_matches_int8(k):
+    """Nibble-packed launches (p <= 3 codes, two per byte, unpacked in-VMEM)
+    are bit-for-bit identical to int8 — including odd K, where the pack pads
+    a zero nibble that integrates zero charge."""
+    from repro.kernels.tdvmm import ops
+    m, n = 17, 40
+    kx, kw = jax.random.split(jax.random.PRNGKey(k))
+    xq = jnp.round(jax.random.uniform(kx, (m, k), minval=-7, maxval=7)
+                   ).astype(jnp.int8)
+    wq = jnp.round(jax.random.uniform(kw, (k, n), minval=-7, maxval=7)
+                   ).astype(jnp.int8)
+    xs = jax.random.uniform(jax.random.PRNGKey(1), (m,), minval=0.5,
+                            maxval=2.0)
+    ws = jax.random.uniform(jax.random.PRNGKey(2), (n,), minval=0.5,
+                            maxval=2.0)
+    for out_bits, out_scale in [(None, None), (6, 0.5), (6, None)]:
+        ref = ops.tdvmm_matmul(xq, wq, xs, ws, gain=1e-3, out_bits=out_bits,
+                               out_scale=out_scale, backend="jnp")
+        for code_dtype in ("int8", "int4"):
+            got = ops.tdvmm_matmul(xq, wq, xs, ws, gain=1e-3,
+                                   out_bits=out_bits, out_scale=out_scale,
+                                   backend="pallas", code_dtype=code_dtype)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref),
+                                          err_msg=f"{code_dtype} {out_scale}")
+
+
+def test_tdvmm_ragged_group_widths_matches_sequential():
+    """A ragged concat launch (group_widths) equals the per-member 2-D
+    launches bit for bit on both backends, for scalar, per-member-tuple,
+    and data-calibrated readout windows."""
+    from repro.kernels.tdvmm import ops
+    m, k, widths = 9, 64, (128, 64)
+    n = sum(widths)
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    xq = jnp.round(jax.random.uniform(kx, (m, k), minval=-63, maxval=63))
+    wq = jnp.round(jax.random.uniform(kw, (k, n), minval=-63, maxval=63))
+    xs = jax.random.uniform(jax.random.PRNGKey(6), (m,), minval=0.5,
+                            maxval=2.0)
+    ws = jax.random.uniform(jax.random.PRNGKey(7), (n,), minval=0.5,
+                            maxval=2.0)
+    # bn=64 divides every member width, so calibrated slots land on member
+    # boundaries — the same invariant layers.td_grouped_matmul keeps via gcd.
+    blocks = (64, 64, 64)
+    for out_bits, out_scale in [(None, None), (6, 0.5), (6, (0.5, 0.25)),
+                                (6, None)]:
+        for backend in ("jnp", "pallas"):
+            got = ops.tdvmm_matmul(xq, wq, xs, ws, gain=1e-4,
+                                   out_bits=out_bits, out_scale=out_scale,
+                                   backend=backend, block_sizes=blocks,
+                                   group_widths=widths)
+            off = 0
+            for i, wd in enumerate(widths):
+                s = out_scale[i] if isinstance(out_scale, tuple) else out_scale
+                seq = ops.tdvmm_matmul(
+                    xq, wq[:, off:off + wd], xs, ws[off:off + wd],
+                    gain=1e-4, out_bits=out_bits, out_scale=s,
+                    backend=backend, block_sizes=blocks)
+                np.testing.assert_array_equal(
+                    np.asarray(got[:, off:off + wd]), np.asarray(seq),
+                    err_msg=f"{backend} member {i} window {out_scale}")
+                off += wd
+
+
+def test_tdvmm_fused_calibration_matches_unfused():
+    """The two-phase calibrated kernel (max|z| folded into the accumulator
+    walk, one launch, one HBM write) is bit-for-bit with the legacy two-pass
+    path and with the jnp oracle — batched experts included."""
+    from repro.kernels.tdvmm import ops
+    e, m, k, n = 2, 33, 96, 40
+    kx, kw = jax.random.split(jax.random.PRNGKey(8))
+    xq = jnp.round(jax.random.uniform(kx, (e, m, k), minval=-63, maxval=63))
+    wq = jnp.round(jax.random.uniform(kw, (e, k, n), minval=-63, maxval=63))
+    xs = jax.random.uniform(jax.random.PRNGKey(9), (e, m), minval=0.5,
+                            maxval=2.0)
+    ws = jax.random.uniform(jax.random.PRNGKey(10), (e, n), minval=0.5,
+                            maxval=2.0)
+    kwargs = dict(gain=1e-4, out_bits=6, out_scale=None)
+    fused = ops.tdvmm_matmul(xq, wq, xs, ws, backend="pallas",
+                             fused_calibration=True, **kwargs)
+    unfused = ops.tdvmm_matmul(xq, wq, xs, ws, backend="pallas",
+                               fused_calibration=False, **kwargs)
+    oracle = ops.tdvmm_matmul(xq, wq, xs, ws, backend="jnp", **kwargs)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(oracle))
+
+
 # --------------------------------------------------------------------------
 # crossing
 # --------------------------------------------------------------------------

@@ -404,3 +404,58 @@ def test_layer_precision_band():
         y = td_matmul(x, w, cfg)
         rel = float(jnp.max(jnp.abs(y - exact)) / jnp.max(jnp.abs(exact)))
         assert rel < 0.05, (backend, rel)
+
+
+# --------------------------------------------------------------------------
+# int4 nibble packing (p <= 3 codes, two per byte)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("bits", [1, 2, 3])
+@pytest.mark.parametrize("k", [8, 7, 1])
+@pytest.mark.parametrize("axis", [-1, -2])
+def test_pack_int4_round_trip(bits, k, axis):
+    """pack_int4/unpack_int4 round-trip every p <= 3 code exactly, on either
+    axis, including odd lengths (the pad nibble is dropped on unpack)."""
+    lim = 2 ** bits - 1
+    shape = (5, k) if axis == -1 else (k, 5)
+    rng = np.random.default_rng(bits * 10 + k)
+    codes = jnp.asarray(
+        rng.integers(-lim, lim + 1, size=shape).astype(np.int8))
+    packed = quant.pack_int4(codes, axis=axis)
+    assert packed.dtype == jnp.int8
+    assert packed.shape[axis] == (k + 1) // 2
+    back = quant.unpack_int4(packed, k, axis=axis)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_pack_int4_byte_layout():
+    """Byte kp = code 2kp in the low nibble, code 2kp+1 in the high nibble —
+    the layout tdvmm._unpack_nibbles assumes."""
+    codes = jnp.asarray([[1, -2, 7, -8]], dtype=jnp.int8)
+    packed = np.asarray(quant.pack_int4(codes, axis=-1))
+    # 0xE1 = (-2 & 0xF) << 4 | 1, 0x87 = (-8 & 0xF) << 4 | 7, as int8
+    expect = np.asarray([[0xE1, 0x87]], dtype=np.uint8).astype(np.int8)
+    np.testing.assert_array_equal(packed, expect)
+
+
+def test_concat_group_ragged_layout():
+    """concat_group pads each member only to its own declared span: member
+    codes land at their column offsets, pad columns are zero codes with 1.0
+    scales (inert), and mismatched declarations raise."""
+    ws = [jax.random.normal(jax.random.PRNGKey(i), (16, n)) * 0.1
+          for i, n in enumerate((10, 3))]
+    qws = [quant.program_weights(w, 6) for w in ws]
+    widths = (16, 8)
+    bank = quant.concat_group(qws, widths)
+    codes = np.asarray(bank.codes)
+    assert codes.shape == (16, 24)
+    np.testing.assert_array_equal(codes[:, :10], np.asarray(qws[0].codes))
+    np.testing.assert_array_equal(codes[:, 16:19], np.asarray(qws[1].codes))
+    assert not codes[:, 10:16].any() and not codes[:, 19:].any()
+    scale = np.asarray(bank.scale)
+    assert scale.shape == (1, 24)
+    np.testing.assert_array_equal(scale[0, 10:16], np.ones(6))
+    np.testing.assert_array_equal(scale[0, 19:], np.ones(5))
+    with pytest.raises(ValueError, match="exceed"):
+        quant.concat_group(qws, (8, 8))
+    with pytest.raises(ValueError, match="widths for"):
+        quant.concat_group(qws, (16,))
