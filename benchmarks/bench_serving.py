@@ -18,7 +18,11 @@ Invariants (asserted by ``check_invariants`` in CI and ``benchmarks/run.py``):
   * zero NaN logit rows (evict-before-poison), exactly TWO compiled steps;
   * per-request streams bit-identical to running the request alone at the
     same calibrated windows;
-  * the chained plan spends fewer joules per token than the unchained one.
+  * the chained plan spends fewer joules per token than the unchained one;
+  * an engine killed mid-trace and restored from its snapshot resumes the
+    remaining trace bit-identically to the uninterrupted baseline;
+  * injected device-current drift triggers >= 1 online recalibration with
+    ``compiled_steps`` still exactly 2 (hot-swapped runtime windows).
 """
 from __future__ import annotations
 
@@ -89,12 +93,13 @@ def run(n_requests: int = 10):
     static = static_baseline(trace, ecfg.slots, ecfg.chunk)
     dense_bytes = _dense_cache_bytes(base, ecfg.slots, max_len)
 
-    reports = {}
+    reports, plan_ctx = {}, {}
     for name, plan in PLANS.items():
         cfg = base.replace(tdvmm_plan=plan)
         calib_batch = {"inputs": jax.random.randint(
             jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)}
         calib = model.calibrate(params, calib_batch, cfg, max_len=32)
+        plan_ctx[name] = (cfg, calib, calib_batch)
         engine = Engine(cfg, params, ecfg, calib=calib)
         rep = engine.run(trace)
         reports[name] = rep
@@ -173,6 +178,73 @@ def run(n_requests: int = 10):
                  ch.analog_energy_j < un.analog_energy_j,
          })
 
+    # --- fault tolerance: kill mid-trace, snapshot, restore, resume -------
+    # The hard contract: the resumed run's per-request streams are
+    # bit-identical to the uninterrupted baseline (ref above).
+    import tempfile
+
+    from repro.checkpoint import checkpoint
+    from repro.runtime import faultinject as fi
+    from repro.runtime.engine import DriftConfig, FaultConfig
+
+    cfg_u, calib_u, calib_batch_u = plan_ctx["ffn_unchained"]
+    preempt_step = max(1, ref.steps // 2)
+    with tempfile.TemporaryDirectory() as td:
+        e1 = Engine(cfg_u, params, ecfg, calib=calib_u)
+        r1 = e1.run(trace, FaultConfig(
+            injector=fi.FaultInjector([fi.PreemptAt(preempt_step)]),
+            snapshot_dir=td))
+        flat, snap_step = checkpoint.load_engine_snapshot(td)
+        e2 = Engine(cfg_u, params, ecfg, calib=calib_u)
+        e2.restore(flat)
+        r2 = e2.resume()
+    streams_match = all(
+        a["tokens"] == b["tokens"]
+        for a, b in zip(ref.requests, r2.requests))
+    reasons_match = all(
+        a["finish_reason"] == b["finish_reason"]
+        and a["finished_step"] == b["finished_step"]
+        for a, b in zip(ref.requests, r2.requests))
+    emit("serving_crash_resume", 0.0,
+         f"killed@{preempt_step}/{ref.steps} steps, resumed bit-identical="
+         f"{streams_match}",
+         data={
+             "preempt_step": preempt_step,
+             "baseline_steps": ref.steps,
+             "preempted": r1.preempted,
+             "snapshot_step": snap_step,
+             "resumed_steps": r2.steps,
+             "streams_match": streams_match,
+             "finish_reasons_match": reasons_match,
+             "compiled_steps_resumed": e2.compiled_steps(),
+         })
+
+    # --- drift + online recalibration: perturb device currents mid-trace;
+    # the probe must flag it and hot-swap windows WITHOUT a third compiled
+    # program (compiled_steps stays 2).
+    drift_step = max(1, ref.steps // 3)
+    e3 = Engine(cfg_u, params, ecfg, calib=calib_u)
+    r3 = e3.run(trace, FaultConfig(
+        injector=fi.FaultInjector(
+            [fi.DriftAt(drift_step, sigma=0.5, repeats=3)]),
+        drift=DriftConfig(probe_batch=calib_batch_u,
+                          check_every=max(1, ref.steps // 4),
+                          clip_threshold=0.01, window_tol=0.1)))
+    emit("serving_drift_recalibration", 0.0,
+         f"{len(r3.drift_events)} drift events, {r3.recalibrations} "
+         f"recalibrations, compiled={r3.compiled_steps}",
+         data={
+             "drift_step": drift_step,
+             "drift_events": len(r3.drift_events),
+             "recalibrations": r3.recalibrations,
+             "max_log_ratio": (r3.drift_events[0]["max_log_ratio"]
+                               if r3.drift_events else 0.0),
+             "max_clip_rate": (r3.drift_events[0]["max_clip_rate"]
+                               if r3.drift_events else 0.0),
+             "compiled_steps": r3.compiled_steps,
+             "nan_logit_steps": r3.nan_logit_steps,
+         })
+
     save_json("BENCH_serving.json", meta={"suite": "serving"})
 
 
@@ -191,6 +263,14 @@ def check_invariants(doc: dict) -> None:
     assert vs["paged_beats_dense_memory"], vs
     en = rows["serving_energy_chained_vs_unchained"]
     assert en["chained_saves_energy"], en
+    cr = rows["serving_crash_resume"]
+    assert cr["preempted"], cr                       # injection fired
+    assert cr["streams_match"], cr                   # bit-identical resume
+    assert cr["finish_reasons_match"], cr
+    assert cr["compiled_steps_resumed"] <= 2, cr
+    dr = rows["serving_drift_recalibration"]
+    assert dr["recalibrations"] >= 1, dr             # drift caught + fixed
+    assert dr["compiled_steps"] == 2, dr             # no third program
 
 
 if __name__ == "__main__":

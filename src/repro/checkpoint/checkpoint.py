@@ -52,6 +52,14 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
     return out
 
 
+def leaf_paths(tree) -> list[tuple[str, Any]]:
+    """Public form of the flattener: (name, leaf) pairs with "/"-joined
+    pytree paths — the naming scheme every checkpoint in this layout uses.
+    A dict whose keys already contain "/" flattens to the same names, so a
+    nested snapshot and its flat (name -> array) load round-trip."""
+    return _leaf_paths(tree)
+
+
 def _safe(name: str) -> str:
     return name.replace("/", "__")
 
@@ -178,3 +186,56 @@ def restore_calibration(calib_like, directory: str | Path,
 
 def latest_calibration_step(directory: str | Path) -> Optional[int]:
     return latest_step(Path(directory) / _CALIB_SUBDIR)
+
+
+# ---------------------------------------------------------------------------
+# Serving-engine snapshots (preemption-safe full in-flight state)
+# ---------------------------------------------------------------------------
+# ``Engine.snapshot()`` emits one pytree — paged KV pools, runtime windows,
+# and a JSON-as-uint8 "meta" leaf carrying every host-side structure
+# (scheduler queue, slots, block tables, page free-list, records, counters).
+# It rides the same atomic/checksummed machinery; restore is structure-free
+# (``load_flat``) because the engine rebuilds its own pytree from the names.
+_ENGINE_SUBDIR = "engine"
+
+
+def save_engine_snapshot(snap, directory: str | Path, step: int,
+                         keep: int = 3, blocking: bool = True) -> Path:
+    """Persist an ``Engine.snapshot()`` pytree under
+    ``<directory>/engine/step_XXXXXXXX`` (atomic, checksummed)."""
+    return save(snap, Path(directory) / _ENGINE_SUBDIR, step, keep=keep,
+                blocking=blocking)
+
+
+def load_flat(directory: str | Path, step: Optional[int] = None,
+              verify: bool = True) -> tuple[dict, int]:
+    """Load a checkpoint as a flat ``{leaf name: np.ndarray}`` dict — no
+    template pytree needed.  Names are the "/"-joined paths ``leaf_paths``
+    produced at save time; the caller reassembles its own structure
+    (``Engine.restore`` consumes this directly)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    cdir = directory / f"step_{step:08d}"
+    manifest = json.loads((cdir / "manifest.json").read_text())
+    leaves = {}
+    for name, meta in manifest["leaves"].items():
+        raw = (cdir / meta["file"]).read_bytes()
+        if verify and zlib.crc32(raw) != meta["crc32"]:
+            raise IOError(f"checksum mismatch for {name} in {cdir}")
+        leaves[name] = np.load(cdir / meta["file"])
+    return leaves, step
+
+
+def load_engine_snapshot(directory: str | Path, step: Optional[int] = None,
+                         verify: bool = True) -> tuple[dict, int]:
+    """Flat-load the latest (or given-step) engine snapshot saved by
+    ``save_engine_snapshot``."""
+    return load_flat(Path(directory) / _ENGINE_SUBDIR, step=step,
+                     verify=verify)
+
+
+def latest_engine_snapshot_step(directory: str | Path) -> Optional[int]:
+    return latest_step(Path(directory) / _ENGINE_SUBDIR)

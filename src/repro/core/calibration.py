@@ -20,6 +20,25 @@ latch-normalized max|z| via ``jax.debug.callback`` (values produced inside
 ``lax.scan``-ed layer stacks are tracers — the callback is the supported
 escape hatch, and max-merging is order-independent).  The model-wide pass
 lives in ``models.model.calibrate``.
+
+Two serving-time mechanisms ride the same per-site channel:
+
+  * **Runtime windows** (``runtime_windows`` / ``runtime_window``): a
+    trace-time context mapping site -> f32 *array* window.  When a site
+    resolves its readout window here, the window enters the compiled program
+    as a runtime operand instead of a baked jit-static constant — so a
+    restored or freshly recaptured ``CalibrationState`` can be hot-swapped
+    between engine steps without recompiling (the two-compiled-step rule).
+    Bitwise contract: the runtime-operand program evaluates the exact same
+    barrier-pinned expression as the static path (``ops._epilogue``), so a
+    window passed as an operand reproduces the baked-constant outputs bit
+    for bit.
+  * **Clip tracking** (``collect(pinned=...)``): a capture pass given the
+    currently pinned windows additionally records, per site, how much of the
+    latch-normalized |z| mass exceeds its pinned window — the readout
+    *saturation/clip rate* that drift detection
+    (``models.model.drift_probe`` -> ``runtime.engine.DriftConfig``)
+    thresholds to decide when the §3.1 windows have gone stale.
 """
 from __future__ import annotations
 
@@ -54,6 +73,33 @@ class CalibrationState:
             site: jnp.asarray(np.maximum(np.asarray(v, np.float32), floor))
             for site, v in sorted(collected.items())})
 
+    def as_arrays(self) -> dict[str, jax.Array]:
+        """Site -> f32 window *array* (the runtime-operand form consumed by
+        ``runtime_windows`` and the serving engine's hot-swap path)."""
+        return {site: jnp.asarray(v, jnp.float32)
+                for site, v in sorted(self.windows.items())}
+
+    def drift_ratios(self, fresh: "CalibrationState") -> dict[str, float]:
+        """Per-site max over the window elements of fresh/pinned — the drift
+        magnitude a recalibration decision thresholds.  > 1 means the live
+        max|z| outgrew the pinned window (readout clips); < 1 means the
+        window is now oversized (resolution loss)."""
+        out = {}
+        for site, pinned in self.windows.items():
+            if site not in fresh.windows:
+                continue
+            p = np.maximum(np.asarray(pinned, np.float64), 1e-12)
+            f = np.asarray(fresh.windows[site], np.float64)
+            if p.shape != f.shape:
+                raise ValueError(
+                    f"site {site!r}: pinned window shape {p.shape} vs "
+                    f"recaptured {f.shape} — calibration structure changed")
+            r = f / p
+            # report the element that drifted FURTHEST from 1, either way
+            out[site] = float(r.flat[np.argmax(np.abs(np.log(
+                np.maximum(r, 1e-12))))])
+        return out
+
 
 jax.tree_util.register_dataclass(
     CalibrationState, data_fields=["windows"], meta_fields=[])
@@ -65,6 +111,8 @@ jax.tree_util.register_dataclass(
 class _Collector(threading.local):
     def __init__(self):
         self.store: Optional[dict[str, np.ndarray]] = None
+        self.pinned: Optional[dict[str, np.ndarray]] = None
+        self.clips: Optional[dict[str, np.ndarray]] = None
 
 
 _COLLECTOR = _Collector()
@@ -74,6 +122,16 @@ def active() -> bool:
     """True while a ``collect()`` context is installed (trace-time check —
     the serving fast path pays nothing when no calibration is running)."""
     return _COLLECTOR.store is not None
+
+
+def clip_reference(site: str) -> Optional[np.ndarray]:
+    """The pinned window the active collector tracks clip rates against for
+    ``site`` (None when no clip tracking is requested) — concrete host
+    values, so layers can fold the comparison into the capture pass."""
+    pinned = _COLLECTOR.pinned
+    if pinned is None or not site:
+        return None
+    return pinned.get(site)
 
 
 def record(site: str, z_max: jax.Array) -> None:
@@ -93,20 +151,104 @@ def record(site: str, z_max: jax.Array) -> None:
     jax.debug.callback(_merge, z_max)
 
 
+def record_clip(site: str, exceed: jax.Array, total: int) -> None:
+    """Accumulate one site's (clipped-element count, element count) pair —
+    the readout-saturation tally against the collector's pinned windows.
+    No-op unless ``collect(pinned=...)`` installed clip tracking."""
+    clips = _COLLECTOR.clips
+    if clips is None or not site:
+        return
+
+    def _merge(exceed_v):
+        delta = np.asarray([float(exceed_v), float(total)], np.float64)
+        prev = clips.get(site)
+        clips[site] = delta if prev is None else prev + delta
+
+    jax.debug.callback(_merge, exceed)
+
+
+def clip_rates(clips: dict[str, np.ndarray]) -> dict[str, float]:
+    """(exceed, total) tallies -> per-site clip fraction in [0, 1]."""
+    return {site: float(v[0] / max(v[1], 1.0)) for site, v in clips.items()}
+
+
 @contextlib.contextmanager
-def collect() -> Iterator[dict[str, np.ndarray]]:
+def collect(pinned: Optional[dict[str, np.ndarray]] = None,
+            ) -> Iterator[dict[str, np.ndarray]]:
     """Install a collector; yields the (mutating) site -> max|z| dict.
+
+    With ``pinned`` (site -> concrete window values), the pass additionally
+    tallies per-site clip counts against those windows; read them from
+    ``last_clips()`` after the context exits (or use
+    ``models.model.drift_probe``, which packages both).
 
     The barrier on exit flushes outstanding debug callbacks so every
     recorded site is present before the caller reads the dict."""
     if _COLLECTOR.store is not None:
         raise RuntimeError("nested calibration collect() is not supported")
     _COLLECTOR.store = {}
+    _COLLECTOR.clips = {} if pinned is not None else None
+    _COLLECTOR.pinned = None if pinned is None else {
+        site: np.asarray(v, np.float32) for site, v in pinned.items()}
     try:
         yield _COLLECTOR.store
         jax.effects_barrier()
     finally:
+        _LAST_CLIPS[0] = _COLLECTOR.clips
         _COLLECTOR.store = None
+        _COLLECTOR.pinned = None
+        _COLLECTOR.clips = None
+
+
+_LAST_CLIPS: list = [None]
+
+
+def last_clips() -> Optional[dict[str, np.ndarray]]:
+    """(exceed, total) tallies from the most recent ``collect(pinned=...)``
+    pass (None when the last pass did not track clips)."""
+    return _LAST_CLIPS[0]
+
+
+# ---------------------------------------------------------------------------
+# Runtime windows (hot-swappable serving calibration)
+# ---------------------------------------------------------------------------
+class _RuntimeWindows(threading.local):
+    def __init__(self):
+        self.map: Optional[dict[str, jax.Array]] = None
+
+
+_RUNTIME = _RuntimeWindows()
+
+
+@contextlib.contextmanager
+def runtime_windows(windows: Optional[dict[str, jax.Array]]):
+    """Install site -> f32 window *arrays* for the duration of a trace.
+
+    Inside the context every TD-VMM site whose name appears in the map takes
+    its readout window from the array (a runtime operand — typically a jit
+    argument of the caller) instead of the plan's static ``out_scale``.
+    This is what lets the serving engine swap a recaptured
+    ``CalibrationState`` between steps without recompiling: same structure,
+    same shapes, new values -> same compiled executable.
+
+    Nesting installs the inner map (restored on exit); ``None``/empty maps
+    are a no-op context.
+    """
+    prev = _RUNTIME.map
+    _RUNTIME.map = dict(windows) if windows else prev
+    try:
+        yield
+    finally:
+        _RUNTIME.map = prev
+
+
+def runtime_window(site: str) -> Optional[jax.Array]:
+    """The runtime window array installed for ``site`` (trace-time lookup;
+    None outside a ``runtime_windows`` context or for uncovered sites)."""
+    m = _RUNTIME.map
+    if m is None or not site:
+        return None
+    return m.get(site)
 
 
 # ---------------------------------------------------------------------------

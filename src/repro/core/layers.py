@@ -48,6 +48,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import TDVMMLayerConfig  # re-export (historic home)
 from repro.core import quant
@@ -146,6 +147,20 @@ def _readout_args(
     return cfg.bits, (None if cfg.output_calibration else 0.5)
 
 
+def _runtime_override(cfg: TDVMMLayerConfig, out_bits, out_scale):
+    """Swap a site's static readout window for the runtime-operand array
+    installed by ``calibration.runtime_windows`` (the serving engine's
+    hot-swappable calibration channel).  Outside that context — or for
+    sites without a digital readout — this is a no-op passthrough."""
+    if out_bits is None:
+        return out_scale, None
+    from repro.core import calibration
+    rw = calibration.runtime_window(cfg.site)
+    if rw is None:
+        return out_scale, None
+    return None, rw
+
+
 def _latch_gain(levels_x: int, levels_w: int, k: int) -> float:
     """Latch gain: codes -> normalized differential output z = y+ - y- in
     [-1, 1]: divide out both code ranges and the 2*N_in charge headroom."""
@@ -161,13 +176,35 @@ def _record_window(cfg: TDVMMLayerConfig, x_view, w_view, backend: str,
     or the per-member ``(G,)`` vector over a ragged concat launch's column
     spans (``group_widths``) — exactly the window per-call data calibration
     would use.  Costs one extra codes matmul per site, paid only during the
-    (one-time) calibration pass."""
+    (one-time) calibration pass.
+
+    Under ``collect(pinned=...)`` (a drift probe) the same pass also tallies
+    the site's readout *clip count* — how many |z| elements exceed the
+    currently pinned window — feeding the saturation-rate drift trigger."""
     from repro.core import calibration
     if not calibration.active() or not cfg.io_quantize:
         return
     from repro.kernels.tdvmm import ops
     acc = ops.codes_matmul(x_view, w_view, backend, code_dtype=code_dtype)
     z = jnp.abs(acc.astype(jnp.float32) * gain)
+    ref = calibration.clip_reference(cfg.site)
+    if ref is not None:
+        if group_widths is not None:
+            # Per-member windows expand to per-column thresholds; pad
+            # columns threshold at +inf (zero charge, never a clip).
+            cols = np.concatenate(
+                [np.full(wd, float(v), np.float32) for v, wd in
+                 zip(np.asarray(ref, np.float32).reshape(-1), group_widths)])
+            tail = z.shape[-1] - cols.size
+            if tail > 0:
+                cols = np.concatenate(
+                    [cols, np.full(tail, np.inf, np.float32)])
+            thresh = jnp.asarray(cols)
+        elif per_tile:
+            thresh = jnp.asarray(ref, jnp.float32).reshape(-1, 1, 1)
+        else:
+            thresh = jnp.float32(np.float32(ref))
+        calibration.record_clip(cfg.site, jnp.sum(z > thresh), int(z.size))
     if group_widths is not None:
         # Member g owns columns [off, off + width_g); pad columns are zero
         # charge, so the span max equals the member's standalone max.
@@ -214,6 +251,7 @@ def td_matmul(
     w_scale = jnp.broadcast_to(
         qw.scale.reshape(-1) * (2.0 * plan.k), (plan.n,))
     out_bits, out_scale = _readout_args(cfg)
+    out_scale, out_window = _runtime_override(cfg, out_bits, out_scale)
     _record_window(cfg, qx.view().reshape(plan.m, plan.k), qw.view(),
                    plan.backend, plan.code_dtype, gain, per_tile=False)
     y = ops.tdvmm_matmul(
@@ -227,6 +265,7 @@ def td_matmul(
         backend=plan.backend,
         code_dtype=plan.code_dtype,
         block_sizes=plan.blocks,
+        out_window=out_window,
     )
     return y.reshape(plan.batch_shape + (plan.n,)).astype(x.dtype)
 
@@ -270,6 +309,7 @@ def td_expert_matmul(
     w_scale = jnp.broadcast_to(
         qw.scale.reshape(e, qw.scale.shape[-1]) * (2.0 * k), (e, n))
     out_bits, out_scale = _readout_args(cfg, n_experts=e)
+    out_scale, out_window = _runtime_override(cfg, out_bits, out_scale)
     # Per-expert windows: each expert is its own analog tile, so the
     # recorded vector is the (E,) per-tile max the epilogue calibrates.
     _record_window(cfg, qx.view(), qw.view(), kp.backend, code_dtype, gain,
@@ -285,6 +325,7 @@ def td_expert_matmul(
         backend=kp.backend,
         code_dtype=code_dtype,
         block_sizes=kp.blocks,
+        out_window=out_window,
     )
     return y.astype(x.dtype)
 
@@ -355,6 +396,7 @@ def td_grouped_matmul(
     gain = _latch_gain(qx.levels, qw.levels, k)
     w_scale = qw.scale.reshape(n_total) * (2.0 * k)
     out_bits, out_scale = _readout_args(cfg, n_experts=len(ws))
+    out_scale, out_window = _runtime_override(cfg, out_bits, out_scale)
     # Per-member windows: each member's column span is its own analog tile,
     # so calibration records one (G,) vector for the site.
     _record_window(cfg, qx.view().reshape(m, k), qw.view(), kp.backend,
@@ -371,6 +413,7 @@ def td_grouped_matmul(
         code_dtype=code_dtype,
         block_sizes=(kp.bm, kp.bk, bn_g),
         group_widths=widths,
+        out_window=out_window,
     )                                                          # (M, n_total)
     outs, off = [], 0
     for n, wd in zip(ns, widths):

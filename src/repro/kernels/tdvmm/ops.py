@@ -173,11 +173,27 @@ def _member_window_cols(values, group_widths, n: int) -> jax.Array:
     return jnp.concatenate(parts).reshape(1, 1, n)
 
 
+def _member_window_cols_arr(values: jax.Array, group_widths,
+                            n: int) -> jax.Array:
+    """Traced sibling of ``_member_window_cols``: a (G,) window *array*
+    gathered out to the (1, 1, N) per-column vector (pad columns 1.0).  The
+    gather index is host-static, so the expansion adds no data-dependent
+    shapes — a hot-swapped window recompiles nothing."""
+    idx = []
+    for g, wd in enumerate(group_widths):
+        idx.extend([g] * wd)
+    idx.extend([len(group_widths)] * (n - sum(group_widths)))
+    vals = jnp.concatenate([
+        jnp.asarray(values, jnp.float32).reshape(-1),
+        jnp.ones((1,), jnp.float32)])
+    return vals[jnp.asarray(np.asarray(idx, np.int32))].reshape(1, 1, n)
+
+
 # ---------------------------------------------------------------------------
 # Epilogue (unfused form; the fused kernels mirror this term for term)
 # ---------------------------------------------------------------------------
 def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
-              group_widths=None):
+              group_widths=None, out_window=None):
     """gain -> optional p-bit readout -> per-row x per-channel rescale.
 
     acc: (E, M, N) int32 or f32; x_scale: (E, M); w_scale: (E, N).
@@ -187,7 +203,10 @@ def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
     one calibrated readout window per expert's analog tile.  With
     ``group_widths`` (ragged concat launch) windows are per *member column
     span* instead: a tuple maps one window per member, and data calibration
-    reduces max|z| over each member's columns.
+    reduces max|z| over each member's columns.  ``out_window`` is the traced
+    *array* form of a fixed window (scalar / (E,) / per-member (G,)): same
+    expression, window as a runtime operand instead of a baked constant —
+    serving hot-swaps calibration values through it without recompiling.
     """
     # Pin the inputs and (acc * gain) as units: under a caller's jit the
     # latch gain and the caller's scale chains are visible to XLA, which
@@ -212,7 +231,18 @@ def _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
         # rescale chain ``(q * xs) * (ws * back)`` carries no constants —
         # matching the fused kernels' association term for term.
         s = out_scale
-        if s is None:
+        if out_window is not None:
+            # Runtime window: already a traced value, so the barrier chain
+            # below sees exactly what the static path sees post-barrier —
+            # the two programs are the same arithmetic term for term.
+            ow = jnp.asarray(out_window, jnp.float32)
+            if group_widths is not None:
+                s = _member_window_cols_arr(ow, group_widths, z.shape[-1])
+            elif ow.ndim >= 1:
+                s = ow.reshape(-1, 1, 1)
+            else:
+                s = ow
+        elif s is None:
             if group_widths is not None:
                 # Per-member windows over the concat columns: f32 max is
                 # exact, so the per-span reduction equals each member's
@@ -273,8 +303,8 @@ def _calib_slots(e: int, n: int, bn: int,
 
 
 def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                out_scale, backend, interpret, code_dtype, blocks,
-                group_widths, fused_calibration):
+                out_scale, out_window, backend, interpret, code_dtype,
+                blocks, group_widths, fused_calibration):
     ex, m, k = x_codes.shape
     e, _, n = w_codes.shape
     shared_x = ex == 1 and e > 1
@@ -307,7 +337,7 @@ def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
             acc = jnp.einsum("emk,ekn->emn", xi, wi,
                              preferred_element_type=acc_dtype_for(xi.dtype))
         return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
-                         group_widths)
+                         group_widths, out_window)
 
     unpack4 = code_dtype == "int4"
     if unpack4:
@@ -321,13 +351,22 @@ def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
     mp, np_ = xp.shape[-2], wp.shape[-1]
     exact = (mp, np_) == (m, n)
 
-    if out_bits is None or out_scale is not None:
-        # Fixed readout window (or no readout): fully fused epilogue — the
-        # (bm, bn) tile leaves VMEM exactly once, already in model units.
+    if out_bits is None or out_scale is not None or out_window is not None:
+        # Fixed readout window (runtime-operand or static, or no readout):
+        # fully fused epilogue — the (bm, bn) tile leaves VMEM exactly once,
+        # already in model units.
         xsp = jnp.pad(x_scale, ((0, 0), (0, mp - m)))[..., :, None]
         wsp = jnp.pad(w_scale, ((0, 0), (0, np_ - n)))[..., None, :]
         window, scale_arg = None, out_scale
-        if (out_bits is not None and group_widths is not None
+        if out_bits is not None and out_window is not None:
+            ow = jnp.asarray(out_window, jnp.float32)
+            if group_widths is not None:
+                window = _member_window_cols_arr(ow, group_widths, np_)
+            else:
+                window = ow.reshape(-1, 1, 1) if ow.ndim >= 1 \
+                    else ow.reshape(1, 1, 1)
+            scale_arg = None
+        elif (out_bits is not None and group_widths is not None
                 and isinstance(out_scale, tuple)):
             window, scale_arg = _member_window_cols(
                 out_scale, group_widths, np_), None
@@ -352,36 +391,41 @@ def _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
         xp, wp, bm=bm, bk=bk, bn=bn, interpret=interpret, unpack4=unpack4)
     acc = acc if exact else acc[:, :m, :n]
     return _epilogue(acc, x_scale, w_scale, gain, out_bits, out_scale,
-                     group_widths)
+                     group_widths, out_window)
 
 
 # ---------------------------------------------------------------------------
 # Shared custom VJP (all backends / dtypes / fusion modes)
 # ---------------------------------------------------------------------------
 @functools.partial(
-    jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12))
-def _tdvmm_core(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                out_scale, backend, interpret, code_dtype, blocks,
+    jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11, 12, 13))
+def _tdvmm_core(x_codes, w_codes, x_scale, w_scale, out_window, gain,
+                out_bits, out_scale, backend, interpret, code_dtype, blocks,
                 group_widths, fused_calibration):
-    """Differentiable integrate+epilogue on canonical (E, M, K) shapes."""
+    """Differentiable integrate+epilogue on canonical (E, M, K) shapes.
+
+    ``out_window`` rides as a differentiable-position arg (it is traced —
+    nondiff_argnums must stay hashable statics) but is calibration state,
+    not a trainable: its cotangent is zeros, matching the static-window
+    path where the window never enters the autodiff graph at all."""
     return _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                       out_scale, backend, interpret, code_dtype, blocks,
-                       group_widths, fused_calibration)
+                       out_scale, out_window, backend, interpret, code_dtype,
+                       blocks, group_widths, fused_calibration)
 
 
-def _tdvmm_core_fwd(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                    out_scale, backend, interpret, code_dtype, blocks,
-                    group_widths, fused_calibration):
+def _tdvmm_core_fwd(x_codes, w_codes, x_scale, w_scale, out_window, gain,
+                    out_bits, out_scale, backend, interpret, code_dtype,
+                    blocks, group_widths, fused_calibration):
     y = _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                    out_scale, backend, interpret, code_dtype, blocks,
-                    group_widths, fused_calibration)
-    return y, (x_codes, w_codes, x_scale, w_scale, y)
+                    out_scale, out_window, backend, interpret, code_dtype,
+                    blocks, group_widths, fused_calibration)
+    return y, (x_codes, w_codes, x_scale, w_scale, out_window, y)
 
 
 def _tdvmm_core_bwd(gain, out_bits, out_scale, backend, interpret,
                     code_dtype, blocks, group_widths, fused_calibration,
                     res, g):
-    x_codes, w_codes, x_scale, w_scale, y = res
+    x_codes, w_codes, x_scale, w_scale, out_window, y = res
     denom = x_scale[..., :, None] * w_scale[..., None, :]
     # Recover the post-readout latch value z = y / (xs * ws); internal
     # callers clamp scales >= 1e-6, so the where() only guards direct API
@@ -408,7 +452,8 @@ def _tdvmm_core_bwd(gain, out_bits, out_scale, backend, interpret,
                         preferred_element_type=jnp.float32)
         gxs = jnp.sum(g * z * w_scale[..., None, :], axis=-1)
     gws = jnp.sum(g * z * x_scale[..., :, None], axis=-2)
-    return gx, gw, gxs, gws
+    gwin = None if out_window is None else jnp.zeros_like(out_window)
+    return gx, gw, gxs, gws, gwin
 
 
 _tdvmm_core.defvjp(_tdvmm_core_fwd, _tdvmm_core_bwd)
@@ -438,25 +483,25 @@ def codes_matmul(
             x_codes.dtype, jnp.integer) else "f32"
     ones_m = jnp.ones((x_codes.shape[0], m), jnp.float32)
     ones_n = jnp.ones((e, n), jnp.float32)
-    acc = _dispatch(x_codes, w_codes, ones_m, ones_n, 1.0, None, None,
+    acc = _dispatch(x_codes, w_codes, ones_m, ones_n, 1.0, None, None, None,
                     resolve_backend(backend), bool(interpret), code_dtype,
                     None, None, True)
     return acc[0] if squeeze else acc
 
 
 def _dispatch(x_codes, w_codes, x_scale, w_scale, gain, out_bits, out_scale,
-              backend, interpret, code_dtype, blocks, group_widths,
-              fused_calibration):
+              out_window, backend, interpret, code_dtype, blocks,
+              group_widths, fused_calibration):
     """Route int inputs straight to the impl (no float cotangents exist);
     float inputs go through the shared custom VJP."""
     if jnp.issubdtype(x_codes.dtype, jnp.integer):
         return _tdvmm_impl(x_codes, w_codes, x_scale, w_scale, gain,
-                           out_bits, out_scale, backend, interpret,
-                           code_dtype, blocks, group_widths,
+                           out_bits, out_scale, out_window, backend,
+                           interpret, code_dtype, blocks, group_widths,
                            fused_calibration)
-    return _tdvmm_core(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                       out_scale, backend, interpret, code_dtype, blocks,
-                       group_widths, fused_calibration)
+    return _tdvmm_core(x_codes, w_codes, x_scale, w_scale, out_window, gain,
+                       out_bits, out_scale, backend, interpret, code_dtype,
+                       blocks, group_widths, fused_calibration)
 
 
 @functools.partial(
@@ -478,6 +523,7 @@ def tdvmm_matmul(
     block_sizes: tuple[int, int, int] | None = None,
     group_widths: Optional[tuple[int, ...]] = None,
     fused_calibration: bool = True,
+    out_window: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Quantized four-quadrant TD-VMM: codes matmul + readout + scale epilogue.
 
@@ -489,6 +535,15 @@ def tdvmm_matmul(
     is an (E,)-vector of fixed per-expert windows for batched inputs — still
     static, still fused.  Arbitrary M/K/N are zero-padded to the kernel's
     block shape; ``block_sizes=None`` consults the autotune table.
+
+    ``out_window`` is the *traced-array* form of a fixed window — scalar
+    ``()``, per-expert ``(E,)``, or per-member ``(G,)`` on ragged grouped
+    launches.  It is NOT a jit-static argument: swapping window values of
+    the same shape reuses the compiled program (the serving engine's
+    hot-swappable calibration), and the epilogue evaluates the identical
+    barrier-pinned expression as the static ``out_scale`` path, so the two
+    forms are bit-for-bit interchangeable.  Mutually exclusive with
+    ``out_scale``; requires ``out_bits``.
 
     Shared-x grouped: a 2-D (M, K) x against a 3-D (G, K, N) weight bank
     (x_scale (M,), w_scale (G, N)) runs one launch whose G tiles all read
@@ -531,14 +586,37 @@ def tdvmm_matmul(
         raise ValueError(
             f"out_scale has {len(out_scale)} per-expert windows for "
             f"E={e} batched tiles")
+    if out_window is not None:
+        if out_bits is None:
+            raise ValueError("out_window needs out_bits (p-bit readout)")
+        if out_scale is not None:
+            raise ValueError(
+                "out_window and out_scale are mutually exclusive (the "
+                "window array is the runtime-operand form of out_scale)")
+        out_window = jnp.asarray(out_window, jnp.float32)
+        if group_widths is not None:
+            if out_window.shape != (len(group_widths),):
+                raise ValueError(
+                    f"out_window shape {out_window.shape} for a "
+                    f"{len(group_widths)}-member grouped launch; "
+                    f"expected ({len(group_widths)},)")
+        elif out_window.ndim == 1 and out_window.shape[0] != e:
+            raise ValueError(
+                f"out_window has {out_window.shape[0]} per-expert windows "
+                f"for E={e} batched tiles")
+        elif out_window.ndim > 1:
+            raise ValueError(
+                f"out_window must be scalar, (E,) or (G,); got shape "
+                f"{out_window.shape}")
     if code_dtype == "auto":
         code_dtype = "int8" if jnp.issubdtype(
             x_codes.dtype, jnp.integer) else "f32"
     x_scale = x_scale.reshape(ex, m).astype(jnp.float32)
     w_scale = w_scale.reshape(e, n).astype(jnp.float32)
     y = _dispatch(x_codes, w_codes, x_scale, w_scale, gain, out_bits,
-                  out_scale, backend, bool(interpret), code_dtype,
-                  block_sizes, group_widths, bool(fused_calibration))
+                  out_scale, out_window, backend, bool(interpret),
+                  code_dtype, block_sizes, group_widths,
+                  bool(fused_calibration))
     # lax.squeeze, not y[0]: integer indexing lowers to a full-range slice
     # copy of the (M, N) output before the squeeze view.
     return jax.lax.squeeze(y, (0,)) if squeeze else y

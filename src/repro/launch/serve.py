@@ -115,8 +115,51 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, mesh=None, seed: int = 0,
     }
 
 
+def _fault_config(args, probe_batch=None):
+    """Assemble the engine FaultConfig from CLI flags (None = no wiring).
+
+    A real PreemptionGuard with SIGTERM/SIGINT handlers is installed when a
+    snapshot dir is given, so an actual eviction snapshots the in-flight
+    state; ``--preempt-at``/``--fail-at``/``--drift-at`` inject the same
+    faults deterministically at a chosen engine step."""
+    from repro.runtime import fault
+    from repro.runtime import faultinject as fi
+    from repro.runtime.engine import DriftConfig, FaultConfig
+
+    events = []
+    if args.preempt_at is not None:
+        events.append(fi.PreemptAt(args.preempt_at))
+    if args.fail_at is not None:
+        events.append(fi.FailStep(step=args.fail_at, kind=args.fail_kind,
+                                  times=args.fail_times))
+    if args.drift_at is not None:
+        events.append(fi.DriftAt(args.drift_at, sigma=args.drift_sigma))
+    drift = None
+    if args.drift_check_every > 0:
+        if probe_batch is None:
+            raise SystemExit("--drift-check-every requires --calibrate "
+                             "(the probe compares against the pinned "
+                             "calibration windows)")
+        drift = DriftConfig(probe_batch=probe_batch,
+                            check_every=args.drift_check_every,
+                            clip_threshold=args.drift_clip,
+                            window_tol=args.drift_tol)
+    hb = (fault.Heartbeat(args.heartbeat, args.heartbeat_every)
+          if args.heartbeat else None)
+    if not (events or drift or hb or args.snapshot_dir):
+        return None
+    guard = None
+    if args.snapshot_dir:
+        guard = fault.PreemptionGuard().install()
+    return FaultConfig(
+        guard=guard, snapshot_dir=args.snapshot_dir, retries=args.retries,
+        injector=fi.FaultInjector(events) if events else None,
+        drift=drift, heartbeat=hb, monitor=fault.StragglerMonitor())
+
+
 def serve_engine(cfg, args, seed: int = 0):
-    """Engine path: synthetic ragged trace -> continuous-batching run."""
+    """Engine path: synthetic ragged trace -> continuous-batching run,
+    optionally fault-wired (snapshot/resume, injection, drift probing)."""
     import numpy as np
 
     from repro.runtime.engine import Engine, EngineConfig, Request
@@ -124,6 +167,7 @@ def serve_engine(cfg, args, seed: int = 0):
     key = jax.random.PRNGKey(seed)
     params = model.init_params(key, cfg)
     calib = None
+    calib_batch = None
     if args.calibrate:
         calib_batch = {"inputs": jax.random.randint(
             key, (min(args.slots, 4), args.prompt_len), 0, cfg.vocab_size)}
@@ -154,8 +198,38 @@ def serve_engine(cfg, args, seed: int = 0):
     ecfg = EngineConfig(slots=args.slots, page_size=args.page_size,
                         num_pages=args.num_pages, chunk=args.chunk,
                         max_pages_per_slot=max_pages)
-    engine = Engine(cfg, params, ecfg, calib=calib)
-    rep = engine.run(reqs)
+    fc = _fault_config(args, probe_batch=calib_batch)
+    if args.resume:
+        # Resume a preempted run: the snapshot carries the full in-flight
+        # state INCLUDING the pinned (possibly recalibrated) windows — build
+        # the engine's calibration from them, then restore and continue.
+        from repro.checkpoint import checkpoint
+        from repro.core.calibration import CalibrationState
+
+        if not args.snapshot_dir:
+            raise SystemExit("--resume requires --snapshot-dir")
+        flat, step = checkpoint.load_engine_snapshot(args.snapshot_dir)
+        calib = CalibrationState(windows={
+            k.split("/", 1)[1]: jnp.asarray(v) for k, v in flat.items()
+            if k.startswith("windows/")})
+        engine = Engine(cfg, params, ecfg, calib=calib)
+        engine.restore(flat)
+        print(f"[serve] resumed from snapshot step {step} "
+              f"({args.snapshot_dir})")
+        rep = engine.resume(fc)
+    else:
+        engine = Engine(cfg, params, ecfg, calib=calib)
+        rep = engine.run(reqs, fc)
+    if rep.preempted:
+        print(f"[serve] PREEMPTED at step {rep.steps}; snapshot: "
+              f"{rep.snapshot_path} (resume with --resume)")
+    if rep.step_retries or rep.failed:
+        print(f"[serve] faults: {rep.step_retries} step retries, "
+              f"{rep.failed} requests failed")
+    if rep.recalibrations or rep.drift_events:
+        print(f"[serve] drift: {len(rep.drift_events)} events, "
+              f"{rep.recalibrations} online recalibrations "
+              f"(compiled steps still {rep.compiled_steps})")
     print(f"[serve] engine: {len(reqs)} requests, "
           f"{rep.generated_tokens} tokens in {rep.steps} steps "
           f"({rep.prefill_steps} chunk + {rep.decode_steps} decode, "
@@ -170,6 +244,11 @@ def serve_engine(cfg, args, seed: int = 0):
     for r in rep.requests[:4]:
         print(f"[serve]   req {r['rid']}: {r['finish_reason']} "
               f"tokens={r['tokens'][:8]}")
+    if args.report_json:
+        import json
+        from pathlib import Path
+        Path(args.report_json).write_text(json.dumps(rep.to_json(), indent=1))
+        print(f"[serve] report written to {args.report_json}")
     return rep
 
 
@@ -196,6 +275,40 @@ def main():
     ap.add_argument("--chunk", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=64)
+    # fault tolerance & drift (engine path)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="preemption snapshots go here; also installs real "
+                         "SIGTERM/SIGINT handlers")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest engine snapshot from "
+                         "--snapshot-dir and continue the trace")
+    ap.add_argument("--preempt-at", type=int, default=None,
+                    help="inject a preemption at this engine step")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a compiled-step failure at this step")
+    ap.add_argument("--fail-kind", default="any",
+                    choices=["prefill", "decode", "any"])
+    ap.add_argument("--fail-times", type=int, default=1,
+                    help="how many raises (<= --retries: transient; "
+                         "--retries+1: persistent, one request fails)")
+    ap.add_argument("--drift-at", type=int, default=None,
+                    help="perturb device currents (FG tuning drift) at "
+                         "this step")
+    ap.add_argument("--drift-sigma", type=float, default=0.5)
+    ap.add_argument("--retries", type=int, default=2,
+                    help="retry budget per compiled step")
+    ap.add_argument("--heartbeat", default=None,
+                    help="liveness marker file path")
+    ap.add_argument("--heartbeat-every", type=float, default=30.0)
+    ap.add_argument("--drift-check-every", type=int, default=0,
+                    help="probe for window drift every N engine steps "
+                         "(0 = off; requires --calibrate)")
+    ap.add_argument("--drift-tol", type=float, default=0.25,
+                    help="max |log window ratio| before recalibrating")
+    ap.add_argument("--drift-clip", type=float, default=0.01,
+                    help="max readout clip rate before recalibrating")
+    ap.add_argument("--report-json", default=None,
+                    help="engine path: write the full EngineReport here")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:

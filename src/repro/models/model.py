@@ -166,45 +166,56 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
 
 
 def prefill_chunk(params, batch: dict, caches: dict, cfg: ModelConfig,
-                  calib=None):
+                  calib=None, windows=None):
     """One fixed-shape prefill chunk for ONE slot (the engine's first
     compiled step).  batch: {"inputs": (1, C) tokens, "block_row": (P,),
     "offset": (), "valid": ()}.  Returns (logits at the last valid position
     — shape (1, 1, V) — and the updated page pools).  ``calib`` as in
-    ``prefill_step`` (close over concrete state at jit time)."""
+    ``prefill_step`` (close over concrete state at jit time).
+
+    ``windows`` (site -> f32 window array, ``CalibrationState.as_arrays()``)
+    is the *hot-swappable* alternative: the windows enter the compiled
+    program as runtime operands (thread the dict as a jit argument), so the
+    engine can recalibrate between steps without recompiling — bit-identical
+    to the baked ``calib`` path."""
+    from repro.core import calibration
     from repro.core.calibration import apply_calibration
     from repro.runtime.paged_cache import PrefillChunkCtx
     cfg = apply_calibration(cfg, calib)
     ctx = PrefillChunkCtx(block_row=batch["block_row"],
                           offset=batch["offset"], valid=batch["valid"])
-    x = _embed(params, batch, cfg)
-    x, new_caches, _ = transformer.apply(params["blocks"], x, cfg,
-                                         "prefill_paged", caches, None,
-                                         embed0=x, page_ctx=ctx)
-    # logits only at the chunk's last real token (== prefill_step's x[:, -1:]
-    # on the final chunk); padded rows never reach the head.
-    x = jax.lax.dynamic_slice_in_dim(x, ctx.valid - 1, 1, axis=1)
-    x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    return _head(params, x, cfg), new_caches
+    with calibration.runtime_windows(windows):
+        x = _embed(params, batch, cfg)
+        x, new_caches, _ = transformer.apply(params["blocks"], x, cfg,
+                                             "prefill_paged", caches, None,
+                                             embed0=x, page_ctx=ctx)
+        # logits only at the chunk's last real token (== prefill_step's
+        # x[:, -1:] on the final chunk); padded rows never reach the head.
+        x = jax.lax.dynamic_slice_in_dim(x, ctx.valid - 1, 1, axis=1)
+        x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return _head(params, x, cfg), new_caches
 
 
 def decode_slots(params, batch: dict, caches: dict, cfg: ModelConfig,
-                 calib=None):
+                 calib=None, windows=None):
     """One token for every occupied slot (the engine's second compiled
     step).  batch: {"inputs": (B, 1) tokens, "block_tables": (B, P),
     "pos": (B,), "active": (B,) bool}.  Returns (logits (B, 1, V), updated
-    page pools); inactive rows produce ignored logits."""
+    page pools); inactive rows produce ignored logits.  ``windows`` as in
+    ``prefill_chunk`` (runtime-operand readout windows)."""
+    from repro.core import calibration
     from repro.core.calibration import apply_calibration
     from repro.runtime.paged_cache import DecodeCtx
     cfg = apply_calibration(cfg, calib)
     ctx = DecodeCtx(block_tables=batch["block_tables"], pos=batch["pos"],
                     active=batch["active"])
-    x = _embed(params, batch, cfg)
-    x, new_caches, _ = transformer.apply(params["blocks"], x, cfg,
-                                         "decode_paged", caches, None,
-                                         embed0=x, page_ctx=ctx)
-    x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
-    return _head(params, x, cfg), new_caches
+    with calibration.runtime_windows(windows):
+        x = _embed(params, batch, cfg)
+        x, new_caches, _ = transformer.apply(params["blocks"], x, cfg,
+                                             "decode_paged", caches, None,
+                                             embed0=x, page_ctx=ctx)
+        x = common.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return _head(params, x, cfg), new_caches
 
 
 def calibrate(params, batch: dict, cfg: ModelConfig, max_len: int = 0):
@@ -225,3 +236,29 @@ def calibrate(params, batch: dict, cfg: ModelConfig, max_len: int = 0):
     with calibration.collect() as collected:
         prefill_step(params, batch, caches, cfg)
     return calibration.CalibrationState.from_collected(collected)
+
+
+def drift_probe(params, batch: dict, cfg: ModelConfig, pinned,
+                max_len: int = 0):
+    """One eager calibration pass measured *against* pinned windows.
+
+    Same capture as ``calibrate`` but with clip tracking on: every site
+    additionally tallies how much of its latch-normalized |z| mass exceeds
+    the window currently pinned for serving (``pinned``: a
+    ``CalibrationState``).  Returns ``(fresh, clip_rates)`` — the freshly
+    captured ``CalibrationState`` and a site -> clip-fraction dict — the two
+    signals the engine's drift detector thresholds to decide when the §3.1
+    windows have gone stale.  Eager (outside the engine's two compiled
+    steps), so probing never adds a compiled program."""
+    import numpy as np
+
+    from repro.core import calibration
+    b, s = batch["inputs"].shape[:2]
+    caches = init_caches(cfg, b, max_len or s)
+    ref = {site: np.asarray(v, np.float32)
+           for site, v in pinned.windows.items()}
+    with calibration.collect(pinned=ref) as collected:
+        prefill_step(params, batch, caches, cfg)
+    fresh = calibration.CalibrationState.from_collected(collected)
+    clips = calibration.last_clips() or {}
+    return fresh, calibration.clip_rates(clips)

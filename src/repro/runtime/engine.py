@@ -2,9 +2,9 @@
 
 The paper's system discipline — fixed conversion circuitry, time-multiplexed
 inputs — maps onto serving as: keep exactly TWO jit-compiled step functions
-(one fixed-shape chunked-prefill step, one fixed-shape batched-decode step,
-both closing over the model's pinned ``CalibrationState``) and multiplex a
-ragged request stream through them.  Ragged traffic is absorbed by:
+(one fixed-shape chunked-prefill step, one fixed-shape batched-decode step)
+and multiplex a ragged request stream through them.  Ragged traffic is
+absorbed by:
 
   * a fixed pool of B decode **slots** (the decode step's batch dimension),
     admitted FIFO by arrival (``runtime/scheduler.py``);
@@ -14,6 +14,14 @@ ragged request stream through them.  Ragged traffic is absorbed by:
   * **chunked prefill**: prompts are absorbed ``chunk`` tokens per step
     through the single compiled prefill shape, interleaved with decode.
 
+Calibration enters the compiled steps as **runtime-operand windows**
+(``core.calibration.runtime_windows``): the pinned ``CalibrationState``
+threads through the two jits as a site -> f32 array dict argument, NOT as
+baked jit-static constants — bit-identical to the baked path (the kernels
+already pin windows behind optimization barriers), and hot-swappable: a
+recaptured state replaces the dict values between steps with zero
+recompilation, keeping ``compiled_steps == 2`` under online recalibration.
+
 Request lifecycle::
 
     pending --admit(slot+pages)--> prefilling --last chunk--> decoding
@@ -21,16 +29,26 @@ Request lifecycle::
        +--> evicted (prompt exceeds page budget)                 +--> eos
                                                                  +--> max_tokens
                                                                  +--> evicted
-                                                   (page budget exhausted —
-                                                    evicted BEFORE the
-                                                    overflowing write)
+                                                                 +--> failed
+                                                   (evicted: page budget
+                                                    exhausted — finished
+                                                    BEFORE the overflowing
+                                                    write; failed: a
+                                                    persistently failing
+                                                    compiled step, blamed
+                                                    on one request so the
+                                                    engine keeps serving)
 
-Capacity overflow is an *admission-control* event here, not a numeric one:
-the dense-cache decode path NaN-poisons a row that decodes past capacity
-(failing loudly under jit), but the engine never lets that write happen —
-a request whose next token has no page is finished with reason "evicted"
-before the step runs, so neighbor slots' logits stay NaN-free (regression
-test: ``tests/test_engine.py``).
+Fault tolerance (``FaultConfig``): a ``fault.PreemptionGuard`` (or an
+injected ``faultinject.PreemptAt``) unwinds the run between steps to a
+**snapshot** — the full in-flight state (scheduler queue, slots, block
+tables, page-pool free list, paged KV pools, emitted tokens, energy
+accounting, runtime windows) as one checkpointable pytree — with the hard
+contract that ``restore`` + ``resume`` replays the remaining trace
+bit-identically to an uninterrupted run.  ``fault.retry_step`` wraps both
+compiled steps (transient failures recover invisibly; persistent ones
+degrade to a single ``failed`` request with neighbors bit-equal), and
+``StragglerMonitor`` / ``Heartbeat`` feed the report.
 
 Energy: every processed token is priced by the resolved plan's analog-tile
 geometry (``core.energy.serving_energy_model``) into per-request Op counts
@@ -39,8 +57,10 @@ and joules — the fJ/Op currency of the paper, measured at request level.
 from __future__ import annotations
 
 import dataclasses
+import json
+import math
 import time
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -50,12 +70,13 @@ from repro.configs.base import ModelConfig
 from repro.core import energy as energy_model
 from repro.core.calibration import CalibrationState, apply_calibration
 from repro.models import model
+from repro.runtime import fault
 from repro.runtime.paged_cache import PagePool, pages_for
-from repro.runtime.scheduler import (Request, RequestRecord, SlotScheduler,
-                                     static_baseline)
+from repro.runtime.scheduler import (Request, RequestRecord, Slot,
+                                     SlotScheduler, static_baseline)
 
-__all__ = ["Engine", "EngineConfig", "EngineReport", "Request",
-           "static_baseline"]
+__all__ = ["Engine", "EngineConfig", "EngineReport", "FaultConfig",
+           "DriftConfig", "Request", "static_baseline"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +97,49 @@ class EngineConfig:
     def resolved_max_pages(self) -> int:
         p = self.max_pages_per_slot or self.num_pages
         return min(p, self.num_pages)
+
+
+@dataclasses.dataclass
+class DriftConfig:
+    """Online drift detection + recalibration policy.
+
+    Every ``check_every`` engine steps the engine runs an *eager* probe pass
+    (``models.model.drift_probe`` — the same capture as ``model.calibrate``,
+    never a third compiled program) on ``probe_batch`` and compares the
+    fresh windows and per-site readout clip rates against the pinned ones.
+    Drift is declared when any site clips more than ``clip_threshold`` of
+    its |z| mass against its pinned window, or any window moved by more than
+    ``window_tol`` in |log ratio|; with ``recalibrate`` the fresh
+    ``CalibrationState`` is hot-swapped in between steps (no recompile)."""
+    probe_batch: dict
+    check_every: int = 16
+    clip_threshold: float = 0.01
+    window_tol: float = 0.25
+    max_len: int = 0
+    recalibrate: bool = True
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    """Fault wiring for one ``Engine.run`` / ``resume``.
+
+    ``guard`` polls for preemption (install it for real SIGTERM handling;
+    injected preemptions use the run's internal guard); ``snapshot_dir``
+    makes a preemption exit through ``checkpoint.save_engine_snapshot``.
+    ``retries``/``backoff_s``/``backoff_cap_s``/``jitter`` parameterize
+    ``fault.retry_step`` around both compiled steps.  ``injector`` is a
+    ``faultinject.FaultInjector`` schedule; ``drift`` a ``DriftConfig``."""
+    guard: Optional[fault.PreemptionGuard] = None
+    snapshot_dir: Optional[str] = None
+    snapshot_keep: int = 3
+    retries: int = 2
+    backoff_s: float = 0.01
+    backoff_cap_s: float = 1.0
+    jitter: float = 0.1
+    heartbeat: Optional[fault.Heartbeat] = None
+    monitor: Optional[fault.StragglerMonitor] = None
+    injector: Optional[Any] = None
+    drift: Optional[DriftConfig] = None
 
 
 @dataclasses.dataclass
@@ -100,19 +164,59 @@ class EngineReport:
     fj_per_op: float
     tokens_per_joule: float
     compiled_steps: int
+    # --- fault tolerance & drift (defaults keep old constructors valid) ---
+    preempted: bool = False
+    snapshot_path: Optional[str] = None
+    failed: int = 0
+    step_retries: int = 0
+    stragglers: int = 0
+    straggler_ewma_s: float = 0.0
+    heartbeats: int = 0
+    recalibrations: int = 0
+    drift_events: list = dataclasses.field(default_factory=list)
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
 
 
+@dataclasses.dataclass
+class RunState:
+    """Everything one serving run mutates — the snapshot/restore unit
+    (device caches + host bookkeeping + cumulative counters)."""
+    requests: list[Request]
+    records: dict[int, RequestRecord]
+    sched: SlotScheduler
+    pool: PagePool
+    caches: Any
+    steps: int = 0
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    idle_steps: int = 0
+    prompt_tokens: int = 0
+    generated_tokens: int = 0
+    evictions: int = 0
+    nan_steps: int = 0
+    failed: int = 0
+    step_retries: int = 0
+    recalibrations: int = 0
+    last_drift_check: int = 0
+    wall_s: float = 0.0
+    util_samples: list = dataclasses.field(default_factory=list)
+    drift_events: list = dataclasses.field(default_factory=list)
+    preempted: bool = False
+    snapshot_path: Optional[str] = None
+
+
 class Engine:
     """Continuous-batching serving engine over ONE model + calibration.
 
-    ``calib`` pins every enabled digital-boundary site's readout window at
-    jit time.  The engine *requires* pinned windows on enabled sites (or
+    ``calib`` pins every enabled digital-boundary site's readout window.
+    The engine *requires* pinned windows on enabled sites (or
     ``output_calibration=False``): a data-calibrated per-call window is a
     max over the whole batch, which would couple slots together and break
-    the per-request bit-identity contract.
+    the per-request bit-identity contract.  The pinned windows thread into
+    the two compiled steps as runtime operands (see module docstring), so
+    ``set_calibration`` can hot-swap them between steps without recompiling.
     """
 
     def __init__(self, cfg: ModelConfig, params,
@@ -136,12 +240,19 @@ class Engine:
         self.energy = energy_model.serving_energy_model(
             self.cfg_serving, engine_cfg.tile_n)
 
+        # Windows as runtime operands: the jits trace over the window dict
+        # (same sites + shapes -> same executable), never bake the values.
+        self._windows = calib.as_arrays() if calib is not None else {}
         self._prefill = jax.jit(
-            lambda p, b, c: model.prefill_chunk(p, b, c, cfg, calib=calib),
+            lambda p, b, c, w: model.prefill_chunk(p, b, c, cfg, windows=w),
             donate_argnums=(2,))
         self._decode = jax.jit(
-            lambda p, b, c: model.decode_slots(p, b, c, cfg, calib=calib),
+            lambda p, b, c, w: model.decode_slots(p, b, c, cfg, windows=w),
             donate_argnums=(2,))
+
+        self._st: Optional[RunState] = None
+        self._fault: Optional[FaultConfig] = None
+        self._guard: Optional[fault.PreemptionGuard] = None
 
         # Per-page HBM bytes across all layers (for the high-water stat).
         shapes = jax.eval_shape(lambda: model.init_paged_caches(
@@ -170,188 +281,589 @@ class Engine:
         return sum(sizes) if all(s >= 0 for s in sizes) else -1
 
     # ------------------------------------------------------------------
-    def run(self, requests: list[Request]) -> EngineReport:
-        """Serve a trace to completion; returns the report (token streams,
-        finish reasons, energy, utilization, memory high-water)."""
-        ecfg = self.ecfg
-        ps, cap_pages = ecfg.page_size, ecfg.resolved_max_pages
-        vocab = self.cfg.vocab_size
+    # Calibration hot-swap
+    # ------------------------------------------------------------------
+    def set_calibration(self, calib: CalibrationState) -> None:
+        """Swap the pinned windows between steps — values only, never
+        structure, so the two compiled step executables are reused as-is
+        (``compiled_steps`` stays 2)."""
+        new = calib.as_arrays()
+        if set(new) != set(self._windows):
+            raise ValueError(
+                f"hot-swap calibration covers sites {sorted(new)} but the "
+                f"engine serves {sorted(self._windows)} — site structure is "
+                "jit-static; rebuild the engine for a different plan")
+        for site, arr in new.items():
+            if arr.shape != self._windows[site].shape:
+                raise ValueError(
+                    f"hot-swap window for site {site!r} has shape "
+                    f"{arr.shape}, pinned is {self._windows[site].shape}")
+        self._windows = new
+        self.calib = calib
+
+    def pinned_calibration(self) -> CalibrationState:
+        """The currently pinned windows as a ``CalibrationState``."""
+        return CalibrationState(windows=dict(self._windows))
+
+    # ------------------------------------------------------------------
+    # Preemption
+    # ------------------------------------------------------------------
+    def request_preemption(self) -> None:
+        """Flag the active run for snapshot-and-exit before its next step
+        (what a SIGTERM handler — or an injected preemption — calls)."""
+        if self._guard is None:
+            self._guard = fault.PreemptionGuard()
+        self._guard.requested = True
+
+    # ------------------------------------------------------------------
+    # Run lifecycle
+    # ------------------------------------------------------------------
+    def start(self, requests: list[Request]) -> None:
+        """Initialize a fresh run over a trace (allocates pools/caches)."""
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             raise ValueError("duplicate request ids in trace")
-
-        caches = model.init_paged_caches(self.cfg, ecfg.num_pages, ps)
-        pool = PagePool(ecfg.num_pages, ps)
+        ecfg = self.ecfg
         sched = SlotScheduler(ecfg.slots, ecfg.slot_order)
         sched.add(requests)
-        records = {r.rid: RequestRecord(r) for r in requests}
+        self._st = RunState(
+            requests=list(requests),
+            records={r.rid: RequestRecord(r) for r in requests},
+            sched=sched,
+            pool=PagePool(ecfg.num_pages, ecfg.page_size),
+            caches=model.init_paged_caches(
+                self.cfg, ecfg.num_pages, ecfg.page_size),
+        )
 
-        steps = prefill_steps = decode_steps = idle_steps = 0
-        prompt_tokens = generated_tokens = evictions = nan_steps = 0
-        util_samples: list[float] = []
-        ops_tok = self.energy["ops_per_token"]
-        e_tok = self.energy["energy_per_token_j"]
+    def run(self, requests: list[Request],
+            fault_cfg: Optional[FaultConfig] = None) -> EngineReport:
+        """Serve a trace to completion (or preemption); returns the report
+        (token streams, finish reasons, energy, utilization, memory
+        high-water, fault/drift accounting)."""
+        self.start(requests)
+        return self._drive(fault_cfg)
+
+    def resume(self,
+               fault_cfg: Optional[FaultConfig] = None) -> EngineReport:
+        """Continue a run restored by ``restore`` (or a run that exited
+        preempted in-process) to completion."""
+        if self._st is None:
+            raise RuntimeError("no run state: call run() or restore() first")
+        self._st.preempted = False
+        self._st.snapshot_path = None
+        return self._drive(fault_cfg)
+
+    def _drive(self, fault_cfg: Optional[FaultConfig]) -> EngineReport:
+        st = self._st
+        fc = self._fault = fault_cfg
+        guard = (fc.guard if fc is not None else None) \
+            or fault.PreemptionGuard()
+        self._guard = guard
         t0 = time.time()
-
-        def finish(slot, reason: str):
-            nonlocal evictions
-            slot.record.finish_reason = reason
-            slot.record.finished_step = steps
-            if reason == "evicted":
-                evictions += 1
-            pool.free(slot.pages)
-            sched.release(slot)
-
-        def emit(slot, tok: int):
-            """Stream one generated token; finish on eos/budget."""
-            rec = slot.record
-            rec.tokens.append(tok)
-            if rec.first_token_step < 0:
-                rec.first_token_step = steps
-            if ecfg.eos_id is not None and tok == ecfg.eos_id:
-                finish(slot, "eos")
-            elif len(rec.tokens) >= rec.request.max_new_tokens:
-                finish(slot, "max_tokens")
-            else:
-                slot.cur_token = tok
-
-        def account(rec, n: int):
-            rec.analog_ops += n * ops_tok
-            rec.analog_energy_j += n * e_tok
-
-        while True:
-            if steps > ecfg.max_steps:
-                raise RuntimeError(f"engine exceeded max_steps={ecfg.max_steps}")
-            # --- admission (FIFO; head-of-line blocks on pool pressure) ---
+        try:
             while True:
-                req = sched.head(steps)
-                if req is None:
+                if fc is not None and fc.injector is not None:
+                    fc.injector.on_tick(self, st.steps)
+                if guard.requested:
+                    raise fault.Preempted(f"preempted at step {st.steps}")
+                t1 = time.time()
+                alive = self.tick()
+                dt = time.time() - t1
+                if fc is not None:
+                    if fc.monitor is not None:
+                        fc.monitor.record(st.steps, dt)
+                    if fc.heartbeat is not None:
+                        fc.heartbeat.beat(st.steps)
+                    if (fc.drift is not None and st.steps -
+                            st.last_drift_check >= fc.drift.check_every):
+                        st.last_drift_check = st.steps
+                        self._drift_check(fc.drift)
+                if not alive:
                     break
-                need = pages_for(len(req.prompt), ps)
-                if need > cap_pages:
-                    # can never fit: reject without occupying a slot
-                    sched.pop_head()
-                    rec = records[req.rid]
-                    rec.admitted_step = rec.finished_step = steps
-                    rec.finish_reason = "evicted"
-                    evictions += 1
-                    continue
-                sid = sched.free_slot_id()
-                if sid is None:
-                    break
-                pages = pool.alloc(need)
-                if pages is None:
-                    break
-                sched.pop_head()
-                rec = records[req.rid]
-                rec.admitted_step = steps
-                sched.place(sid, rec, pages)
+        except fault.Preempted:
+            st.preempted = True
+            st.wall_s += time.time() - t0
+            if fc is not None and fc.snapshot_dir is not None:
+                from repro.checkpoint import checkpoint as ckpt
+                path = ckpt.save_engine_snapshot(
+                    self.snapshot(), fc.snapshot_dir, step=st.steps,
+                    keep=fc.snapshot_keep)
+                st.snapshot_path = str(path)
+            return self.report()
+        st.wall_s += time.time() - t0
+        return self.report()
 
-            occupied = sched.occupied()
-            prefilling = [s for s in occupied if s.prefilling]
-            decoding = [s for s in occupied if not s.prefilling]
+    # ------------------------------------------------------------------
+    # One scheduling tick
+    # ------------------------------------------------------------------
+    def tick(self) -> bool:
+        """One engine iteration: admit, then run one prefill chunk OR one
+        batched decode step OR fast-forward to the next arrival.  Returns
+        False when the trace is fully served.  Engine state is always
+        consistent between ticks — snapshots happen exactly here."""
+        st = self._st
+        ecfg = self.ecfg
+        if st.steps > ecfg.max_steps:
+            raise RuntimeError(f"engine exceeded max_steps={ecfg.max_steps}")
+        self._admit()
+        occupied = st.sched.occupied()
+        prefilling = [s for s in occupied if s.prefilling]
+        decoding = [s for s in occupied if not s.prefilling]
+        if prefilling:
+            self._prefill_tick(prefilling[0])
+            return True
+        if decoding:
+            self._decode_tick(decoding)
+            return True
+        if st.sched.has_pending():
+            nxt = st.sched.next_arrival()
+            if nxt is None or nxt <= st.steps:
+                raise RuntimeError(
+                    "scheduler stall: pending request cannot be admitted "
+                    "into an empty engine (page budget inconsistency)")
+            st.idle_steps += nxt - st.steps
+            st.steps = nxt
+            return True
+        return False
 
-            if prefilling:
-                # --- one prefill chunk (oldest admission first) -----------
-                slot = prefilling[0]
-                prompt = slot.record.request.prompt
-                start = slot.prefill_done
-                n = min(ecfg.chunk, len(prompt) - start)
-                tokens = np.zeros((1, ecfg.chunk), np.int32)
-                tokens[0, :n] = prompt[start:start + n]
-                row = np.full((cap_pages,), pool.trash_page, np.int32)
-                row[:len(slot.pages)] = slot.pages
-                batch = {"inputs": jnp.asarray(tokens),
-                         "block_row": jnp.asarray(row),
-                         "offset": jnp.int32(start), "valid": jnp.int32(n)}
-                logits, caches = self._prefill(self.params, batch, caches)
-                prefill_steps += 1
-                slot.prefill_done += n
-                slot.pos += n
-                prompt_tokens += n
-                account(slot.record, n)
-                if not slot.prefilling:
-                    row_logits = logits[0, 0]
-                    tok = int(jnp.argmax(row_logits[:vocab]))
-                    nan_steps += int(bool(jnp.isnan(row_logits).any()))
-                    generated_tokens += 1
-                    account(slot.record, 1)
-                    emit(slot, tok)
-                steps += 1
-
-            elif decoding:
-                # --- evict-before-poison: secure every slot's write page --
-                runnable = []
-                for slot in decoding:
-                    if slot.pos >= len(slot.pages) * ps:
-                        if len(slot.pages) >= cap_pages or \
-                                (new := pool.alloc(1)) is None:
-                            finish(slot, "evicted")
-                            continue
-                        slot.pages.extend(new)
-                    runnable.append(slot)
-                if not runnable:
-                    continue          # state changed (evictions); re-plan
-                b = ecfg.slots
-                tokens = np.zeros((b, 1), np.int32)
-                pos = np.zeros((b,), np.int32)
-                tables = np.full((b, cap_pages), pool.trash_page, np.int32)
-                active = np.zeros((b,), bool)
-                for slot in runnable:
-                    tokens[slot.sid, 0] = slot.cur_token
-                    pos[slot.sid] = slot.pos
-                    tables[slot.sid, :len(slot.pages)] = slot.pages
-                    active[slot.sid] = True
-                batch = {"inputs": jnp.asarray(tokens),
-                         "block_tables": jnp.asarray(tables),
-                         "pos": jnp.asarray(pos),
-                         "active": jnp.asarray(active)}
-                logits, caches = self._decode(self.params, batch, caches)
-                decode_steps += 1
-                util_samples.append(len(runnable) / b)
-                toks = np.asarray(jnp.argmax(logits[:, 0, :vocab], axis=-1))
-                nans = np.asarray(jnp.isnan(logits[:, 0]).any(axis=-1))
-                for slot in runnable:              # admission order
-                    nan_steps += int(nans[slot.sid])
-                    slot.pos += 1
-                    generated_tokens += 1
-                    account(slot.record, 1)
-                    emit(slot, int(toks[slot.sid]))
-                steps += 1
-
-            elif sched.has_pending():
-                # nothing runnable: fast-forward to the next arrival
-                nxt = sched.next_arrival()
-                if nxt is None or nxt <= steps:
-                    raise RuntimeError(
-                        "scheduler stall: pending request cannot be admitted "
-                        "into an empty engine (page budget inconsistency)")
-                idle_steps += nxt - steps
-                steps = nxt
-            else:
+    def _admit(self) -> None:
+        """FIFO admission; head-of-line blocks on pool pressure."""
+        st = self._st
+        ecfg = self.ecfg
+        cap_pages = ecfg.resolved_max_pages
+        while True:
+            req = st.sched.head(st.steps)
+            if req is None:
                 break
+            need = pages_for(len(req.prompt), ecfg.page_size)
+            if need > cap_pages:
+                # can never fit: reject without occupying a slot
+                st.sched.pop_head()
+                rec = st.records[req.rid]
+                rec.admitted_step = rec.finished_step = st.steps
+                rec.finish_reason = "evicted"
+                st.evictions += 1
+                continue
+            sid = st.sched.free_slot_id()
+            if sid is None:
+                break
+            pages = st.pool.alloc(need)
+            if pages is None:
+                break
+            st.sched.pop_head()
+            rec = st.records[req.rid]
+            rec.admitted_step = st.steps
+            st.sched.place(sid, rec, pages)
 
-        wall = time.time() - t0
+    def _finish(self, slot: Slot, reason: str) -> None:
+        st = self._st
+        slot.record.finish_reason = reason
+        slot.record.finished_step = st.steps
+        if reason == "evicted":
+            st.evictions += 1
+        elif reason == "failed":
+            st.failed += 1
+        st.pool.free(slot.pages)
+        st.sched.release(slot)
+
+    def _emit(self, slot: Slot, tok: int) -> None:
+        """Stream one generated token; finish on eos/budget."""
+        rec = slot.record
+        rec.tokens.append(tok)
+        if rec.first_token_step < 0:
+            rec.first_token_step = self._st.steps
+        if self.ecfg.eos_id is not None and tok == self.ecfg.eos_id:
+            self._finish(slot, "eos")
+        elif len(rec.tokens) >= rec.request.max_new_tokens:
+            self._finish(slot, "max_tokens")
+        else:
+            slot.cur_token = tok
+
+    def _account(self, rec: RequestRecord, n: int) -> None:
+        rec.analog_ops += n * self.energy["ops_per_token"]
+        rec.analog_energy_j += n * self.energy["energy_per_token_j"]
+
+    def _run_compiled(self, kind: str, fn, *args):
+        """The retry boundary around one compiled step.  Injected faults
+        raise before ``fn`` is invoked, so the donated cache buffers of a
+        failed attempt were never consumed."""
+        fc = self._fault
+        st = self._st
+
+        def call():
+            if fc is not None and fc.injector is not None:
+                fc.injector.check(kind, st.steps)
+            return fn(*args)
+
+        if fc is None:
+            return call()
+
+        def on_retry(attempt, e):
+            st.step_retries += 1
+
+        return fault.retry_step(
+            call, retries=fc.retries, backoff_s=fc.backoff_s,
+            backoff_cap_s=fc.backoff_cap_s, jitter=fc.jitter,
+            on_retry=on_retry, guard=self._guard)
+
+    def _prefill_tick(self, slot: Slot) -> None:
+        """One prefill chunk (oldest admission first)."""
+        st = self._st
+        ecfg = self.ecfg
+        vocab = self.cfg.vocab_size
+        prompt = slot.record.request.prompt
+        start = slot.prefill_done
+        n = min(ecfg.chunk, len(prompt) - start)
+        tokens = np.zeros((1, ecfg.chunk), np.int32)
+        tokens[0, :n] = prompt[start:start + n]
+        row = np.full((ecfg.resolved_max_pages,), st.pool.trash_page,
+                      np.int32)
+        row[:len(slot.pages)] = slot.pages
+        batch = {"inputs": jnp.asarray(tokens),
+                 "block_row": jnp.asarray(row),
+                 "offset": jnp.int32(start), "valid": jnp.int32(n)}
+        try:
+            logits, caches = self._run_compiled(
+                "prefill", self._prefill, self.params, batch, st.caches,
+                self._windows)
+        except RuntimeError as e:
+            # Persistent step failure: this slot IS the step's work — finish
+            # it as failed (graceful degradation) and re-plan next tick.
+            del e
+            self._finish(slot, "failed")
+            return
+        st.caches = caches
+        st.prefill_steps += 1
+        slot.prefill_done += n
+        slot.pos += n
+        st.prompt_tokens += n
+        self._account(slot.record, n)
+        if not slot.prefilling:
+            row_logits = logits[0, 0]
+            tok = int(jnp.argmax(row_logits[:vocab]))
+            st.nan_steps += int(bool(jnp.isnan(row_logits).any()))
+            st.generated_tokens += 1
+            self._account(slot.record, 1)
+            self._emit(slot, tok)
+        st.steps += 1
+
+    def _decode_tick(self, decoding: list[Slot]) -> None:
+        """One batched decode step over all decoding slots."""
+        st = self._st
+        ecfg = self.ecfg
+        ps, cap_pages = ecfg.page_size, ecfg.resolved_max_pages
+        vocab = self.cfg.vocab_size
+        # --- evict-before-poison: secure every slot's write page ----------
+        runnable = []
+        for slot in decoding:
+            if slot.pos >= len(slot.pages) * ps:
+                if len(slot.pages) >= cap_pages or \
+                        (new := st.pool.alloc(1)) is None:
+                    self._finish(slot, "evicted")
+                    continue
+                slot.pages.extend(new)
+            runnable.append(slot)
+        if not runnable:
+            return                # state changed (evictions); re-plan
+        b = ecfg.slots
+        tokens = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        tables = np.full((b, cap_pages), st.pool.trash_page, np.int32)
+        active = np.zeros((b,), bool)
+        for slot in runnable:
+            tokens[slot.sid, 0] = slot.cur_token
+            pos[slot.sid] = slot.pos
+            tables[slot.sid, :len(slot.pages)] = slot.pages
+            active[slot.sid] = True
+        batch = {"inputs": jnp.asarray(tokens),
+                 "block_tables": jnp.asarray(tables),
+                 "pos": jnp.asarray(pos),
+                 "active": jnp.asarray(active)}
+        try:
+            logits, caches = self._run_compiled(
+                "decode", self._decode, self.params, batch, st.caches,
+                self._windows)
+        except RuntimeError as e:
+            # Persistent step failure: blame the attributed request (or the
+            # oldest runnable slot), finish it failed, re-plan next tick.
+            # Decode rows are independent (row-wise math + trash-page
+            # isolation), so the survivors' streams are bit-unchanged.
+            rid = getattr(e, "rid", None)
+            culprit = next(
+                (s for s in runnable if s.record.request.rid == rid), None)
+            if culprit is None:
+                culprit = min(runnable, key=lambda s: s.seq)
+            self._finish(culprit, "failed")
+            return
+        st.caches = caches
+        st.decode_steps += 1
+        st.util_samples.append(len(runnable) / b)
+        toks = np.asarray(jnp.argmax(logits[:, 0, :vocab], axis=-1))
+        nans = np.asarray(jnp.isnan(logits[:, 0]).any(axis=-1))
+        for slot in runnable:              # admission order
+            st.nan_steps += int(nans[slot.sid])
+            slot.pos += 1
+            st.generated_tokens += 1
+            self._account(slot.record, 1)
+            self._emit(slot, int(toks[slot.sid]))
+        st.steps += 1
+
+    # ------------------------------------------------------------------
+    # Drift detection + online recalibration
+    # ------------------------------------------------------------------
+    def _drift_check(self, dc: DriftConfig) -> None:
+        st = self._st
+        pinned = self.pinned_calibration()
+        fresh, clips = model.drift_probe(
+            self.params, dc.probe_batch, self.cfg, pinned, dc.max_len)
+        ratios = pinned.drift_ratios(fresh)
+        max_clip = max(clips.values(), default=0.0)
+        max_dev = max((abs(math.log(max(r, 1e-12)))
+                       for r in ratios.values()), default=0.0)
+        drifted = max_clip > dc.clip_threshold or max_dev > dc.window_tol
+        if not drifted:
+            return
+        event = {"step": st.steps, "max_clip_rate": float(max_clip),
+                 "max_log_ratio": float(max_dev),
+                 "clip_rates": {k: float(v) for k, v in clips.items()},
+                 "ratios": {k: float(v) for k, v in ratios.items()},
+                 "recalibrated": bool(dc.recalibrate)}
+        st.drift_events.append(event)
+        if dc.recalibrate:
+            self.set_calibration(fresh)
+            st.recalibrations += 1
+
+    # ------------------------------------------------------------------
+    # Snapshot / restore
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """The full in-flight state as ONE checkpointable pytree.
+
+        Leaves: ``caches/...`` (paged KV pools, host-copied), ``windows/<site>``
+        (the currently pinned — possibly recalibrated — readout windows), and
+        ``meta`` (a uint8-encoded JSON blob of every host-side structure:
+        requests, records, scheduler queue + slots + block tables, page-pool
+        free list, cumulative counters).  ``params``/model weights are NOT
+        included — weight provenance belongs to the model checkpoint; the
+        restoring process constructs the Engine with the same params.
+
+        Only valid between ticks (where the engine always is when a
+        preemption unwinds it)."""
+        st = self._st
+        if st is None:
+            raise RuntimeError("no run state to snapshot")
+        meta = {
+            "version": 1,
+            "ecfg": dataclasses.asdict(self.ecfg),
+            "model": {"vocab_size": self.cfg.vocab_size,
+                      "n_layers": self.cfg.n_layers,
+                      "d_model": self.cfg.d_model,
+                      "family": self.cfg.family},
+            "requests": [
+                {"rid": r.rid, "prompt": list(r.prompt),
+                 "max_new_tokens": r.max_new_tokens,
+                 "arrival_step": r.arrival_step} for r in st.requests],
+            "records": {
+                str(rid): {
+                    "tokens": list(rec.tokens),
+                    "finish_reason": rec.finish_reason,
+                    "admitted_step": rec.admitted_step,
+                    "first_token_step": rec.first_token_step,
+                    "finished_step": rec.finished_step,
+                    "analog_ops": rec.analog_ops,
+                    "analog_energy_j": rec.analog_energy_j,
+                } for rid, rec in st.records.items()},
+            "sched": {
+                "pending": [r.rid for r in st.sched.pending],
+                "seq": st.sched._seq,
+                "slots": [
+                    None if s is None else {
+                        "sid": s.sid, "seq": s.seq,
+                        "rid": s.record.request.rid,
+                        "pages": list(s.pages), "pos": s.pos,
+                        "prefill_done": s.prefill_done,
+                        "cur_token": s.cur_token,
+                    } for s in st.sched.slots]},
+            "pool": {"free": list(st.pool._free),
+                     "high_water": st.pool.high_water},
+            "counters": {
+                "steps": st.steps, "prefill_steps": st.prefill_steps,
+                "decode_steps": st.decode_steps,
+                "idle_steps": st.idle_steps,
+                "prompt_tokens": st.prompt_tokens,
+                "generated_tokens": st.generated_tokens,
+                "evictions": st.evictions, "nan_steps": st.nan_steps,
+                "failed": st.failed, "step_retries": st.step_retries,
+                "recalibrations": st.recalibrations,
+                "last_drift_check": st.last_drift_check,
+                "wall_s": st.wall_s,
+                "util_samples": [float(u) for u in st.util_samples],
+                "drift_events": st.drift_events,
+            },
+        }
+        blob = np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8)
+        return {
+            "caches": jax.tree.map(np.asarray, st.caches),
+            "windows": {site: np.asarray(v)
+                        for site, v in self._windows.items()},
+            "meta": blob,
+        }
+
+    def restore(self, snap) -> None:
+        """Rebuild in-flight state from ``snapshot()`` output — the nested
+        pytree itself or the flat name -> array dict
+        ``checkpoint.load_engine_snapshot`` returns.  Validates the engine
+        shape (EngineConfig + model identity + window structure) against the
+        snapshot; ``resume`` then continues the trace bit-identically."""
+        from repro.checkpoint import checkpoint as ckpt
+        flat = dict(ckpt.leaf_paths(snap))
+        if "meta" not in flat:
+            raise ValueError("engine snapshot missing 'meta' leaf")
+        meta = json.loads(np.asarray(flat["meta"], np.uint8)
+                          .tobytes().decode("utf-8"))
+        mine = dataclasses.asdict(self.ecfg)
+        if meta["ecfg"] != mine:
+            raise ValueError(
+                f"engine snapshot was taken with EngineConfig "
+                f"{meta['ecfg']}, this engine has {mine} — the config pins "
+                "the compiled step shapes and cannot change across resume")
+        model_id = {"vocab_size": self.cfg.vocab_size,
+                    "n_layers": self.cfg.n_layers,
+                    "d_model": self.cfg.d_model, "family": self.cfg.family}
+        if meta["model"] != model_id:
+            raise ValueError(
+                f"engine snapshot model {meta['model']} != {model_id}")
+
+        # --- windows (the pinned state at snapshot time, which may be a
+        # recalibrated one — restoring it is what keeps resume bit-exact) ---
+        win_names = {k[len("windows/"):] for k in flat
+                     if k.startswith("windows/")}
+        if win_names != set(self._windows):
+            raise ValueError(
+                f"snapshot windows {sorted(win_names)} != engine sites "
+                f"{sorted(self._windows)}")
+        restored = {}
+        for site in win_names:
+            arr = np.asarray(flat[f"windows/{site}"], np.float32)
+            if arr.shape != self._windows[site].shape:
+                raise ValueError(
+                    f"snapshot window {site!r} shape {arr.shape} != "
+                    f"{self._windows[site].shape}")
+            restored[site] = jnp.asarray(arr)
+        self._windows = restored
+        self.calib = CalibrationState(windows=dict(restored))
+
+        # --- device caches ------------------------------------------------
+        ecfg = self.ecfg
+        shapes = jax.eval_shape(lambda: model.init_paged_caches(
+            self.cfg, ecfg.num_pages, ecfg.page_size))
+        leaves = []
+        for name, sh in ckpt.leaf_paths(shapes):
+            arr = flat.get(f"caches/{name}")
+            if arr is None:
+                raise KeyError(f"engine snapshot missing cache leaf {name}")
+            if tuple(arr.shape) != tuple(sh.shape) or \
+                    str(arr.dtype) != str(sh.dtype):
+                raise ValueError(
+                    f"cache leaf {name}: snapshot {arr.shape}/{arr.dtype} "
+                    f"!= expected {sh.shape}/{sh.dtype}")
+            leaves.append(jnp.asarray(arr))
+        caches = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(shapes), leaves)
+
+        # --- host bookkeeping --------------------------------------------
+        requests = [Request(rid=r["rid"], prompt=tuple(r["prompt"]),
+                            max_new_tokens=r["max_new_tokens"],
+                            arrival_step=r["arrival_step"])
+                    for r in meta["requests"]]
+        by_rid = {r.rid: r for r in requests}
+        records = {}
+        for rid_s, rd in meta["records"].items():
+            rid = int(rid_s)
+            rec = RequestRecord(by_rid[rid])
+            rec.tokens = list(rd["tokens"])
+            rec.finish_reason = rd["finish_reason"]
+            rec.admitted_step = rd["admitted_step"]
+            rec.first_token_step = rd["first_token_step"]
+            rec.finished_step = rd["finished_step"]
+            rec.analog_ops = rd["analog_ops"]
+            rec.analog_energy_j = rd["analog_energy_j"]
+            records[rid] = rec
+        sched = SlotScheduler(ecfg.slots, ecfg.slot_order)
+        sched.pending = [by_rid[rid] for rid in meta["sched"]["pending"]]
+        sched._seq = meta["sched"]["seq"]
+        for sd in meta["sched"]["slots"]:
+            if sd is None:
+                continue
+            slot = Slot(sid=sd["sid"], seq=sd["seq"],
+                        record=records[sd["rid"]], pages=list(sd["pages"]),
+                        pos=sd["pos"], prefill_done=sd["prefill_done"],
+                        cur_token=sd["cur_token"])
+            sched.slots[sd["sid"]] = slot
+        pool = PagePool(ecfg.num_pages, ecfg.page_size)
+        pool._free = list(meta["pool"]["free"])
+        pool.high_water = meta["pool"]["high_water"]
+
+        c = meta["counters"]
+        self._st = RunState(
+            requests=requests, records=records, sched=sched, pool=pool,
+            caches=caches, steps=c["steps"],
+            prefill_steps=c["prefill_steps"],
+            decode_steps=c["decode_steps"], idle_steps=c["idle_steps"],
+            prompt_tokens=c["prompt_tokens"],
+            generated_tokens=c["generated_tokens"],
+            evictions=c["evictions"], nan_steps=c["nan_steps"],
+            failed=c["failed"], step_retries=c["step_retries"],
+            recalibrations=c["recalibrations"],
+            last_drift_check=c["last_drift_check"], wall_s=c["wall_s"],
+            util_samples=list(c["util_samples"]),
+            drift_events=list(c["drift_events"]),
+        )
+
+    # ------------------------------------------------------------------
+    def report(self) -> EngineReport:
+        """The report for the current (finished, preempted, or in-flight)
+        run state."""
+        st = self._st
+        if st is None:
+            raise RuntimeError("no run state to report")
+        fc = self._fault
+        records, requests = st.records, st.requests
         tot_ops = sum(r.analog_ops for r in records.values())
         tot_e = sum(r.analog_energy_j for r in records.values())
         return EngineReport(
             requests=[records[r.rid].summary() for r in requests],
-            steps=steps,
-            prefill_steps=prefill_steps,
-            decode_steps=decode_steps,
-            idle_steps=idle_steps,
-            wall_s=wall,
-            prompt_tokens=prompt_tokens,
-            generated_tokens=generated_tokens,
-            utilization=(float(np.mean(util_samples)) if util_samples else 0.0),
-            evictions=evictions,
-            nan_logit_steps=nan_steps,
-            page_high_water=pool.high_water,
+            steps=st.steps,
+            prefill_steps=st.prefill_steps,
+            decode_steps=st.decode_steps,
+            idle_steps=st.idle_steps,
+            wall_s=st.wall_s,
+            prompt_tokens=st.prompt_tokens,
+            generated_tokens=st.generated_tokens,
+            utilization=(float(np.mean(st.util_samples))
+                         if st.util_samples else 0.0),
+            evictions=st.evictions,
+            nan_logit_steps=st.nan_steps,
+            page_high_water=st.pool.high_water,
             page_bytes=self.page_bytes,
-            kv_high_water_bytes=(pool.high_water + 1) * self.page_bytes,
+            kv_high_water_bytes=(st.pool.high_water + 1) * self.page_bytes,
             analog_ops=tot_ops,
             analog_energy_j=tot_e,
             fj_per_op=(tot_e / tot_ops * 1e15) if tot_ops else 0.0,
-            tokens_per_joule=(generated_tokens / tot_e) if tot_e else 0.0,
+            tokens_per_joule=(st.generated_tokens / tot_e) if tot_e else 0.0,
             compiled_steps=self.compiled_steps(),
+            preempted=st.preempted,
+            snapshot_path=st.snapshot_path,
+            failed=st.failed,
+            step_retries=st.step_retries,
+            stragglers=(fc.monitor.stragglers
+                        if fc is not None and fc.monitor is not None else 0),
+            straggler_ewma_s=(fc.monitor.ewma
+                              if fc is not None and fc.monitor is not None
+                              else 0.0),
+            heartbeats=(fc.heartbeat.beats
+                        if fc is not None and fc.heartbeat is not None
+                        else 0),
+            recalibrations=st.recalibrations,
+            drift_events=list(st.drift_events),
         )

@@ -2,12 +2,20 @@
 
 Designed for the 1000+-node regime where *something is always failing*:
 
-  * PreemptionGuard — SIGTERM/SIGINT handler: sets a flag the train loop polls
-    so it checkpoints and exits cleanly inside the eviction grace window.
-  * retry_step      — bounded retry with backoff for transient executor
-    failures (on real fleets: ICI timeouts, preempted remote workers).  A
-    persistent failure re-raises so the scheduler can reschedule the job;
-    restart then auto-resumes from the latest valid checkpoint.
+  * PreemptionGuard — SIGTERM/SIGINT handler: sets a flag the serve/train
+    loop polls so it snapshots and exits cleanly inside the eviction grace
+    window (``runtime.engine`` snapshots its full in-flight state and the
+    resumed engine replays the ragged trace bit-identically).
+  * Preempted       — the control-flow exception a polled loop raises to
+    unwind to its snapshot-and-exit path.  Deliberately NOT a RuntimeError:
+    ``retry_step`` must never swallow a preemption as a transient failure.
+  * retry_step      — bounded retry with capped, jittered exponential
+    backoff for transient executor failures (on real fleets: ICI timeouts,
+    preempted remote workers).  A persistent failure re-raises with the
+    attempt count attached; restart then auto-resumes from the latest valid
+    checkpoint.  An optional ``guard`` is polled between attempts so a
+    preempted process snapshots instead of burning its grace window on
+    backoff sleeps.
   * StragglerMonitor — per-step wall-time EWMA + threshold: logs and counts
     outlier steps (on multi-host fleets this feeds the decision to evict a
     slow host and re-shard — here it is the single-process analogue).
@@ -17,10 +25,17 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import random
 import signal
 import time
 from pathlib import Path
 from typing import Callable, Optional
+
+
+class Preempted(Exception):
+    """Raised by a loop that observed ``PreemptionGuard.requested`` — unwind
+    to the snapshot-and-exit path.  Not a RuntimeError on purpose:
+    ``retry_step`` retries RuntimeErrors and must let this propagate."""
 
 
 class PreemptionGuard:
@@ -46,28 +61,66 @@ class PreemptionGuard:
     def uninstall(self):
         for sig, prev in getattr(self, "_prev", {}).items():
             signal.signal(sig, prev)
+        self._prev = {}
         self._installed = False
 
 
 def retry_step(fn: Callable, *args, retries: int = 2, backoff_s: float = 1.0,
-               on_retry: Optional[Callable[[int, Exception], None]] = None):
-    """Run fn(*args); retry transient failures with exponential backoff."""
+               backoff_cap_s: float = 30.0, jitter: float = 0.1,
+               on_retry: Optional[Callable[[int, Exception], None]] = None,
+               guard: Optional[PreemptionGuard] = None,
+               sleep: Callable[[float], None] = time.sleep,
+               rng: Optional[random.Random] = None):
+    """Run fn(*args); retry transient failures with exponential backoff.
+
+    The backoff doubles per attempt, is capped at ``backoff_cap_s`` (an
+    uncapped 2^k sleep outlives any eviction grace window), and carries
+    ``jitter`` (uniform +/- fraction) so a fleet of retriers doesn't
+    thundering-herd the recovered resource.  On exhaustion the final
+    exception re-raises with ``retry_attempts`` set (and a note on 3.11+)
+    so the postmortem knows how many tries burned.
+
+    ``guard`` is polled before every attempt and between backoff sleep
+    slices: a preemption raises :class:`Preempted` immediately instead of
+    finishing the backoff — the caller's snapshot path gets the whole
+    remaining grace window.  ``sleep``/``rng`` are injectable for tests.
+    """
+    rng = rng if rng is not None else random.Random()
     attempt = 0
     while True:
+        if guard is not None and guard.requested:
+            raise Preempted(f"preempted before retry attempt {attempt}")
         try:
             return fn(*args)
         except RuntimeError as e:   # JaxRuntimeError subclasses RuntimeError
             attempt += 1
             if attempt > retries:
+                e.retry_attempts = attempt
+                if hasattr(e, "add_note"):      # py3.11+
+                    e.add_note(f"retry_step: failed on attempt {attempt} "
+                               f"of {retries + 1}")
                 raise
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(backoff_s * (2 ** (attempt - 1)))
+            delay = min(backoff_s * (2 ** (attempt - 1)), backoff_cap_s)
+            if jitter:
+                delay *= 1.0 + jitter * (2.0 * rng.random() - 1.0)
+            # Sleep in slices so a preemption arriving mid-backoff is seen
+            # within ~100ms, not after the full (possibly capped-30s) delay.
+            deadline = time.monotonic() + delay
+            while True:
+                if guard is not None and guard.requested:
+                    raise Preempted(
+                        f"preempted during retry backoff (attempt {attempt})")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                sleep(min(remaining, 0.1))
 
 
 @dataclasses.dataclass
 class StragglerMonitor:
-    threshold: float = 2.0          # x median
+    threshold: float = 2.0          # x EWMA of recent step wall-times
     ewma_alpha: float = 0.1
     ewma: float = 0.0
     n: int = 0
@@ -75,7 +128,10 @@ class StragglerMonitor:
     log: list = dataclasses.field(default_factory=list)
 
     def record(self, step: int, dt: float) -> bool:
-        """Returns True if this step was a straggler."""
+        """Returns True if this step was a straggler.
+
+        Warm-up: the first 6 steps only feed the EWMA (compile/cold-cache
+        steps would otherwise flag everything after them)."""
         is_straggler = self.n > 5 and dt > self.threshold * self.ewma
         self.ewma = dt if self.n == 0 else \
             (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * dt
@@ -91,10 +147,15 @@ class Heartbeat:
         self.path = Path(path)
         self.every_s = every_s
         self._last = 0.0
+        self.beats = 0
 
-    def beat(self, step: int):
+    def beat(self, step: int) -> bool:
+        """Write the liveness marker if due; returns True when written."""
         now = time.time()
-        if now - self._last >= self.every_s:
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            self.path.write_text(json.dumps({"step": step, "t": now}))
-            self._last = now
+        if now - self._last < self.every_s:
+            return False
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.path.write_text(json.dumps({"step": step, "t": now}))
+        self._last = now
+        self.beats += 1
+        return True

@@ -1,0 +1,169 @@
+"""Deterministic fault injection for the serving engine.
+
+The tests' hard contracts — an engine killed at *any* step resumes its
+ragged trace bit-identically, a persistently failing step degrades to one
+``failed`` request with neighbors bit-equal, drifted device currents trigger
+an online recalibration without a third compiled program — all need faults
+that fire at an exact engine step, the same way every run.  This module is
+that harness: declarative events scheduled by step number, consumed by
+``runtime.engine.Engine`` through ``FaultConfig.injector``.
+
+Events:
+
+  * :class:`FailStep` — raise :class:`FaultError` when the engine is about
+    to run compiled step kind ``k`` at engine step ``step``, ``times`` total
+    raises.  ``times <= retries`` models a transient executor failure
+    (``fault.retry_step`` recovers it, streams unchanged); ``times`` beyond
+    the retry budget models a persistent one (the engine finishes the
+    culprit request as ``failed`` and keeps serving).  The raise happens
+    *before* the compiled call is invoked, so donated cache buffers are
+    never consumed by a failed attempt.
+  * :class:`PreemptAt` — flip the run's ``PreemptionGuard`` at step
+    ``step``: the engine snapshots and exits exactly as if SIGTERM landed
+    between those steps.
+  * :class:`DriftAt` — perturb the engine's weight matrices in place via
+    ``core.nonideal.perturb_currents`` at step ``step`` (the FG-cell tuning
+    drift of section 4.1): max|z| at every TD-VMM site moves, and the
+    drift probe's clip rates against the pinned windows go stale.
+
+All randomness is keyed from explicit seeds; nothing here reads clocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constants import TDVMMSpec
+from repro.core.nonideal import NonIdealityConfig, perturb_currents
+
+__all__ = ["FaultError", "FailStep", "PreemptAt", "DriftAt",
+           "FaultInjector", "drift_params"]
+
+
+class FaultError(RuntimeError):
+    """Injected step failure.  A RuntimeError on purpose: that is what
+    ``fault.retry_step`` treats as transient (JAX's runtime errors subclass
+    it), so injected faults exercise the real retry path.  ``rid`` names the
+    request whose work the failing step was doing (None = unattributed; the
+    engine then blames the oldest runnable slot)."""
+
+    def __init__(self, message: str, rid: Optional[int] = None):
+        super().__init__(message)
+        self.rid = rid
+
+
+@dataclasses.dataclass
+class FailStep:
+    """Raise on compiled-step kind ``kind`` at engine step ``step``,
+    ``times`` total raises (consumed across retry attempts)."""
+    step: int
+    kind: str = "decode"            # "prefill" | "decode" | "any"
+    times: int = 1
+    rid: Optional[int] = None       # blame this request (None = oldest)
+    message: str = "injected step failure"
+    fired: int = 0                  # raises consumed so far
+
+    def matches(self, kind: str, step: int) -> bool:
+        return (self.fired < self.times and step == self.step
+                and self.kind in (kind, "any"))
+
+
+@dataclasses.dataclass
+class PreemptAt:
+    """Request preemption once the engine reaches ``step`` (between steps,
+    like a SIGTERM inside the eviction grace window)."""
+    step: int
+    fired: bool = False
+
+
+@dataclasses.dataclass
+class DriftAt:
+    """Perturb the engine's weights at ``step`` — deterministic device
+    drift.  ``sigma`` scales the lognormal FG tuning error; repeats > 1
+    apply the perturbation that many times (compounding drift)."""
+    step: int
+    sigma: float = 0.05
+    seed: int = 0
+    repeats: int = 1
+    fired: bool = False
+
+
+class FaultInjector:
+    """Deterministic event schedule consumed by ``Engine._drive``.
+
+    ``on_tick(engine, step)`` runs between steps (preempt/drift events);
+    ``check(kind, step)`` runs inside the retry wrapper immediately before
+    each compiled-step invocation (failure events)."""
+
+    def __init__(self, events):
+        self.events = list(events)
+
+    def on_tick(self, engine, step: int) -> None:
+        for ev in self.events:
+            if isinstance(ev, PreemptAt) and not ev.fired and step >= ev.step:
+                ev.fired = True
+                engine.request_preemption()
+            elif isinstance(ev, DriftAt) and not ev.fired and step >= ev.step:
+                ev.fired = True
+                spec = _model_spec(engine.cfg)
+                engine.params = drift_params(
+                    engine.params, jax.random.PRNGKey(ev.seed), spec,
+                    NonIdealityConfig(dibl=False, weight_noise=True,
+                                      sigma_tune=ev.sigma),
+                    repeats=ev.repeats)
+
+    def check(self, kind: str, step: int) -> None:
+        for ev in self.events:
+            if isinstance(ev, FailStep) and ev.matches(kind, step):
+                ev.fired += 1
+                raise FaultError(
+                    f"{ev.message} (kind={kind}, step={step}, "
+                    f"raise {ev.fired}/{ev.times})", rid=ev.rid)
+
+    def report(self) -> list[dict]:
+        out = []
+        for ev in self.events:
+            d = dataclasses.asdict(ev)
+            d["event"] = type(ev).__name__
+            out.append(d)
+        return out
+
+
+def _model_spec(cfg) -> TDVMMSpec:
+    """The TDVMMSpec drift perturbations are priced against: any enabled
+    site's spec (they share the paper's operating point by default)."""
+    for _, sc in cfg.resolved_tdvmm_plan.sites:
+        if sc.enabled:
+            return sc.spec
+    return TDVMMSpec()
+
+
+def drift_params(params, key: jax.Array, spec: TDVMMSpec,
+                 nicfg: NonIdealityConfig, subtree: str = "blocks",
+                 repeats: int = 1):
+    """Apply device-current drift to every weight matrix under
+    ``params[subtree]``.
+
+    Each float leaf with ndim >= 2 (the projection matrices the TD-VMM
+    tiles hold as programmed currents) is perturbed by
+    ``nonideal.perturb_currents`` under a per-leaf key folded from the leaf
+    index — deterministic, order-stable, and independent across leaves.
+    Returns a new params pytree (input untouched)."""
+    target = params[subtree]
+    leaves, treedef = jax.tree_util.tree_flatten(target)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if (hasattr(leaf, "ndim") and leaf.ndim >= 2
+                and jnp.issubdtype(leaf.dtype, jnp.floating)):
+            k = jax.random.fold_in(key, i)
+            for r in range(repeats):
+                leaf = perturb_currents(
+                    leaf, jax.random.fold_in(k, r), spec, nicfg
+                ).astype(leaf.dtype)
+        out.append(leaf)
+    new = dict(params)
+    new[subtree] = jax.tree_util.tree_unflatten(treedef, out)
+    return new

@@ -1,0 +1,407 @@
+"""Fault tolerance: preemption-safe snapshot/restore, step retry, fault
+injection, and drift-aware online recalibration.
+
+Hard contracts under test:
+
+  * an engine killed at ANY step of a ragged trace and restored from its
+    snapshot resumes the remaining trace **bit-identically** to the
+    uninterrupted run (streams, finish reasons, finish steps);
+  * a transiently failing compiled step is retried invisibly (streams
+    unchanged); a persistently failing one degrades to exactly one
+    ``failed`` request with every neighbor's stream bit-equal;
+  * injected device-current drift is detected by the eager probe and fixed
+    by hot-swapping the pinned windows between steps — ``compiled_steps``
+    stays exactly 2 (runtime-operand windows, no recompilation).
+"""
+import signal
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.configs import TDVMMPlan, get_config, smoke, tdvmm_rule
+from repro.models import model
+from repro.runtime import fault
+from repro.runtime import faultinject as fi
+from repro.runtime.engine import (DriftConfig, Engine, EngineConfig,
+                                  FaultConfig, Request)
+
+
+# ==========================================================================
+# fault.py unit tests (no model)
+# ==========================================================================
+def test_guard_install_uninstall_restores_handlers():
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    g = fault.PreemptionGuard().install()
+    assert signal.getsignal(signal.SIGTERM) == g._handler
+    g._handler(signal.SIGTERM, None)
+    assert g.requested
+    g.uninstall()
+    assert signal.getsignal(signal.SIGTERM) == prev_term
+    assert signal.getsignal(signal.SIGINT) == prev_int
+    assert not g._installed and g._prev == {}
+    # re-install after uninstall works (idempotent cycle)
+    g2 = fault.PreemptionGuard().install().install()
+    g2.uninstall()
+    assert signal.getsignal(signal.SIGTERM) == prev_term
+
+
+def test_retry_exhaustion_reraises_with_attempt_count():
+    calls = []
+
+    def boom():
+        calls.append(1)
+        raise RuntimeError("persistent")
+
+    with pytest.raises(RuntimeError, match="persistent") as ei:
+        fault.retry_step(boom, retries=2, backoff_s=0.0, jitter=0.0)
+    assert len(calls) == 3                      # 1 try + 2 retries
+    assert ei.value.retry_attempts == 3
+
+
+def test_retry_does_not_swallow_non_runtime_errors():
+    def boom():
+        raise ValueError("not transient")
+
+    with pytest.raises(ValueError):
+        fault.retry_step(boom, retries=5, backoff_s=0.0)
+
+
+def test_retry_backoff_doubles_caps_and_jitters(monkeypatch):
+    # fake clock: injected sleep advances it, so the <=100ms slice loop in
+    # retry_step terminates deterministically without real waiting
+    clock = {"t": 0.0}
+    monkeypatch.setattr(fault.time, "monotonic", lambda: clock["t"])
+    events = []
+
+    def fake_sleep(s):
+        events.append(s)
+        clock["t"] += s
+
+    def boom():
+        raise RuntimeError("x")
+
+    with pytest.raises(RuntimeError):
+        fault.retry_step(
+            boom, retries=6, backoff_s=1.0, backoff_cap_s=4.0, jitter=0.25,
+            on_retry=lambda a, e: events.append(("attempt", a)),
+            sleep=fake_sleep,
+            rng=np.random.default_rng(0))  # has .random() like random.Random
+    # slices arrive in <=0.1s pieces between "attempt" markers; reassemble
+    # each attempt's total backoff
+    attempts, totals, cur = [], [], None
+    for ev in events:
+        if isinstance(ev, tuple):
+            if cur is not None:
+                totals.append(cur)
+            attempts.append(ev[1])
+            cur = 0.0
+        else:
+            assert ev <= 0.1 + 1e-9
+            cur += ev
+    totals.append(cur)
+    assert attempts == [1, 2, 3, 4, 5, 6]
+    assert len(totals) == 6
+    for i, t in enumerate(totals):
+        nominal = min(1.0 * 2 ** i, 4.0)        # doubling, capped at 4s
+        assert nominal * 0.75 - 1e-6 <= t <= nominal * 1.25 + 1e-6, (i, t)
+    assert max(totals) <= 4.0 * 1.25 + 1e-6     # cap held under jitter
+
+
+def test_retry_polls_guard_and_raises_preempted_fast():
+    g = fault.PreemptionGuard()
+
+    def boom():
+        raise RuntimeError("x")
+
+    def preempt_soon():
+        time.sleep(0.05)
+        g.requested = True
+
+    t = threading.Thread(target=preempt_soon)
+    t0 = time.time()
+    t.start()
+    # 30s nominal backoff: without slice-polling this would sleep it out
+    with pytest.raises(fault.Preempted):
+        fault.retry_step(boom, retries=3, backoff_s=30.0, jitter=0.0,
+                         guard=g)
+    t.join()
+    assert time.time() - t0 < 5.0               # seen within ~100ms slices
+    # already-requested guard preempts before the first attempt
+    calls = []
+    with pytest.raises(fault.Preempted):
+        fault.retry_step(lambda: calls.append(1), guard=g)
+    assert calls == []
+
+
+def test_preempted_is_not_a_runtime_error():
+    # retry_step retries RuntimeErrors; a preemption must never be one.
+    assert not issubclass(fault.Preempted, RuntimeError)
+
+
+def test_straggler_monitor_warmup_and_ewma():
+    m = fault.StragglerMonitor(threshold=2.0, ewma_alpha=0.5)
+    # warm-up: a huge step among the first 6 records is NOT flagged
+    for dt in (0.1, 0.1, 5.0, 0.1, 0.1, 0.1):
+        assert not m.record(0, dt)
+    assert m.stragglers == 0 and m.n == 6
+    assert m.ewma > 0.0                          # exposed for the report
+    ewma_before = m.ewma
+    assert m.record(7, 100 * ewma_before)        # post-warm-up outlier flags
+    assert m.stragglers == 1
+    assert m.log[0]["step"] == 7
+    assert not m.record(8, ewma_before)          # normal step doesn't
+
+
+def test_heartbeat_throttles(tmp_path):
+    hb = fault.Heartbeat(tmp_path / "hb.json", every_s=3600.0)
+    assert hb.beat(1) is True                    # first beat writes
+    assert hb.beat(2) is False                   # throttled
+    assert hb.beats == 1
+    assert (tmp_path / "hb.json").exists()
+    hb2 = fault.Heartbeat(tmp_path / "hb.json", every_s=0.0)
+    assert hb2.beat(3) and hb2.beat(4)           # zero period never throttles
+    assert hb2.beats == 2
+
+
+# ==========================================================================
+# Engine-level fault tolerance (shared tiny model + trace)
+# ==========================================================================
+def _cfg():
+    return smoke(get_config("qwen1.5-0.5b")).replace(tdvmm_plan=TDVMMPlan(
+        rules=(tdvmm_rule("ffn.*", enabled=True, backend="jnp"),)))
+
+
+ECFG = EngineConfig(slots=3, page_size=4, num_pages=32, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _cfg()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"inputs": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)}
+    calib = model.calibrate(params, batch, cfg, max_len=48)
+    return cfg, params, calib, batch
+
+
+def _trace(vocab, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs, arrival = [], 0
+    for rid in range(n):
+        reqs.append(Request(
+            rid=rid,
+            prompt=tuple(int(t) for t in rng.integers(
+                0, vocab, rng.integers(3, 11))),
+            max_new_tokens=int(rng.integers(2, 6)),
+            arrival_step=arrival))
+        arrival += int(rng.integers(0, 2))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def baseline(served):
+    """Uninterrupted reference run + the trace it served."""
+    cfg, params, calib, _ = served
+    reqs = _trace(cfg.vocab_size)
+    rep = Engine(cfg, params, ECFG, calib=calib).run(reqs)
+    assert rep.compiled_steps == 2
+    return reqs, rep
+
+
+def _same_streams(a, b):
+    for ra, rb in zip(a.requests, b.requests):
+        assert ra["tokens"] == rb["tokens"], (ra, rb)
+        assert ra["finish_reason"] == rb["finish_reason"], (ra, rb)
+        assert ra["finished_step"] == rb["finished_step"], (ra, rb)
+    assert a.steps == b.steps
+
+
+# --------------------------------------------------------------------------
+# THE tentpole property: kill at EVERY step k, restore, resume bit-identical
+# --------------------------------------------------------------------------
+def test_kill_at_every_step_resumes_bit_identically(served, baseline,
+                                                    tmp_path):
+    cfg, params, calib, _ = served
+    reqs, base = baseline
+    # Two engines reused across every k: each holds its own jit caches, so
+    # the loop pays compilation once, and the victim engine also proves that
+    # run() state fully re-initializes after a preempted run.
+    victim = Engine(cfg, params, ECFG, calib=calib)
+    survivor = Engine(cfg, params, ECFG, calib=calib)
+    for k in range(base.steps):
+        rep = victim.run(reqs, FaultConfig(
+            injector=fi.FaultInjector([fi.PreemptAt(k)]),
+            snapshot_dir=tmp_path, snapshot_keep=1))
+        assert rep.preempted and rep.steps == k, (k, rep.steps)
+        assert rep.snapshot_path is not None
+        flat, step = checkpoint.load_engine_snapshot(tmp_path, step=k)
+        assert step == k
+        survivor.restore(flat)
+        resumed = survivor.resume()
+        assert not resumed.preempted
+        _same_streams(base, resumed)
+        assert survivor.compiled_steps() <= 2
+    # the victim engine still serves clean traces afterwards
+    _same_streams(base, victim.run(reqs))
+
+
+def test_in_memory_snapshot_round_trip(served, baseline):
+    cfg, params, calib, _ = served
+    reqs, base = baseline
+    e1 = Engine(cfg, params, ECFG, calib=calib)
+    r1 = e1.run(reqs, FaultConfig(
+        injector=fi.FaultInjector([fi.PreemptAt(2)])))
+    assert r1.preempted
+    e2 = Engine(cfg, params, ECFG, calib=calib)
+    e2.restore(e1.snapshot())
+    _same_streams(base, e2.resume())
+
+
+def test_snapshot_ecfg_mismatch_raises(served, baseline):
+    cfg, params, calib, _ = served
+    reqs, _ = baseline
+    e1 = Engine(cfg, params, ECFG, calib=calib)
+    e1.run(reqs, FaultConfig(injector=fi.FaultInjector([fi.PreemptAt(2)])))
+    snap = e1.snapshot()
+    other = Engine(cfg, params,
+                   EngineConfig(slots=2, page_size=4, num_pages=32, chunk=4),
+                   calib=calib)
+    with pytest.raises(ValueError, match="EngineConfig"):
+        other.restore(snap)
+
+
+# --------------------------------------------------------------------------
+# Injected step failures through the retry wrapper
+# --------------------------------------------------------------------------
+def test_transient_failure_retried_streams_unchanged(served, baseline):
+    cfg, params, calib, _ = served
+    reqs, base = baseline
+    rep = Engine(cfg, params, ECFG, calib=calib).run(reqs, FaultConfig(
+        injector=fi.FaultInjector(
+            [fi.FailStep(step=2, kind="any", times=1)]),
+        retries=2, backoff_s=0.001))
+    assert rep.step_retries == 1
+    assert rep.failed == 0
+    _same_streams(base, rep)
+
+
+def test_persistent_failure_fails_one_request_neighbors_bit_equal(
+        served, baseline):
+    cfg, params, calib, _ = served
+    reqs, base = baseline
+    # times == retries + 1: the step's whole retry budget burns once — a
+    # persistent failure.  The engine blames one request and keeps serving.
+    fail_step = base.steps - 2
+    rep = Engine(cfg, params, ECFG, calib=calib).run(reqs, FaultConfig(
+        injector=fi.FaultInjector(
+            [fi.FailStep(step=fail_step, kind="any", times=2)]),
+        retries=1, backoff_s=0.001))
+    failed = [r for r in rep.requests if r["finish_reason"] == "failed"]
+    assert len(failed) == 1 and rep.failed == 1
+    assert rep.step_retries == 1
+    base_by = {r["rid"]: r for r in base.requests}
+    for r in rep.requests:
+        if r["finish_reason"] != "failed":
+            assert r["tokens"] == base_by[r["rid"]]["tokens"], r["rid"]
+            assert r["finish_reason"] == base_by[r["rid"]]["finish_reason"]
+    # the failed request's already-streamed prefix is a baseline prefix
+    fr = failed[0]
+    assert fr["tokens"] == base_by[fr["rid"]]["tokens"][:len(fr["tokens"])]
+
+
+def test_rid_attributed_failure_blames_that_request(served, baseline):
+    cfg, params, calib, _ = served
+    reqs, base = baseline
+    rep = Engine(cfg, params, ECFG, calib=calib).run(reqs, FaultConfig(
+        injector=fi.FaultInjector(
+            [fi.FailStep(step=base.steps - 2, kind="decode", times=2,
+                         rid=reqs[1].rid)]),
+        retries=1, backoff_s=0.001))
+    failed = [r for r in rep.requests if r["finish_reason"] == "failed"]
+    assert [r["rid"] for r in failed] == [reqs[1].rid]
+
+
+# --------------------------------------------------------------------------
+# Drift detection + online recalibration (compiled_steps stays 2)
+# --------------------------------------------------------------------------
+def test_drift_triggers_recalibration_without_recompiling(served):
+    cfg, params, calib, batch = served
+    reqs = _trace(cfg.vocab_size, n=6, seed=5)
+    eng = Engine(cfg, params, ECFG, calib=calib)
+    rep = eng.run(reqs, FaultConfig(
+        injector=fi.FaultInjector(
+            [fi.DriftAt(step=4, sigma=0.5, repeats=3)]),
+        drift=DriftConfig(probe_batch=batch, check_every=4,
+                          clip_threshold=0.005, window_tol=0.05)))
+    assert rep.recalibrations >= 1, rep.drift_events
+    assert rep.drift_events[0]["recalibrated"]
+    assert rep.drift_events[0]["max_log_ratio"] > 0.05 or \
+        rep.drift_events[0]["max_clip_rate"] > 0.005
+    assert rep.compiled_steps == 2              # hot-swap, no third program
+    # the engine's pinned windows really moved
+    moved = eng.pinned_calibration().drift_ratios(calib)
+    assert any(abs(np.log(max(r, 1e-12))) > 1e-6 for r in moved.values())
+
+
+def test_no_drift_no_false_positive(served):
+    cfg, params, calib, batch = served
+    reqs = _trace(cfg.vocab_size, n=6, seed=5)
+    rep = Engine(cfg, params, ECFG, calib=calib).run(reqs, FaultConfig(
+        drift=DriftConfig(probe_batch=batch, check_every=4,
+                          clip_threshold=0.005, window_tol=0.05)))
+    assert rep.recalibrations == 0 and rep.drift_events == []
+    assert rep.compiled_steps == 2
+
+
+def test_snapshot_carries_recalibrated_windows(served, baseline):
+    """Preempt AFTER a drift recalibration: the snapshot must carry the
+    hot-swapped windows (restoring the stale originals would break
+    bit-identity of the remaining trace)."""
+    cfg, params, calib, batch = served
+    reqs = _trace(cfg.vocab_size, n=6, seed=5)
+    drifted = fi.drift_params(
+        params, jax.random.PRNGKey(0), fi._model_spec(cfg),
+        __import__("repro.core.nonideal", fromlist=["NonIdealityConfig"])
+        .NonIdealityConfig(dibl=False, weight_noise=True, sigma_tune=0.5),
+        repeats=3)
+    # reference: drifted params served end-to-end with fresh calibration
+    fresh = model.calibrate(drifted, batch, cfg, max_len=48)
+    base = Engine(cfg, drifted, ECFG, calib=fresh).run(reqs)
+    # victim: same drifted params + fresh calib, preempted mid-trace
+    e1 = Engine(cfg, drifted, ECFG, calib=fresh)
+    e1.run(reqs, FaultConfig(
+        injector=fi.FaultInjector([fi.PreemptAt(base.steps // 2)])))
+    snap = e1.snapshot()
+    # survivor constructed with the STALE calib; restore swaps in the
+    # snapshot's (fresh) windows
+    e2 = Engine(cfg, drifted, ECFG, calib=calib)
+    e2.restore(snap)
+    got = e2.pinned_calibration().as_arrays()
+    want = fresh.as_arrays()
+    for site in want:
+        np.testing.assert_array_equal(np.asarray(got[site]),
+                                      np.asarray(want[site]))
+    _same_streams(base, e2.resume())
+
+
+# --------------------------------------------------------------------------
+# Fault telemetry reaches the report
+# --------------------------------------------------------------------------
+def test_monitor_and_heartbeat_feed_report(served, baseline, tmp_path):
+    cfg, params, calib, _ = served
+    reqs, base = baseline
+    hb = fault.Heartbeat(tmp_path / "hb.json", every_s=0.0)
+    mon = fault.StragglerMonitor()
+    rep = Engine(cfg, params, ECFG, calib=calib).run(
+        reqs, FaultConfig(heartbeat=hb, monitor=mon))
+    _same_streams(base, rep)
+    # every tick beat (0s period); ticks >= steps (the final drained tick
+    # and evict-only re-plan ticks don't advance the step counter)
+    assert rep.heartbeats >= rep.steps
+    assert rep.straggler_ewma_s > 0.0
+    assert rep.stragglers == mon.stragglers
