@@ -22,17 +22,33 @@ Invariants (asserted by ``check_invariants`` in CI and ``benchmarks/run.py``):
   * an engine killed mid-trace and restored from its snapshot resumes the
     remaining trace bit-identically to the uninterrupted baseline;
   * injected device-current drift triggers >= 1 online recalibration with
-    ``compiled_steps`` still exactly 2 (hot-swapped runtime windows).
+    ``compiled_steps`` still exactly 2 (hot-swapped runtime windows);
+  * SLA scheduling (``serving_sla``): every admitted feasible deadline is
+    hit, an infeasible request is rejected at admission with zero compute,
+    an over-budget request degrades gracefully with neighbors bit-equal to
+    their solo runs;
+  * telemetry (``serving_telemetry_spike``): an injected straggler step
+    raises exactly one rolling-median spike alert at the injected step,
+    with zero false positives on the clean warm trace (metrics stream to
+    ``BENCH_serving_metrics.jsonl``).
+
+Wall timings route through ``benchmarks.common`` (warmup + median of
+repeats, spread recorded per row) so serving numbers carry the same
+trust annotations as the kernel suite's.
 """
 from __future__ import annotations
+
+from pathlib import Path
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit, reset_rows, save_json
+from benchmarks.common import Timing, emit, reset_rows, save_json, time_host
 from repro.configs import TDVMMPlan, get_config, smoke, tdvmm_rule
 from repro.models import model
 from repro.runtime.engine import Engine, EngineConfig, Request, static_baseline
+
+METRICS_JSONL = "BENCH_serving_metrics.jsonl"
 
 ARCH = "qwen1.5-0.5b"
 
@@ -100,8 +116,11 @@ def run(n_requests: int = 10):
             jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)}
         calib = model.calibrate(params, calib_batch, cfg, max_len=32)
         plan_ctx[name] = (cfg, calib, calib_batch)
+        # One engine reused across warmup + repeats: run() re-initializes
+        # all serving state, the instance keeps its jit caches, so the
+        # median is post-compile wall time (PR 6 timing hygiene).
         engine = Engine(cfg, params, ecfg, calib=calib)
-        rep = engine.run(trace)
+        rep, wall = time_host(lambda: engine.run(trace))
         reports[name] = rep
 
         # bit-identity: the first two requests replayed alone (B=1, same
@@ -119,8 +138,12 @@ def run(n_requests: int = 10):
         sis = [r["steps_in_system"] for r in rep.requests
                if r["finished_step"] >= 0]
         tokens_proc = rep.prompt_tokens + rep.generated_tokens
+        # us_per_call = median post-warmup wall time PER ENGINE STEP, with
+        # the repeat count and (per-step) spread riding on the Timing.
+        steps = max(rep.steps, 1)
         emit(f"serving_engine_{name}",
-             rep.wall_s * 1e6 / max(rep.steps, 1),
+             Timing(float(wall) / steps, wall.repeats,
+                    wall.spread_us / steps),
              f"steps={rep.steps}|util={rep.utilization:.2f}"
              f"|fJ_per_op={rep.fj_per_op:.2f}",
              data={
@@ -131,7 +154,8 @@ def run(n_requests: int = 10):
                  "idle_steps": rep.idle_steps,
                  "generated_tokens": rep.generated_tokens,
                  "prompt_tokens": rep.prompt_tokens,
-                 "tok_per_s_wall": rep.generated_tokens / max(rep.wall_s, 1e-9),
+                 "tok_per_s_wall":
+                     rep.generated_tokens / max(float(wall) / 1e6, 1e-9),
                  "utilization": rep.utilization,
                  "evictions": rep.evictions,
                  "nan_logit_steps": rep.nan_logit_steps,
@@ -245,6 +269,110 @@ def run(n_requests: int = 10):
              "nan_logit_steps": r3.nan_logit_steps,
          })
 
+    # --- SLA scheduling: priorities, deadline admission control, joule
+    # budgets (runtime/sla.py priced by core.energy.serving_energy_model).
+    from repro.runtime.sla import SlaConfig, min_steps_to_finish
+
+    sla_cfg = SlaConfig(aging_steps=8)
+    # Every base request: cycled priorities + a generously feasible
+    # deadline (the engine drains the whole trace well inside 2x the
+    # static-batch schedule) -> hit-rate must be exactly 1.0.
+    feasible_deadline = 2 * static["wall_steps"] + 32
+    sla_trace = [Request(r.rid, r.prompt, r.max_new_tokens, r.arrival_step,
+                         priority=r.rid % 3,
+                         deadline_steps=feasible_deadline)
+                 for r in trace]
+    # Deadline-infeasible: even immediate exclusive service needs
+    # min_steps_to_finish steps; deadline 1 can never be met -> rejected
+    # at admission, zero tokens, zero joules.
+    infeasible = Request(900, prompt=trace[0].prompt, max_new_tokens=20,
+                         deadline_steps=1)
+    assert min_steps_to_finish(infeasible, ecfg.chunk) > 2
+    # Joule-budgeted: enough for the prompt + ~2.5 tokens of its 6-token
+    # budget -> admitted (min work fits) but finished over_budget
+    # mid-stream.
+    eng_sla = Engine(cfg_u, params, ecfg, calib=calib_u, sla=sla_cfg)
+    e_tok = eng_sla.energy["energy_per_token_j"]
+    budgeted = Request(901, prompt=trace[1].prompt, max_new_tokens=6,
+                       joule_budget=(len(trace[1].prompt) + 2.5) * e_tok)
+    rep_sla = eng_sla.run(sla_trace + [infeasible, budgeted])
+    by_sla = {r["rid"]: r for r in rep_sla.requests}
+    ref_by = {r["rid"]: r for r in ref.requests}
+    # Request isolation survives SLA reordering: every base request's
+    # stream is bit-equal to the plain-FIFO run's (itself proven
+    # bit-identical to solo replays above).
+    neighbors_ok = all(by_sla[r.rid]["tokens"] == ref_by[r.rid]["tokens"]
+                       for r in trace)
+    rej = by_sla[900]
+    ob = by_sla[901]
+    hit_denom = rep_sla.deadline_hits + rep_sla.deadline_misses
+    hit_rate = rep_sla.deadline_hits / hit_denom if hit_denom else 0.0
+    emit("serving_sla", 0.0,
+         f"deadline_hit_rate={hit_rate:.2f}|rejected={rep_sla.rejected}"
+         f"|over_budget={rep_sla.over_budget}",
+         data={
+             "aging_steps": sla_cfg.aging_steps,
+             "feasible_deadline_steps": feasible_deadline,
+             "deadline_hits": rep_sla.deadline_hits,
+             "deadline_misses": rep_sla.deadline_misses,
+             "deadline_hit_rate": hit_rate,
+             "rejected": rep_sla.rejected,
+             "rejected_zero_compute":
+                 rej["finish_reason"] == "rejected"
+                 and rej["tokens"] == [] and rej["joules_used"] == 0.0,
+             "reject_reason": rej["reject_reason"],
+             "over_budget": rep_sla.over_budget,
+             "over_budget_partial_stream":
+                 ob["finish_reason"] == "over_budget"
+                 and 0 < len(ob["tokens"]) < budgeted.max_new_tokens,
+             "over_budget_joules_used": ob["joules_used"],
+             "over_budget_joule_budget": ob["joule_budget"],
+             "neighbors_bit_equal_solo": neighbors_ok,
+             "compiled_steps": rep_sla.compiled_steps,
+         })
+
+    # --- telemetry: rolling-median/MAD spike detection on step latency.
+    # Warm the engine (jit-compile steps legitimately alert), then prove
+    # the detector is quiet on a clean warm trace and fires EXACTLY once
+    # on an injected straggler step.  All samples stream to the JSONL
+    # artifact.
+    from repro.runtime.telemetry import AlertRule, JsonlEmitter, MetricsSink
+
+    Path(METRICS_JSONL).unlink(missing_ok=True)
+    sink = MetricsSink(
+        rules=[AlertRule("step_latency_s", kind="spike", k=6.0,
+                         min_samples=6, abs_floor=0.05)],
+        emitters=[JsonlEmitter(METRICS_JSONL)])
+    e5 = Engine(cfg_u, params, ecfg, calib=calib_u, sink=sink)
+    e5.run(trace)                         # warm (compile spikes expected)
+    warm_alerts = len(sink.alerts)
+    e5.run(trace)                         # clean warm run
+    clean_fp = len(sink.alerts) - warm_alerts
+    slow_step = max(1, ref.steps // 2)
+    rep5 = e5.run(trace, FaultConfig(
+        injector=fi.FaultInjector([fi.SlowStep(slow_step, sleep_s=0.3)])))
+    injected = sink.alerts[warm_alerts + clean_fp:]
+    for em in sink.emitters:
+        em.close()
+    emit("serving_telemetry_spike", 0.0,
+         f"injected@{slow_step}: {len(injected)} alert(s), "
+         f"clean_false_positives={clean_fp}",
+         data={
+             "slow_step": slow_step,
+             "slow_sleep_s": 0.3,
+             "clean_false_positives": clean_fp,
+             "injected_alerts": len(injected),
+             # the sink observes AFTER the tick lands, so the alert is
+             # stamped at slow_step + 1
+             "alert_at_injected_step":
+                 len(injected) == 1 and injected[0].step == slow_step + 1,
+             "alert_value_s": injected[0].value if injected else 0.0,
+             "alert_limit_s": injected[0].limit if injected else 0.0,
+             "sink_observations": sink.observations,
+             "metrics_jsonl": METRICS_JSONL,
+             "compiled_steps": rep5.compiled_steps,
+         })
+
     save_json("BENCH_serving.json", meta={"suite": "serving"})
 
 
@@ -257,6 +385,8 @@ def check_invariants(doc: dict) -> None:
         assert r["nan_logit_steps"] == 0, r          # evict-before-poison
         assert r["compiled_steps"] == 2, r           # two-compiled-step rule
         assert r["bit_identical_solo"], r            # request isolation
+        assert r.get("timing_repeats", 0) >= 3, r    # median-of-repeats
+        assert "timing_spread_us" in r, r            # spread recorded
     vs = rows["serving_vs_static"]
     assert vs["engine_beats_static_steps"], vs
     assert vs["engine_beats_static_utilization"], vs
@@ -271,6 +401,19 @@ def check_invariants(doc: dict) -> None:
     dr = rows["serving_drift_recalibration"]
     assert dr["recalibrations"] >= 1, dr             # drift caught + fixed
     assert dr["compiled_steps"] == 2, dr             # no third program
+    sla = rows["serving_sla"]
+    assert sla["deadline_hit_rate"] == 1.0, sla      # feasible trace: 100%
+    assert sla["rejected"] >= 1, sla                 # infeasible rejected
+    assert sla["rejected_zero_compute"], sla         # ...before any compute
+    assert sla["over_budget"] >= 1, sla              # budget enforced
+    assert sla["over_budget_partial_stream"], sla    # graceful degradation
+    assert sla["neighbors_bit_equal_solo"], sla      # isolation under SLA
+    assert sla["compiled_steps"] == 2, sla
+    ts = rows["serving_telemetry_spike"]
+    assert ts["clean_false_positives"] == 0, ts      # quiet when warm
+    assert ts["injected_alerts"] == 1, ts            # exactly one spike
+    assert ts["alert_at_injected_step"], ts          # at the right step
+    assert ts["compiled_steps"] == 2, ts
 
 
 if __name__ == "__main__":

@@ -60,6 +60,30 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> Timing:
                   (times[-1] - times[0]) * 1e6)
 
 
+def time_host(fn: Callable, warmup: int = 1, iters: int = 3):
+    """Median-of-``iters`` wall time for a *host-driven* callable (e.g. a
+    full serving-engine run) -> ``(last_result, Timing)`` in microseconds.
+
+    Same hygiene as ``time_call`` — warmup absorbs jit compilation, the
+    median resists scheduler noise, and the min-to-max spread rides on the
+    ``Timing`` — but without the ``block_until_ready`` fence: the callable
+    is expected to synchronize internally (the engine's drive loop pulls
+    every step's logits to the host).  The callable must be idempotent
+    (each invocation re-initializes its own state) so the returned result
+    is the same object every repeat would produce."""
+    out = None
+    for _ in range(warmup):
+        out = fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return out, Timing(times[len(times) // 2] * 1e6, iters,
+                       (times[-1] - times[0]) * 1e6)
+
+
 def emit(name: str, us_per_call: float, derived: str,
          data: Optional[dict] = None):
     """Record (and print) one benchmark row.  ``data`` carries structured

@@ -231,6 +231,44 @@ def serving_energy_model(cfg, tile_n: int = 256) -> dict:
     }
 
 
+def token_cost(energy: dict, n_tokens: int = 1) -> tuple[float, float]:
+    """Incremental (ops, joules) for ``n_tokens`` more tokens through the
+    enabled sites — the per-token pricing quantum the engine accumulates
+    into ``RequestRecord.analog_*`` and the SLA layer charges against
+    ``joule_budget``.  ``energy`` is a ``serving_energy_model`` table."""
+    return (energy["ops_per_token"] * n_tokens,
+            energy["energy_per_token_j"] * n_tokens)
+
+
+def request_energy_bounds(energy: dict, prompt_len: int,
+                          max_new_tokens: int) -> dict[str, float]:
+    """Analog energy/Op bounds for one request under a
+    ``serving_energy_model`` table.
+
+    min_*:  the cheapest possible *served* outcome — the prompt prefilled
+            plus a single generated token (a request cannot stream fewer
+            than one token, so admission rejects any ``joule_budget`` below
+            ``min_energy_j``: it could never deliver anything in budget).
+    full_*: the full token budget (prompt + max_new_tokens), the worst case
+            the deadline/energy planner prices against.
+    """
+    if prompt_len < 1 or max_new_tokens < 1:
+        raise ValueError(f"need prompt_len/max_new_tokens >= 1, got "
+                         f"{prompt_len}/{max_new_tokens}")
+    min_tokens = prompt_len + 1
+    full_tokens = prompt_len + max_new_tokens
+    min_ops, min_e = token_cost(energy, min_tokens)
+    full_ops, full_e = token_cost(energy, full_tokens)
+    return {
+        "min_tokens": float(min_tokens),
+        "full_tokens": float(full_tokens),
+        "min_ops": min_ops,
+        "full_ops": full_ops,
+        "min_energy_j": min_e,
+        "full_energy_j": full_e,
+    }
+
+
 # --------------------------------------------------------------------------
 # Mapping full LM architectures onto TD-VMM tiles (section 4.2's TDM reuse)
 # --------------------------------------------------------------------------

@@ -115,13 +115,59 @@ def serve(cfg, batch: int, prompt_len: int, gen: int, mesh=None, seed: int = 0,
     }
 
 
-def _fault_config(args, probe_batch=None):
+def _parse_alert_spec(spec: str):
+    """One ``--alert-on`` value -> AlertRule.
+
+    Format: ``metric:kind[:key=val[,key=val...]]``, e.g.
+    ``step_latency_s:spike:k=6,abs_floor=0.05`` or
+    ``fj_per_op:regression:baseline=57.1,tol=0.1``."""
+    from repro.runtime.telemetry import AlertRule
+    parts = spec.split(":", 2)
+    if len(parts) < 2:
+        raise SystemExit(f"--alert-on {spec!r}: want metric:kind[:k=v,...]")
+    metric, kind = parts[0], parts[1]
+    kwargs = {}
+    if len(parts) == 3 and parts[2]:
+        for kv in parts[2].split(","):
+            k, _, v = kv.partition("=")
+            if not _:
+                raise SystemExit(f"--alert-on {spec!r}: bad param {kv!r}")
+            kwargs[k] = int(v) if k in ("min_samples",) else float(v)
+    try:
+        return AlertRule(metric=metric, kind=kind, **kwargs)
+    except (TypeError, ValueError) as e:
+        raise SystemExit(f"--alert-on {spec!r}: {e}")
+
+
+def _make_sink(args):
+    """The telemetry MetricsSink for this run (None = telemetry off).
+
+    Enabled by ``--metrics-jsonl`` and/or ``--alert-on``.  With no explicit
+    rules a default step-latency spike detector is installed (median +
+    6*MAD with a 50 ms absolute deadband — jit-compile steps on a cold
+    engine will legitimately alert; warm traffic won't)."""
+    from repro.runtime import telemetry as tele
+    if not (args.metrics_jsonl or args.alert_on):
+        return None
+    rules = [_parse_alert_spec(s) for s in (args.alert_on or [])]
+    if not rules:
+        rules = [tele.AlertRule("step_latency_s", kind="spike", k=6.0,
+                                abs_floor=0.05)]
+    emitters = [tele.StdoutEmitter()]
+    if args.metrics_jsonl:
+        emitters.append(tele.JsonlEmitter(args.metrics_jsonl))
+    return tele.MetricsSink(rules=rules, emitters=emitters)
+
+
+def _fault_config(args, probe_batch=None, sink=None):
     """Assemble the engine FaultConfig from CLI flags (None = no wiring).
 
     A real PreemptionGuard with SIGTERM/SIGINT handlers is installed when a
     snapshot dir is given, so an actual eviction snapshots the in-flight
-    state; ``--preempt-at``/``--fail-at``/``--drift-at`` inject the same
-    faults deterministically at a chosen engine step."""
+    state; ``--preempt-at``/``--fail-at``/``--drift-at``/``--slow-at``
+    inject the same faults deterministically at a chosen engine step.  A
+    telemetry ``sink`` threads into the straggler monitor and heartbeat so
+    their events land in the metric series too."""
     from repro.runtime import fault
     from repro.runtime import faultinject as fi
     from repro.runtime.engine import DriftConfig, FaultConfig
@@ -134,6 +180,8 @@ def _fault_config(args, probe_batch=None):
                                   times=args.fail_times))
     if args.drift_at is not None:
         events.append(fi.DriftAt(args.drift_at, sigma=args.drift_sigma))
+    if args.slow_at is not None:
+        events.append(fi.SlowStep(args.slow_at, sleep_s=args.slow_sleep))
     drift = None
     if args.drift_check_every > 0:
         if probe_batch is None:
@@ -144,7 +192,7 @@ def _fault_config(args, probe_batch=None):
                             check_every=args.drift_check_every,
                             clip_threshold=args.drift_clip,
                             window_tol=args.drift_tol)
-    hb = (fault.Heartbeat(args.heartbeat, args.heartbeat_every)
+    hb = (fault.Heartbeat(args.heartbeat, args.heartbeat_every, sink=sink)
           if args.heartbeat else None)
     if not (events or drift or hb or args.snapshot_dir):
         return None
@@ -154,7 +202,8 @@ def _fault_config(args, probe_batch=None):
     return FaultConfig(
         guard=guard, snapshot_dir=args.snapshot_dir, retries=args.retries,
         injector=fi.FaultInjector(events) if events else None,
-        drift=drift, heartbeat=hb, monitor=fault.StragglerMonitor())
+        drift=drift, heartbeat=hb,
+        monitor=fault.StragglerMonitor(sink=sink))
 
 
 def serve_engine(cfg, args, seed: int = 0):
@@ -177,6 +226,12 @@ def serve_engine(cfg, args, seed: int = 0):
         print("[serve] TD-VMM plan:")
         print(cfg.resolved_tdvmm_plan.describe())
 
+    sla = None
+    if args.sla:
+        from repro.runtime.sla import SlaConfig
+        sla = SlaConfig(aging_steps=args.aging_steps)
+    sink = _make_sink(args)
+
     rng = np.random.default_rng(seed)
     lo, hi = max(1, args.prompt_len // 4), args.prompt_len + 1
     reqs = []
@@ -187,7 +242,11 @@ def serve_engine(cfg, args, seed: int = 0):
             prompt=tuple(int(t) for t in
                          rng.integers(0, cfg.vocab_size, rng.integers(lo, hi))),
             max_new_tokens=int(rng.integers(max(1, args.gen // 4), args.gen + 1)),
-            arrival_step=arrival))
+            arrival_step=arrival,
+            # SLA fields are inert without --sla (defaults replay FIFO)
+            priority=(rid % 3) if args.sla else 0,
+            deadline_steps=args.deadline_steps,
+            joule_budget=args.joule_budget))
         arrival += int(rng.integers(0, 3))
     # Block-table width (= per-slot attention span) sized to the workload,
     # not the pool: every decode step gathers max_pages_per_slot pages per
@@ -198,7 +257,7 @@ def serve_engine(cfg, args, seed: int = 0):
     ecfg = EngineConfig(slots=args.slots, page_size=args.page_size,
                         num_pages=args.num_pages, chunk=args.chunk,
                         max_pages_per_slot=max_pages)
-    fc = _fault_config(args, probe_batch=calib_batch)
+    fc = _fault_config(args, probe_batch=calib_batch, sink=sink)
     if args.resume:
         # Resume a preempted run: the snapshot carries the full in-flight
         # state INCLUDING the pinned (possibly recalibrated) windows — build
@@ -212,13 +271,13 @@ def serve_engine(cfg, args, seed: int = 0):
         calib = CalibrationState(windows={
             k.split("/", 1)[1]: jnp.asarray(v) for k, v in flat.items()
             if k.startswith("windows/")})
-        engine = Engine(cfg, params, ecfg, calib=calib)
+        engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink)
         engine.restore(flat)
         print(f"[serve] resumed from snapshot step {step} "
               f"({args.snapshot_dir})")
         rep = engine.resume(fc)
     else:
-        engine = Engine(cfg, params, ecfg, calib=calib)
+        engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink)
         rep = engine.run(reqs, fc)
     if rep.preempted:
         print(f"[serve] PREEMPTED at step {rep.steps}; snapshot: "
@@ -241,6 +300,19 @@ def serve_engine(cfg, args, seed: int = 0):
         print(f"[serve] analog: {rep.analog_ops:.3g} Ops, "
               f"{rep.fj_per_op:.2f} fJ/Op, "
               f"{rep.tokens_per_joule:.3g} tok/J")
+    if sla is not None:
+        print(f"[serve] sla: {rep.rejected} rejected at admission, "
+              f"{rep.over_budget} over budget, deadlines "
+              f"{rep.deadline_hits} hit / {rep.deadline_misses} missed")
+    if sink is not None:
+        tel = rep.telemetry or {}
+        print(f"[serve] telemetry: {tel.get('observations', 0)} samples, "
+              f"{rep.alerts} alerts "
+              f"({', '.join(f'{k}={v}' for k, v in sorted(tel.get('alerts_by_rule', {}).items())) or 'none'})")
+        if args.metrics_jsonl:
+            print(f"[serve] metrics streamed to {args.metrics_jsonl}")
+        for em in sink.emitters:
+            em.close()
     for r in rep.requests[:4]:
         print(f"[serve]   req {r['rid']}: {r['finish_reason']} "
               f"tokens={r['tokens'][:8]}")
@@ -295,6 +367,33 @@ def main():
                     help="perturb device currents (FG tuning drift) at "
                          "this step")
     ap.add_argument("--drift-sigma", type=float, default=0.5)
+    ap.add_argument("--slow-at", type=int, default=None,
+                    help="inject a one-step straggler (inflated wall time) "
+                         "at this engine step")
+    ap.add_argument("--slow-sleep", type=float, default=0.25,
+                    help="seconds the injected straggler step sleeps")
+    # SLA scheduling & telemetry (engine path)
+    ap.add_argument("--sla", action="store_true",
+                    help="SLA admission/dispatch: priority-with-aging "
+                         "(trace priorities cycle rid %% 3), deadline/joule "
+                         "admission control, over-budget enforcement")
+    ap.add_argument("--aging-steps", type=int, default=16,
+                    help="queue-wait steps per priority level of aging")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request deadline (engine steps after arrival) "
+                         "stamped on every trace request")
+    ap.add_argument("--joule-budget", type=float, default=None,
+                    help="per-request analog energy budget in joules "
+                         "stamped on every trace request")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="stream per-tick metrics + alerts to this JSONL "
+                         "file (enables the telemetry sink)")
+    ap.add_argument("--alert-on", action="append", default=None,
+                    metavar="METRIC:KIND[:K=V,...]",
+                    help="telemetry alert rule, e.g. "
+                         "step_latency_s:spike:k=6,abs_floor=0.05 or "
+                         "fj_per_op:regression:baseline=57.1,tol=0.1 "
+                         "(repeatable; enables the telemetry sink)")
     ap.add_argument("--retries", type=int, default=2,
                     help="retry budget per compiled step")
     ap.add_argument("--heartbeat", default=None,

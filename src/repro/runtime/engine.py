@@ -27,9 +27,10 @@ Request lifecycle::
     pending --admit(slot+pages)--> prefilling --last chunk--> decoding
        |                                                         |
        +--> evicted (prompt exceeds page budget)                 +--> eos
-                                                                 +--> max_tokens
-                                                                 +--> evicted
+       +--> rejected (SLA admission: deadline- or                +--> max_tokens
+            joule-infeasible, before any compute)                +--> evicted
                                                                  +--> failed
+                                                                 +--> over_budget
                                                    (evicted: page budget
                                                     exhausted — finished
                                                     BEFORE the overflowing
@@ -37,7 +38,11 @@ Request lifecycle::
                                                     persistently failing
                                                     compiled step, blamed
                                                     on one request so the
-                                                    engine keeps serving)
+                                                    engine keeps serving;
+                                                    over_budget: joule
+                                                    budget crossed
+                                                    mid-stream under an
+                                                    SLA policy)
 
 Fault tolerance (``FaultConfig``): a ``fault.PreemptionGuard`` (or an
 injected ``faultinject.PreemptAt``) unwinds the run between steps to a
@@ -53,6 +58,15 @@ degrade to a single ``failed`` request with neighbors bit-equal), and
 Energy: every processed token is priced by the resolved plan's analog-tile
 geometry (``core.energy.serving_energy_model``) into per-request Op counts
 and joules — the fJ/Op currency of the paper, measured at request level.
+
+Telemetry & SLA (``runtime/telemetry.py`` / ``runtime/sla.py``): pass
+``sink=`` to stream per-tick metrics (step latency, queue depth, page
+pressure, fJ/Op, retries, drift) through a ``MetricsSink`` with online
+spike/regression alerts, and ``sla=`` to schedule with priority-aging
+admission, deadline/joule admission control, and mid-stream ``over_budget``
+enforcement.  Both are host-side bookkeeping between the two compiled
+steps (``compiled_steps == 2`` holds), both ride in ``snapshot()``, and
+with both disabled every existing trace replays bit-identically.
 """
 from __future__ import annotations
 
@@ -71,6 +85,7 @@ from repro.core import energy as energy_model
 from repro.core.calibration import CalibrationState, apply_calibration
 from repro.models import model
 from repro.runtime import fault
+from repro.runtime import sla as sla_policy
 from repro.runtime.paged_cache import PagePool, pages_for
 from repro.runtime.scheduler import (Request, RequestRecord, Slot,
                                      SlotScheduler, static_baseline)
@@ -174,6 +189,13 @@ class EngineReport:
     heartbeats: int = 0
     recalibrations: int = 0
     drift_events: list = dataclasses.field(default_factory=list)
+    # --- SLA & telemetry (PR 8) -------------------------------------------
+    rejected: int = 0
+    over_budget: int = 0
+    deadline_hits: int = 0
+    deadline_misses: int = 0
+    alerts: int = 0
+    telemetry: Optional[dict] = None
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -197,6 +219,10 @@ class RunState:
     evictions: int = 0
     nan_steps: int = 0
     failed: int = 0
+    rejected: int = 0
+    over_budget: int = 0
+    analog_ops: float = 0.0       # running totals (order-exact for the
+    analog_energy_j: float = 0.0  # fj_per_op telemetry stream)
     step_retries: int = 0
     recalibrations: int = 0
     last_drift_check: int = 0
@@ -221,7 +247,9 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params,
                  engine_cfg: EngineConfig = EngineConfig(),
-                 calib: Optional[CalibrationState] = None):
+                 calib: Optional[CalibrationState] = None,
+                 sla: Optional[sla_policy.SlaConfig] = None,
+                 sink: Optional[Any] = None):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise NotImplementedError(
                 f"engine supports attention families, not {cfg.family!r} "
@@ -235,6 +263,8 @@ class Engine:
         self.params = params
         self.ecfg = engine_cfg
         self.calib = calib
+        self.sla = sla
+        self.sink = sink
         self.cfg_serving = apply_calibration(cfg, calib)
         self._check_pinned_windows()
         self.energy = energy_model.serving_energy_model(
@@ -318,13 +348,20 @@ class Engine:
     # ------------------------------------------------------------------
     # Run lifecycle
     # ------------------------------------------------------------------
+    def _make_sched(self) -> SlotScheduler:
+        ecfg = self.ecfg
+        if self.sla is not None:
+            return sla_policy.SlaScheduler(ecfg.slots, ecfg.slot_order,
+                                           self.sla)
+        return SlotScheduler(ecfg.slots, ecfg.slot_order)
+
     def start(self, requests: list[Request]) -> None:
         """Initialize a fresh run over a trace (allocates pools/caches)."""
         rids = [r.rid for r in requests]
         if len(set(rids)) != len(rids):
             raise ValueError("duplicate request ids in trace")
         ecfg = self.ecfg
-        sched = SlotScheduler(ecfg.slots, ecfg.slot_order)
+        sched = self._make_sched()
         sched.add(requests)
         self._st = RunState(
             requests=list(requests),
@@ -369,6 +406,8 @@ class Engine:
                 t1 = time.time()
                 alive = self.tick()
                 dt = time.time() - t1
+                if self.sink is not None:
+                    self._observe_tick(dt)
                 if fc is not None:
                     if fc.monitor is not None:
                         fc.monitor.record(st.steps, dt)
@@ -392,6 +431,24 @@ class Engine:
             return self.report()
         st.wall_s += time.time() - t0
         return self.report()
+
+    def _observe_tick(self, dt: float) -> None:
+        """Feed the metrics sink after one tick — pure host-side floats, no
+        device sync beyond what ``tick`` already did, so telemetry never
+        perturbs the compiled-step story (``compiled_steps == 2``)."""
+        st = self._st
+        step = st.steps          # the tick just executed landed us here
+        sink = self.sink
+        sink.observe("step_latency_s", dt, step)
+        sink.observe("queue_depth", len(st.sched.pending), step)
+        sink.observe("active_slots", len(st.sched.occupied()), step)
+        sink.observe("page_in_use", st.pool.in_use, step)
+        sink.observe("page_high_water", st.pool.high_water, step)
+        sink.observe("generated_tokens", st.generated_tokens, step)
+        sink.observe("step_retries", st.step_retries, step)
+        if st.analog_ops > 0.0:
+            sink.observe("fj_per_op",
+                         st.analog_energy_j / st.analog_ops * 1e15, step)
 
     # ------------------------------------------------------------------
     # One scheduling tick
@@ -427,7 +484,10 @@ class Engine:
         return False
 
     def _admit(self) -> None:
-        """FIFO admission; head-of-line blocks on pool pressure."""
+        """Admission (FIFO, or SLA priority-with-aging when ``sla=`` is
+        set); head-of-line blocks on pool pressure.  SLA infeasibility is
+        checked FIRST — a rejected request never occupies a slot, never
+        allocates a page, and never reaches a compiled step."""
         st = self._st
         ecfg = self.ecfg
         cap_pages = ecfg.resolved_max_pages
@@ -435,6 +495,17 @@ class Engine:
             req = st.sched.head(st.steps)
             if req is None:
                 break
+            if self.sla is not None:
+                verdict = sla_policy.admission_verdict(
+                    req, st.steps, ecfg.chunk, self.energy, self.sla)
+                if verdict is not None:
+                    st.sched.pop_head()
+                    rec = st.records[req.rid]
+                    rec.admitted_step = rec.finished_step = st.steps
+                    rec.finish_reason = "rejected"
+                    rec.reject_reason = verdict
+                    st.rejected += 1
+                    continue
             need = pages_for(len(req.prompt), ecfg.page_size)
             if need > cap_pages:
                 # can never fit: reject without occupying a slot
@@ -463,25 +534,40 @@ class Engine:
             st.evictions += 1
         elif reason == "failed":
             st.failed += 1
+        elif reason == "over_budget":
+            st.over_budget += 1
         st.pool.free(slot.pages)
         st.sched.release(slot)
 
     def _emit(self, slot: Slot, tok: int) -> None:
-        """Stream one generated token; finish on eos/budget."""
+        """Stream one generated token; finish on eos/budget.
+
+        Under an SLA policy a request whose accumulated joules crossed its
+        ``joule_budget`` is finished ``over_budget`` — the token it just
+        produced still streams (the work was done and priced), the slot and
+        pages recycle, and neighbor streams are untouched (the same
+        row-isolation argument as the ``failed`` path)."""
         rec = slot.record
         rec.tokens.append(tok)
         if rec.first_token_step < 0:
             rec.first_token_step = self._st.steps
         if self.ecfg.eos_id is not None and tok == self.ecfg.eos_id:
             self._finish(slot, "eos")
+        elif (self.sla is not None and rec.request.joule_budget is not None
+                and rec.analog_energy_j > rec.request.joule_budget):
+            self._finish(slot, "over_budget")
         elif len(rec.tokens) >= rec.request.max_new_tokens:
             self._finish(slot, "max_tokens")
         else:
             slot.cur_token = tok
 
     def _account(self, rec: RequestRecord, n: int) -> None:
-        rec.analog_ops += n * self.energy["ops_per_token"]
-        rec.analog_energy_j += n * self.energy["energy_per_token_j"]
+        st = self._st
+        ops, e_j = energy_model.token_cost(self.energy, n)
+        rec.analog_ops += ops
+        rec.analog_energy_j += e_j
+        st.analog_ops += ops
+        st.analog_energy_j += e_j
 
     def _run_compiled(self, kind: str, fn, *args):
         """The retry boundary around one compiled step.  Injected faults
@@ -620,6 +706,11 @@ class Engine:
         max_clip = max(clips.values(), default=0.0)
         max_dev = max((abs(math.log(max(r, 1e-12)))
                        for r in ratios.values()), default=0.0)
+        if self.sink is not None:
+            self.sink.observe("drift_max_clip_rate", float(max_clip),
+                              st.steps)
+            self.sink.observe("drift_max_log_ratio", float(max_dev),
+                              st.steps)
         drifted = max_clip > dc.clip_threshold or max_dev > dc.window_tol
         if not drifted:
             return
@@ -653,16 +744,23 @@ class Engine:
         if st is None:
             raise RuntimeError("no run state to snapshot")
         meta = {
-            "version": 1,
+            "version": 2,
             "ecfg": dataclasses.asdict(self.ecfg),
             "model": {"vocab_size": self.cfg.vocab_size,
                       "n_layers": self.cfg.n_layers,
                       "d_model": self.cfg.d_model,
                       "family": self.cfg.family},
+            "sla": (dataclasses.asdict(self.sla)
+                    if self.sla is not None else None),
+            "telemetry": (self.sink.snapshot()
+                          if self.sink is not None else None),
             "requests": [
                 {"rid": r.rid, "prompt": list(r.prompt),
                  "max_new_tokens": r.max_new_tokens,
-                 "arrival_step": r.arrival_step} for r in st.requests],
+                 "arrival_step": r.arrival_step,
+                 "priority": r.priority,
+                 "deadline_steps": r.deadline_steps,
+                 "joule_budget": r.joule_budget} for r in st.requests],
             "records": {
                 str(rid): {
                     "tokens": list(rec.tokens),
@@ -672,6 +770,7 @@ class Engine:
                     "finished_step": rec.finished_step,
                     "analog_ops": rec.analog_ops,
                     "analog_energy_j": rec.analog_energy_j,
+                    "reject_reason": rec.reject_reason,
                 } for rid, rec in st.records.items()},
             "sched": {
                 "pending": [r.rid for r in st.sched.pending],
@@ -693,7 +792,11 @@ class Engine:
                 "prompt_tokens": st.prompt_tokens,
                 "generated_tokens": st.generated_tokens,
                 "evictions": st.evictions, "nan_steps": st.nan_steps,
-                "failed": st.failed, "step_retries": st.step_retries,
+                "failed": st.failed, "rejected": st.rejected,
+                "over_budget": st.over_budget,
+                "analog_ops": st.analog_ops,
+                "analog_energy_j": st.analog_energy_j,
+                "step_retries": st.step_retries,
                 "recalibrations": st.recalibrations,
                 "last_drift_check": st.last_drift_check,
                 "wall_s": st.wall_s,
@@ -733,6 +836,22 @@ class Engine:
         if meta["model"] != model_id:
             raise ValueError(
                 f"engine snapshot model {meta['model']} != {model_id}")
+        snap_sla = meta.get("sla")
+        mine_sla = (dataclasses.asdict(self.sla)
+                    if self.sla is not None else None)
+        if snap_sla != mine_sla:
+            raise ValueError(
+                f"engine snapshot was taken under SLA policy {snap_sla}, "
+                f"this engine has {mine_sla} — the policy drives admission "
+                "order and must match for a bit-identical resume")
+        snap_telemetry = meta.get("telemetry")
+        if snap_telemetry is not None:
+            if self.sink is None:
+                raise ValueError(
+                    "engine snapshot carries telemetry state but this "
+                    "engine has no sink — construct it with sink= to "
+                    "resume the metric series and alert history")
+            self.sink.restore(snap_telemetry)
 
         # --- windows (the pinned state at snapshot time, which may be a
         # recalibrated one — restoring it is what keeps resume bit-exact) ---
@@ -774,7 +893,10 @@ class Engine:
         # --- host bookkeeping --------------------------------------------
         requests = [Request(rid=r["rid"], prompt=tuple(r["prompt"]),
                             max_new_tokens=r["max_new_tokens"],
-                            arrival_step=r["arrival_step"])
+                            arrival_step=r["arrival_step"],
+                            priority=r.get("priority", 0),
+                            deadline_steps=r.get("deadline_steps"),
+                            joule_budget=r.get("joule_budget"))
                     for r in meta["requests"]]
         by_rid = {r.rid: r for r in requests}
         records = {}
@@ -788,8 +910,9 @@ class Engine:
             rec.finished_step = rd["finished_step"]
             rec.analog_ops = rd["analog_ops"]
             rec.analog_energy_j = rd["analog_energy_j"]
+            rec.reject_reason = rd.get("reject_reason")
             records[rid] = rec
-        sched = SlotScheduler(ecfg.slots, ecfg.slot_order)
+        sched = self._make_sched()
         sched.pending = [by_rid[rid] for rid in meta["sched"]["pending"]]
         sched._seq = meta["sched"]["seq"]
         for sd in meta["sched"]["slots"]:
@@ -813,7 +936,14 @@ class Engine:
             prompt_tokens=c["prompt_tokens"],
             generated_tokens=c["generated_tokens"],
             evictions=c["evictions"], nan_steps=c["nan_steps"],
-            failed=c["failed"], step_retries=c["step_retries"],
+            failed=c["failed"], rejected=c.get("rejected", 0),
+            over_budget=c.get("over_budget", 0),
+            analog_ops=c.get("analog_ops",
+                             sum(r.analog_ops for r in records.values())),
+            analog_energy_j=c.get(
+                "analog_energy_j",
+                sum(r.analog_energy_j for r in records.values())),
+            step_retries=c["step_retries"],
             recalibrations=c["recalibrations"],
             last_drift_check=c["last_drift_check"], wall_s=c["wall_s"],
             util_samples=list(c["util_samples"]),
@@ -831,6 +961,11 @@ class Engine:
         records, requests = st.records, st.requests
         tot_ops = sum(r.analog_ops for r in records.values())
         tot_e = sum(r.analog_energy_j for r in records.values())
+        # Deadline outcomes over ADMITTED finished requests: a rejection is
+        # admission control working (counted in `rejected`), not a miss.
+        hits = [r.deadline_hit for r in records.values()
+                if r.done and r.finish_reason != "rejected"
+                and r.deadline_hit is not None]
         return EngineReport(
             requests=[records[r.rid].summary() for r in requests],
             steps=st.steps,
@@ -866,4 +1001,11 @@ class Engine:
                         else 0),
             recalibrations=st.recalibrations,
             drift_events=list(st.drift_events),
+            rejected=st.rejected,
+            over_budget=st.over_budget,
+            deadline_hits=sum(1 for h in hits if h),
+            deadline_misses=sum(1 for h in hits if not h),
+            alerts=(len(self.sink.alerts) if self.sink is not None else 0),
+            telemetry=(self.sink.summary()
+                       if self.sink is not None else None),
         )

@@ -126,12 +126,16 @@ class StragglerMonitor:
     n: int = 0
     stragglers: int = 0
     log: list = dataclasses.field(default_factory=list)
+    sink: Optional[object] = None   # telemetry.MetricsSink (optional)
 
     def record(self, step: int, dt: float) -> bool:
         """Returns True if this step was a straggler.
 
         Warm-up: the first 6 steps only feed the EWMA (compile/cold-cache
-        steps would otherwise flag everything after them)."""
+        steps would otherwise flag everything after them).  With a ``sink``
+        attached every straggler emits a ``straggler_dt_s`` sample (the
+        engine separately streams every step's latency — this series
+        carries only the outliers the EWMA flagged)."""
         is_straggler = self.n > 5 and dt > self.threshold * self.ewma
         self.ewma = dt if self.n == 0 else \
             (1 - self.ewma_alpha) * self.ewma + self.ewma_alpha * dt
@@ -139,13 +143,17 @@ class StragglerMonitor:
         if is_straggler:
             self.stragglers += 1
             self.log.append({"step": step, "dt": dt, "ewma": self.ewma})
+            if self.sink is not None:
+                self.sink.observe("straggler_dt_s", dt, step)
         return is_straggler
 
 
 class Heartbeat:
-    def __init__(self, path: str | Path, every_s: float = 30.0):
+    def __init__(self, path: str | Path, every_s: float = 30.0,
+                 sink: Optional[object] = None):
         self.path = Path(path)
         self.every_s = every_s
+        self.sink = sink
         self._last = 0.0
         self.beats = 0
 
@@ -158,4 +166,6 @@ class Heartbeat:
         self.path.write_text(json.dumps({"step": step, "t": now}))
         self._last = now
         self.beats += 1
+        if self.sink is not None:
+            self.sink.observe("heartbeat", self.beats, step)
         return True

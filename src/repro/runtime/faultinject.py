@@ -25,12 +25,17 @@ Events:
     ``core.nonideal.perturb_currents`` at step ``step`` (the FG-cell tuning
     drift of section 4.1): max|z| at every TD-VMM site moves, and the
     drift probe's clip rates against the pinned windows go stale.
+  * :class:`SlowStep` — sleep ``sleep_s`` inside the compiled-step wrapper
+    at engine step ``step``: the tick's wall time inflates exactly once,
+    giving the telemetry spike detector (``runtime.telemetry``) a
+    deterministic straggler to catch.
 
 All randomness is keyed from explicit seeds; nothing here reads clocks.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -39,7 +44,7 @@ import jax.numpy as jnp
 from repro.core.constants import TDVMMSpec
 from repro.core.nonideal import NonIdealityConfig, perturb_currents
 
-__all__ = ["FaultError", "FailStep", "PreemptAt", "DriftAt",
+__all__ = ["FaultError", "FailStep", "PreemptAt", "DriftAt", "SlowStep",
            "FaultInjector", "drift_params"]
 
 
@@ -91,6 +96,23 @@ class DriftAt:
     fired: bool = False
 
 
+@dataclasses.dataclass
+class SlowStep:
+    """Inflate the wall time of compiled-step kind ``kind`` at engine step
+    ``step`` by sleeping ``sleep_s`` before the call — a one-step straggler
+    with a step-exact signature for the spike detector.  The compiled call
+    itself is untouched, so token streams are bit-identical to a run
+    without the event."""
+    step: int
+    sleep_s: float = 0.25
+    kind: str = "any"               # "prefill" | "decode" | "any"
+    fired: bool = False
+
+    def matches(self, kind: str, step: int) -> bool:
+        return (not self.fired and step == self.step
+                and self.kind in (kind, "any"))
+
+
 class FaultInjector:
     """Deterministic event schedule consumed by ``Engine._drive``.
 
@@ -122,6 +144,9 @@ class FaultInjector:
                 raise FaultError(
                     f"{ev.message} (kind={kind}, step={step}, "
                     f"raise {ev.fired}/{ev.times})", rid=ev.rid)
+            if isinstance(ev, SlowStep) and ev.matches(kind, step):
+                ev.fired = True
+                time.sleep(ev.sleep_s)
 
     def report(self) -> list[dict]:
         out = []

@@ -29,17 +29,37 @@ from typing import Optional
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One serving request: prompt token ids, a decode budget, and the
-    engine step at which it becomes visible to the scheduler."""
+    engine step at which it becomes visible to the scheduler.
+
+    The SLA fields are inert unless the engine runs an ``runtime.sla``
+    policy (defaults reproduce plain FIFO bit-identically):
+
+    priority:       larger = more urgent; ``SlaScheduler`` ages waiting
+                    requests upward so low priority never starves.
+    deadline_steps: finish within this many engine steps of arrival.
+                    Requests that can never make it (conservatively priced
+                    on the full token budget) are rejected at admission.
+    joule_budget:   per-request analog energy budget in joules (priced by
+                    ``core.energy.serving_energy_model``); a request that
+                    exceeds it mid-stream finishes as ``over_budget``.
+    """
     rid: int
     prompt: tuple[int, ...]
     max_new_tokens: int
     arrival_step: int = 0
+    priority: int = 0
+    deadline_steps: Optional[int] = None
+    joule_budget: Optional[float] = None
 
     def __post_init__(self):
         if len(self.prompt) < 1:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+        if self.deadline_steps is not None and self.deadline_steps < 1:
+            raise ValueError(f"request {self.rid}: deadline_steps < 1")
+        if self.joule_budget is not None and self.joule_budget <= 0.0:
+            raise ValueError(f"request {self.rid}: joule_budget <= 0")
 
 
 @dataclasses.dataclass
@@ -48,7 +68,10 @@ class RequestRecord:
 
     finish_reason: "eos" | "max_tokens" | "evicted" (ran out of page budget
     — the engine evicts BEFORE the overflowing cache write can happen, so an
-    evicted request still streams every token it produced)."""
+    evicted request still streams every token it produced) | "failed" |
+    "rejected" (SLA admission found the request infeasible before any
+    compute) | "over_budget" (the request crossed its joule budget
+    mid-stream and was finished gracefully)."""
     request: Request
     tokens: list[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None
@@ -57,6 +80,7 @@ class RequestRecord:
     finished_step: int = -1
     analog_ops: float = 0.0
     analog_energy_j: float = 0.0
+    reject_reason: Optional[str] = None
 
     @property
     def done(self) -> bool:
@@ -65,6 +89,17 @@ class RequestRecord:
     @property
     def steps_in_system(self) -> int:
         return self.finished_step - self.request.arrival_step
+
+    @property
+    def deadline_hit(self) -> Optional[bool]:
+        """None if the request declared no deadline; otherwise whether it
+        finished (any terminal state except ``rejected``) within
+        ``deadline_steps`` of arrival."""
+        if self.request.deadline_steps is None:
+            return None
+        if self.finished_step < 0 or self.finish_reason == "rejected":
+            return False
+        return self.steps_in_system <= self.request.deadline_steps
 
     def summary(self) -> dict:
         return {
@@ -80,6 +115,13 @@ class RequestRecord:
             "steps_in_system": self.steps_in_system,
             "analog_ops": self.analog_ops,
             "analog_energy_j": self.analog_energy_j,
+            # --- SLA outcomes -------------------------------------------
+            "priority": self.request.priority,
+            "deadline_steps": self.request.deadline_steps,
+            "deadline_hit": self.deadline_hit,
+            "joule_budget": self.request.joule_budget,
+            "joules_used": self.analog_energy_j,
+            "reject_reason": self.reject_reason,
         }
 
 
@@ -116,6 +158,7 @@ class SlotScheduler:
         self.slots: list[Optional[Slot]] = [None] * n_slots
         self.pending: list[Request] = []
         self._seq = 0
+        self._head_idx: Optional[int] = None
 
     def add(self, requests) -> None:
         self.pending.extend(requests)
@@ -125,16 +168,27 @@ class SlotScheduler:
         return bool(self.pending)
 
     def next_arrival(self) -> Optional[int]:
-        return self.pending[0].arrival_step if self.pending else None
+        return min((r.arrival_step for r in self.pending), default=None)
 
     def head(self, step: int) -> Optional[Request]:
-        """Next admissible request (FIFO; None if none has arrived yet)."""
+        """Next admissible request (FIFO; None if none has arrived yet).
+
+        Subclasses override the *selection policy* only (which pending
+        request is next); they must record the chosen index in
+        ``self._head_idx`` so ``pop_head`` removes exactly the request the
+        engine just inspected."""
+        self._head_idx = None
         if self.pending and self.pending[0].arrival_step <= step:
+            self._head_idx = 0
             return self.pending[0]
         return None
 
     def pop_head(self) -> Request:
-        return self.pending.pop(0)
+        if self._head_idx is None:
+            raise RuntimeError("pop_head without a preceding head() hit")
+        req = self.pending.pop(self._head_idx)
+        self._head_idx = None
+        return req
 
     def free_slot_id(self) -> Optional[int]:
         order = range(self.n_slots) if self.slot_order == "fifo" \

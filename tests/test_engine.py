@@ -241,6 +241,65 @@ def test_serving_energy_model_chain_saves_io(served):
     assert off["ops_per_token"] == 0
 
 
+def test_serving_energy_model_chain_saves_io_moe_sites(served):
+    """Chain-aware I/O halving on the MoE chainable pairs: both
+    ``moe.expert.in -> .out`` and ``moe.shared.in -> .out`` drop the
+    intermediate p-bit boundary (io_factor 0.5 on each end), with ops
+    unchanged and strictly less energy per token."""
+    # kimi-k2 smoke: the only arch with shared experts (n_shared_experts=1)
+    base = smoke(get_config("kimi-k2-1t-a32b"))
+    assert base.moe.n_shared_experts >= 1
+    on = base.replace(tdvmm_plan=TDVMMPlan(
+        rules=(tdvmm_rule("moe.*", enabled=True, backend="jnp"),)))
+    unchained = energy.serving_energy_model(on, tile_n=64)
+    chained_cfg = on.replace(tdvmm_plan=on.tdvmm_plan.with_rules(
+        tdvmm_rule("moe.expert.in", chain=True),
+        tdvmm_rule("moe.shared.in", chain=True)))
+    chained = energy.serving_energy_model(chained_cfg, tile_n=64)
+    assert unchained["ops_per_token"] > 0
+    assert chained["ops_per_token"] == unchained["ops_per_token"]
+    assert chained["energy_per_token_j"] < unchained["energy_per_token_j"]
+    for site in ("moe.expert.in", "moe.expert.out",
+                 "moe.shared.in", "moe.shared.out"):
+        assert unchained["per_site"][site]["io_factor"] == 1.0, site
+        assert chained["per_site"][site]["io_factor"] == 0.5, site
+    # each chained pair saves exactly half its I/O energy; the expert pair
+    # (top_k matrices) saves more joules than the single shared pair
+    def pair_saving(up, down):
+        return sum(unchained["per_site"][s]["energy_per_token_j"]
+                   - chained["per_site"][s]["energy_per_token_j"]
+                   for s in (up, down))
+    assert pair_saving("moe.expert.in", "moe.expert.out") > \
+        pair_saving("moe.shared.in", "moe.shared.out") > 0
+    # chaining only the expert pair leaves the shared boundary digital
+    expert_only = energy.serving_energy_model(on.replace(
+        tdvmm_plan=on.tdvmm_plan.with_rules(
+            tdvmm_rule("moe.expert.in", chain=True))), tile_n=64)
+    assert expert_only["per_site"]["moe.shared.in"]["io_factor"] == 1.0
+    assert expert_only["per_site"]["moe.expert.in"]["io_factor"] == 0.5
+
+
+def test_token_cost_and_request_energy_bounds(served):
+    cfg, _, _ = served
+    table = energy.serving_energy_model(cfg, tile_n=64)
+    ops1, e1 = energy.token_cost(table)
+    assert (ops1, e1) == (table["ops_per_token"],
+                          table["energy_per_token_j"])
+    ops5, e5 = energy.token_cost(table, 5)
+    assert ops5 == pytest.approx(5 * ops1) and e5 == pytest.approx(5 * e1)
+    b = energy.request_energy_bounds(table, prompt_len=7, max_new_tokens=4)
+    # min = prompt + 1 token (the cheapest *served* outcome), full = budget
+    assert b["min_tokens"] == 8 and b["full_tokens"] == 11
+    assert b["min_energy_j"] == pytest.approx(8 * e1)
+    assert b["full_energy_j"] == pytest.approx(11 * e1)
+    assert b["min_ops"] == pytest.approx(8 * ops1)
+    assert b["min_energy_j"] < b["full_energy_j"]
+    with pytest.raises(ValueError, match=">= 1"):
+        energy.request_energy_bounds(table, 0, 4)
+    with pytest.raises(ValueError, match=">= 1"):
+        energy.request_energy_bounds(table, 7, 0)
+
+
 def test_engine_per_request_energy_accounting(served):
     cfg, params, calib = served
     reqs = [Request(0, tuple(range(1, 7)), max_new_tokens=3)]

@@ -28,6 +28,8 @@ from repro.runtime import fault
 from repro.runtime import faultinject as fi
 from repro.runtime.engine import (DriftConfig, Engine, EngineConfig,
                                   FaultConfig, Request)
+from repro.runtime.sla import SlaConfig
+from repro.runtime.telemetry import MemoryEmitter, MetricsSink
 
 
 # ==========================================================================
@@ -405,3 +407,119 @@ def test_monitor_and_heartbeat_feed_report(served, baseline, tmp_path):
     assert rep.heartbeats >= rep.steps
     assert rep.straggler_ewma_s > 0.0
     assert rep.stragglers == mon.stragglers
+
+
+def test_monitor_and_heartbeat_emit_into_sink(tmp_path):
+    """Straggler and heartbeat events land in the metric series too (PR 8:
+    one stream for everything the engine observes)."""
+    sink = MetricsSink()
+    mon = fault.StragglerMonitor(threshold=2.0, sink=sink)
+    for step, dt in enumerate((0.1,) * 6):       # warm-up, no flags
+        mon.record(step, dt)
+    assert mon.record(7, 100.0)
+    assert sink.series["straggler_dt_s"].count == 1
+    assert sink.series["straggler_dt_s"].last == 100.0
+    hb = fault.Heartbeat(tmp_path / "hb.json", every_s=0.0, sink=sink)
+    hb.beat(3), hb.beat(4)
+    assert sink.series["heartbeat"].count == 2
+    assert sink.series["heartbeat"].last == 2.0  # cumulative beat counter
+
+
+# --------------------------------------------------------------------------
+# SlowStep injection (the telemetry straggler)
+# --------------------------------------------------------------------------
+def test_slowstep_fires_once_and_keeps_streams(served, baseline):
+    cfg, params, calib, _ = served
+    reqs, base = baseline
+    ev = fi.SlowStep(step=2, sleep_s=0.05, kind="any")
+    t0 = time.time()
+    rep = Engine(cfg, params, ECFG, calib=calib).run(reqs, FaultConfig(
+        injector=fi.FaultInjector([ev])))
+    assert time.time() - t0 >= 0.05
+    assert ev.fired and not ev.matches("decode", 2)   # one-shot
+    _same_streams(base, rep)                     # wall time only, no values
+    # kind filter: a prefill-only event never matches decode steps
+    assert not fi.SlowStep(step=0, kind="prefill").matches("decode", 0)
+
+
+# --------------------------------------------------------------------------
+# PR 8 acceptance: the kill-at-any-step contract survives SLA + telemetry
+# --------------------------------------------------------------------------
+def _sla_trace(vocab, e_tok):
+    """Mixed-priority trace + one deadline-doomed and one joule-capped
+    request, so snapshots are taken with rejected/over_budget state and a
+    live SLA queue in flight."""
+    reqs = [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens,
+                    arrival_step=r.arrival_step, priority=r.rid % 3)
+            for r in _trace(vocab)]
+    reqs.append(Request(rid=900, prompt=tuple(range(1, 9)),
+                        max_new_tokens=20, deadline_steps=1,
+                        arrival_step=1))
+    reqs.append(Request(rid=901, prompt=tuple(range(9, 15)),
+                        max_new_tokens=6, arrival_step=2,
+                        joule_budget=(6 + 2.5) * e_tok))
+    return reqs
+
+
+def test_kill_at_any_step_with_sla_and_telemetry(served):
+    cfg, params, calib, _ = served
+    sla = SlaConfig(aging_steps=8)
+    ref = Engine(cfg, params, ECFG, calib=calib, sla=sla,
+                 sink=MetricsSink())
+    reqs = _sla_trace(cfg.vocab_size, ref.energy["energy_per_token_j"])
+    base = ref.run(reqs)
+    # the trace really exercises the SLA paths the snapshot must carry
+    assert base.rejected == 1 and base.over_budget == 1
+    victim = Engine(cfg, params, ECFG, calib=calib, sla=sla,
+                    sink=MetricsSink())
+    survivor = Engine(cfg, params, ECFG, calib=calib, sla=sla,
+                      sink=MetricsSink())
+    for k in range(base.steps):
+        rep = victim.run(reqs, FaultConfig(
+            injector=fi.FaultInjector([fi.PreemptAt(k)])))
+        assert rep.preempted and rep.steps == k
+        snap = victim.snapshot()
+        survivor.restore(snap)
+        # the sink rode the snapshot: restored series/alerts are dict-equal
+        assert survivor.sink.snapshot() == victim.sink.snapshot()
+        resumed = survivor.resume()
+        assert not resumed.preempted
+        _same_streams(base, resumed)
+        assert resumed.rejected == base.rejected
+        assert resumed.over_budget == base.over_budget
+        by_rid = {r["rid"]: r for r in resumed.requests}
+        assert by_rid[900]["finish_reason"] == "rejected"
+        assert by_rid[901]["finish_reason"] == "over_budget"
+        assert survivor.compiled_steps() <= 2
+
+
+def test_restore_sla_policy_mismatch_raises(served, baseline):
+    cfg, params, calib, _ = served
+    reqs, _ = baseline
+    e1 = Engine(cfg, params, ECFG, calib=calib, sla=SlaConfig(aging_steps=8))
+    e1.run(reqs, FaultConfig(injector=fi.FaultInjector([fi.PreemptAt(2)])))
+    snap = e1.snapshot()
+    # different aging policy -> different admission order -> refuse
+    other = Engine(cfg, params, ECFG, calib=calib,
+                   sla=SlaConfig(aging_steps=16))
+    with pytest.raises(ValueError, match="SLA policy"):
+        other.restore(snap)
+    # no policy at all is also a mismatch
+    with pytest.raises(ValueError, match="SLA policy"):
+        Engine(cfg, params, ECFG, calib=calib).restore(snap)
+
+
+def test_restore_telemetry_without_sink_raises(served, baseline):
+    cfg, params, calib, _ = served
+    reqs, _ = baseline
+    e1 = Engine(cfg, params, ECFG, calib=calib, sink=MetricsSink())
+    e1.run(reqs, FaultConfig(injector=fi.FaultInjector([fi.PreemptAt(2)])))
+    snap = e1.snapshot()
+    with pytest.raises(ValueError, match="no sink"):
+        Engine(cfg, params, ECFG, calib=calib).restore(snap)
+    # with a sink (any emitters — they are config, not state) it restores
+    e2 = Engine(cfg, params, ECFG, calib=calib,
+                sink=MetricsSink(emitters=[MemoryEmitter()]))
+    e2.restore(snap)
+    assert e2.sink.snapshot() == e1.sink.snapshot()

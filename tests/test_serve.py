@@ -1,5 +1,9 @@
 """Serving driver: prefill+decode loop produces tokens, donates caches,
-works with int8 KV."""
+works with int8 KV; the engine CLI dumps a complete report."""
+import dataclasses
+import json
+import sys
+
 import jax
 
 from repro.configs import get_config, smoke
@@ -22,3 +26,38 @@ def test_serve_ssm_int8_kv():
         assert out["tokens"].shape == (2, 4)
     finally:
         attention.set_kv_cache_int8(False)
+
+
+def test_engine_cli_report_json_is_complete(tmp_path, monkeypatch):
+    """``--report-json`` dumps the FULL EngineReport — every dataclass
+    field (including the SLA/telemetry ones) and per-request SLA outcomes —
+    and ``--metrics-jsonl`` streams the per-tick series alongside."""
+    from repro.launch import serve as serve_mod
+    from repro.runtime.engine import EngineReport
+
+    report = tmp_path / "report.json"
+    jsonl = tmp_path / "metrics.jsonl"
+    monkeypatch.setattr(sys, "argv", [
+        "serve", "--arch", "qwen1.5-0.5b", "--smoke",
+        "--requests", "3", "--slots", "2", "--prompt-len", "8",
+        "--gen", "4", "--chunk", "8", "--page-size", "4",
+        "--num-pages", "16", "--sla", "--deadline-steps", "500",
+        "--metrics-jsonl", str(jsonl), "--report-json", str(report)])
+    serve_mod.main()
+    doc = json.loads(report.read_text())
+    fields = {f.name for f in dataclasses.fields(EngineReport)}
+    assert set(doc) == fields                    # nothing dropped, ever
+    assert doc["compiled_steps"] == 2
+    assert doc["telemetry"]["observations"] > 0
+    assert doc["alerts"] == doc["telemetry"]["alerts"]
+    # every trace request declared the 500-step deadline and made it
+    assert doc["deadline_hits"] == 3 and doc["deadline_misses"] == 0
+    for rec in doc["requests"]:
+        for key in ("priority", "deadline_steps", "deadline_hit",
+                    "joule_budget", "joules_used", "reject_reason"):
+            assert key in rec, key
+        assert rec["deadline_hit"] is True
+    lines = [json.loads(ln) for ln in jsonl.read_text().splitlines()]
+    assert sum(1 for ln in lines
+               if ln["t"] == "metric" and ln["metric"] == "step_latency_s"
+               ) == doc["telemetry"]["metrics"]["step_latency_s"]["count"]

@@ -1,0 +1,324 @@
+"""SLA-aware admission & dispatch: priority-with-aging fairness, deadline
+and joule admission control, over-budget graceful degradation.
+
+Hard contracts under test:
+
+  * with every SLA field at its default, an ``SlaScheduler``-driven engine
+    run replays the plain-FIFO run **bit-identically** (streams, finish
+    reasons, finish steps) — the policy is provably inert until asked for;
+  * aging bounds queue wait: a lowest-priority request under a continuous
+    stream of high-priority arrivals is admitted within
+    ``wait_bound(sla, P_max)`` steps (and a counterexample with enormous
+    ``aging_steps`` starves past any horizon — the bound is the lever);
+  * infeasible requests are rejected AT ADMISSION with zero compute
+    (no tokens, no joules, no pages) and never count as deadline misses;
+  * a request that crosses its ``joule_budget`` mid-stream finishes as
+    ``over_budget`` with its already-streamed prefix intact and every
+    neighbor's stream bit-equal;
+  * scheduling decisions are independent of physical slot ids
+    (``slot_order="lifo"`` serves identical streams under SLA).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import TDVMMPlan, get_config, smoke, tdvmm_rule
+from repro.core import energy
+from repro.models import model
+from repro.runtime.engine import Engine, EngineConfig, Request
+from repro.runtime.sla import (SlaConfig, SlaScheduler, admission_verdict,
+                               min_steps_to_finish, wait_bound)
+
+
+# ==========================================================================
+# Policy units (no model)
+# ==========================================================================
+def test_sla_config_validates_aging():
+    with pytest.raises(ValueError, match="aging_steps"):
+        SlaConfig(aging_steps=0)
+
+
+def test_effective_priority_ages_with_wait():
+    s = SlaScheduler(1, sla=SlaConfig(aging_steps=4))
+    r = Request(rid=0, prompt=(1,), max_new_tokens=1, arrival_step=10,
+                priority=1)
+    assert s.effective_priority(r, 10) == 1      # just arrived
+    assert s.effective_priority(r, 13) == 1      # 3 waited < aging_steps
+    assert s.effective_priority(r, 14) == 2      # one level per 4 steps
+    assert s.effective_priority(r, 22) == 4
+    assert s.effective_priority(r, 5) == 1       # pre-arrival never negative
+
+
+def test_head_picks_highest_effective_priority_ties_fifo():
+    s = SlaScheduler(1, sla=SlaConfig(aging_steps=100))
+    lo = Request(rid=0, prompt=(1,), max_new_tokens=1, priority=0)
+    hi = Request(rid=1, prompt=(1,), max_new_tokens=1, priority=2)
+    late_hi = Request(rid=2, prompt=(1,), max_new_tokens=1, arrival_step=5,
+                      priority=2)
+    s.add([lo, hi, late_hi])
+    assert s.head(0) is hi                       # priority beats arrival
+    assert s.pop_head() is hi                    # pop removes the selection
+    assert s.head(0) is lo                       # rid 2 hasn't arrived yet
+    assert s.head(6) is late_hi                  # now it has, and outranks
+    s.pop_head()
+    assert s.head(6) is lo and s.pop_head() is lo
+    assert s.head(6) is None
+    with pytest.raises(RuntimeError, match="pop_head"):
+        s.pop_head()
+
+
+def test_equal_priorities_replay_fifo_selection():
+    sla = SlaScheduler(1, sla=SlaConfig())
+    fifo_reqs = [Request(rid=r, prompt=(1,), max_new_tokens=1,
+                         arrival_step=a)
+                 for r, a in ((3, 0), (1, 0), (2, 1), (0, 2))]
+    sla.add(fifo_reqs)
+    order = []
+    for step in range(4):
+        got = sla.head(step)
+        if got is not None:
+            order.append(sla.pop_head().rid)
+    assert order == [1, 3, 2, 0]                 # (arrival_step, rid) FIFO
+
+
+def test_aging_bounds_wait_under_high_priority_flood():
+    sla = SlaConfig(aging_steps=4)
+    sched = SlaScheduler(1, sla=sla)
+    low = Request(rid=0, prompt=(1,), max_new_tokens=1, priority=0)
+    sched.add([low])
+    bound = wait_bound(sla, max_priority=2)
+    assert bound == 12                           # (2 - 0 + 1) * 4
+    admitted_at = None
+    for step in range(bound + 1):
+        # one fresh high-priority arrival per step, one admission per step
+        sched.add([Request(rid=100 + step, prompt=(1,), max_new_tokens=1,
+                           arrival_step=step, priority=2)])
+        if sched.head(step) is low:
+            admitted_at = step
+            break
+        sched.pop_head()
+    assert admitted_at is not None and admitted_at <= bound
+    # counterexample: with aging effectively off the same flood starves the
+    # low-priority request past any horizon — aging IS the fairness lever
+    starved = SlaScheduler(1, sla=SlaConfig(aging_steps=10_000))
+    starved.add([Request(rid=0, prompt=(1,), max_new_tokens=1, priority=0)])
+    for step in range(200):
+        starved.add([Request(rid=100 + step, prompt=(1,), max_new_tokens=1,
+                             arrival_step=step, priority=2)])
+        assert starved.head(step).rid != 0
+        starved.pop_head()
+    with pytest.raises(ValueError, match="unbounded"):
+        wait_bound(SlaConfig(), max_priority=float("inf"))
+
+
+def test_min_steps_to_finish_prices_chunked_prefill():
+    r = Request(rid=0, prompt=tuple(range(1, 9)), max_new_tokens=3)
+    assert min_steps_to_finish(r, chunk=4) == 2 + 2   # 2 chunks + 2 decodes
+    assert min_steps_to_finish(r, chunk=16) == 1 + 2  # one-shot prefill
+    one = Request(rid=1, prompt=(1,), max_new_tokens=1)
+    assert min_steps_to_finish(one, chunk=4) == 1     # prefill emits token 1
+
+
+def test_admission_verdict_deadline_and_joules():
+    table = {"ops_per_token": 10.0, "energy_per_token_j": 1e-9}
+    sla = SlaConfig()
+    ok = Request(rid=0, prompt=(1, 2, 3), max_new_tokens=2,
+                 deadline_steps=50, joule_budget=1e-6)
+    assert admission_verdict(ok, 0, 4, table, sla) is None
+    late = Request(rid=1, prompt=(1, 2, 3), max_new_tokens=10,
+                   deadline_steps=2)
+    v = admission_verdict(late, 0, 4, table, sla)
+    assert v is not None and "deadline-infeasible" in v
+    # waiting in queue eats the deadline: feasible at arrival, not at step 50
+    # (earliest finish 50 + 2 - 1 = 51 steps after arrival > deadline 50)
+    v2 = admission_verdict(ok, 50, 4, table, sla)
+    assert v2 is not None and "deadline-infeasible" in v2
+    poor = Request(rid=2, prompt=(1, 2, 3), max_new_tokens=2,
+                   joule_budget=3.9e-9)          # min work = 4 tokens = 4nJ
+    v3 = admission_verdict(poor, 0, 4, table, sla)
+    assert v3 is not None and "joule-infeasible" in v3
+    # policy switches gate each check
+    off = SlaConfig(admission_deadline=False, admission_energy=False)
+    assert admission_verdict(late, 0, 4, table, off) is None
+    assert admission_verdict(poor, 0, 4, table, off) is None
+
+
+# ==========================================================================
+# Engine integration (tiny model)
+# ==========================================================================
+def _cfg():
+    return smoke(get_config("qwen1.5-0.5b")).replace(tdvmm_plan=TDVMMPlan(
+        rules=(tdvmm_rule("ffn.*", enabled=True, backend="jnp"),)))
+
+
+ECFG = EngineConfig(slots=3, page_size=4, num_pages=32, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _cfg()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"inputs": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)}
+    calib = model.calibrate(params, batch, cfg, max_len=48)
+    return cfg, params, calib
+
+
+def _trace(vocab, n=4, seed=0, **sla_fields):
+    rng = np.random.default_rng(seed)
+    reqs, arrival = [], 0
+    for rid in range(n):
+        reqs.append(Request(
+            rid=rid,
+            prompt=tuple(int(t) for t in rng.integers(
+                0, vocab, rng.integers(3, 11))),
+            max_new_tokens=int(rng.integers(2, 6)),
+            arrival_step=arrival, **sla_fields))
+        arrival += int(rng.integers(0, 2))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def baseline(served):
+    cfg, params, calib = served
+    reqs = _trace(cfg.vocab_size)
+    rep = Engine(cfg, params, ECFG, calib=calib).run(reqs)
+    return reqs, rep
+
+
+def _same_streams(a, b):
+    for ra, rb in zip(a.requests, b.requests):
+        assert ra["tokens"] == rb["tokens"], (ra, rb)
+        assert ra["finish_reason"] == rb["finish_reason"], (ra, rb)
+        assert ra["finished_step"] == rb["finished_step"], (ra, rb)
+    assert a.steps == b.steps
+
+
+def test_default_sla_replays_fifo_bit_identically(served, baseline):
+    """The acceptance gate: SlaScheduler with every priority at 0 IS plain
+    FIFO — enabling the policy without using it changes nothing."""
+    cfg, params, calib = served
+    reqs, base = baseline
+    rep = Engine(cfg, params, ECFG, calib=calib,
+                 sla=SlaConfig()).run(reqs)
+    _same_streams(base, rep)
+    assert rep.compiled_steps == 2
+    assert rep.rejected == 0 and rep.over_budget == 0
+
+
+def test_priority_reorders_admission_not_token_values(served):
+    cfg, params, calib = served
+    rng = np.random.default_rng(4)
+    prompts = [tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 6))
+               for _ in range(3)]
+    def mk(pri):
+        return [Request(rid=i, prompt=p, max_new_tokens=3, priority=pri[i])
+                for i, p in enumerate(prompts)]
+
+    solo_ecfg = EngineConfig(slots=1, page_size=4, num_pages=32, chunk=4)
+    fifo = Engine(cfg, params, solo_ecfg, calib=calib).run(mk((0, 0, 0)))
+    rep = Engine(cfg, params, solo_ecfg, calib=calib,
+                 sla=SlaConfig(aging_steps=64)).run(mk((0, 2, 1)))
+    by_rid = {r["rid"]: r for r in rep.requests}
+    # one slot: service order == admission order == descending priority
+    assert (by_rid[1]["admitted_step"] < by_rid[2]["admitted_step"]
+            < by_rid[0]["admitted_step"])
+    # reordering never changes token VALUES (slots don't couple)
+    for base_rec, rec in zip(fifo.requests, rep.requests):
+        assert rec["tokens"] == base_rec["tokens"]
+        assert rec["priority"] == (0, 2, 1)[rec["rid"]]
+
+
+def test_deadline_infeasible_rejected_with_zero_compute(served, baseline):
+    cfg, params, calib = served
+    reqs, base = baseline
+    doomed = Request(rid=900, prompt=tuple(range(1, 9)), max_new_tokens=20,
+                     deadline_steps=1)
+    easy = Request(rid=901, prompt=tuple(range(9, 14)), max_new_tokens=2,
+                   deadline_steps=500)
+    rep = Engine(cfg, params, ECFG, calib=calib, sla=SlaConfig()).run(
+        reqs + [doomed, easy])
+    by_rid = {r["rid"]: r for r in rep.requests}
+    rej = by_rid[900]
+    assert rej["finish_reason"] == "rejected"
+    assert "deadline-infeasible" in rej["reject_reason"]
+    assert rej["tokens"] == [] and rej["first_token_step"] == -1
+    assert rej["analog_ops"] == 0.0 and rej["joules_used"] == 0.0
+    assert rej["deadline_hit"] is False
+    assert rep.rejected == 1
+    # a rejection is admission control working, not a deadline miss
+    assert rep.deadline_misses == 0 and rep.deadline_hits == 1
+    assert by_rid[901]["deadline_hit"] is True
+    # neighbors stream exactly their baseline tokens
+    base_by = {r["rid"]: r for r in base.requests}
+    for rid, rec in by_rid.items():
+        if rid in base_by:
+            assert rec["tokens"] == base_by[rid]["tokens"], rid
+
+
+def test_joule_infeasible_rejected_at_admission(served, baseline):
+    cfg, params, calib = served
+    reqs, _ = baseline
+    eng = Engine(cfg, params, ECFG, calib=calib, sla=SlaConfig())
+    e_tok = eng.energy["energy_per_token_j"]
+    assert e_tok > 0                             # ffn sites meter
+    # budget below the cheapest served outcome (prompt + 1 token)
+    poor = Request(rid=900, prompt=tuple(range(1, 7)), max_new_tokens=4,
+                   joule_budget=3 * e_tok)
+    rep = eng.run(reqs + [poor])
+    rec = {r["rid"]: r for r in rep.requests}[900]
+    assert rec["finish_reason"] == "rejected"
+    assert "joule-infeasible" in rec["reject_reason"]
+    assert rec["tokens"] == [] and rec["joules_used"] == 0.0
+    assert rep.rejected == 1
+
+
+def test_over_budget_finishes_gracefully_neighbors_bit_equal(
+        served, baseline):
+    cfg, params, calib = served
+    reqs, base = baseline
+    eng = Engine(cfg, params, ECFG, calib=calib, sla=SlaConfig())
+    e_tok = eng.energy["energy_per_token_j"]
+    prompt = tuple(range(1, 7))
+    # passes admission (min work = 7 tokens) but cannot afford its full
+    # budget of 6 generated tokens — crosses mid-stream
+    capped = Request(rid=900, prompt=prompt, max_new_tokens=6,
+                     joule_budget=(len(prompt) + 2.5) * e_tok)
+    rep = eng.run(reqs + [capped])
+    rec = {r["rid"]: r for r in rep.requests}[900]
+    assert rec["finish_reason"] == "over_budget"
+    assert 1 <= len(rec["tokens"]) < capped.max_new_tokens
+    assert rec["joules_used"] > capped.joule_budget   # the crossing token
+    assert rep.over_budget == 1 and rep.rejected == 0
+    # the partial stream is a prefix of the request's unbudgeted stream
+    free = Engine(cfg, params, ECFG, calib=calib, sla=SlaConfig()).run(
+        reqs + [Request(rid=900, prompt=prompt, max_new_tokens=6)])
+    free_rec = {r["rid"]: r for r in free.requests}[900]
+    assert rec["tokens"] == free_rec["tokens"][:len(rec["tokens"])]
+    # neighbors bit-equal to the SLA-less baseline
+    base_by = {r["rid"]: r for r in base.requests}
+    for r in rep.requests:
+        if r["rid"] in base_by:
+            assert r["tokens"] == base_by[r["rid"]]["tokens"], r["rid"]
+
+
+def test_lifo_slot_order_identical_streams_under_sla(served):
+    """Slot-permutation invariance survives the SLA policy: selection
+    depends on (pending, step), never on physical slot ids."""
+    cfg, params, calib = served
+    reqs = _trace(cfg.vocab_size, n=5, seed=2)
+    sla_reqs = [Request(rid=r.rid, prompt=r.prompt,
+                        max_new_tokens=r.max_new_tokens,
+                        arrival_step=r.arrival_step, priority=r.rid % 3)
+                for r in reqs]
+    fifo = Engine(cfg, params, ECFG, calib=calib,
+                  sla=SlaConfig(aging_steps=8)).run(sla_reqs)
+    lifo_ecfg = EngineConfig(slots=3, page_size=4, num_pages=32, chunk=4,
+                             slot_order="lifo")
+    lifo = Engine(cfg, params, lifo_ecfg, calib=calib,
+                  sla=SlaConfig(aging_steps=8)).run(sla_reqs)
+    for ra, rb in zip(fifo.requests, lifo.requests):
+        assert ra["tokens"] == rb["tokens"]
+        assert ra["finish_reason"] == rb["finish_reason"]
+        assert ra["finished_step"] == rb["finished_step"]
+    assert fifo.steps == lifo.steps
