@@ -373,7 +373,108 @@ def run(n_requests: int = 10):
              "compiled_steps": rep5.compiled_steps,
          })
 
+    # --- mesh scaling: DP slot-pool linearity + per-request bit-identity.
+    # Runs in a subprocess with 4 forced host devices so this process keeps
+    # its single-device jax runtime (same pattern as the multidev tests).
+    import json as _json
+    import os
+    import subprocess
+    import sys
+
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(repo / "src"), str(repo)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    child = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.bench_serving import _mesh_scaling_child; "
+         f"_mesh_scaling_child({int(n_requests)})"],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert child.returncode == 0, child.stderr[-3000:]
+    line = [ln for ln in child.stdout.splitlines()
+            if ln.startswith("MESH_RESULTS::")][0]
+    mres = _json.loads(line.split("::", 1)[1])
+    solo_m = mres.pop("solo")
+    ref_streams = [{"rid": r["rid"], "tokens": r["tokens"],
+                    "finish_reason": r["finish_reason"]}
+                   for r in ref.requests]
+    trivial = mres["1x1"]
+    mesh_1x1_bit_identical = (
+        trivial["streams"] == solo_m["streams"]
+        and trivial["finished_steps"] == solo_m["finished_steps"]
+        and trivial["steps"] == solo_m["steps"])
+    per_request_ok = all(m["streams"] == ref_streams
+                         for m in mres.values())
+    slots_linear = all(m["total_slots"] == m["devices"] * ecfg.slots
+                       for m in mres.values())
+    emit("serving_mesh_scaling", 0.0,
+         "tok/step " + "|".join(
+             f"{k}={m['generated'] / max(m['steps'], 1):.2f}"
+             for k, m in mres.items()),
+         data={
+             "slots_per_rank": ecfg.slots,
+             "meshes": {k: {"devices": m["devices"],
+                            "total_slots": m["total_slots"],
+                            "wall_steps": m["steps"],
+                            "generated_tokens": m["generated"],
+                            "tokens_per_step":
+                                m["generated"] / max(m["steps"], 1)}
+                        for k, m in mres.items()},
+             "solo_wall_steps": solo_m["steps"],
+             "solo_matches_parent": solo_m["streams"] == ref_streams,
+             "mesh_1x1_bit_identical": mesh_1x1_bit_identical,
+             "per_request_bit_identity": per_request_ok,
+             "slots_scale_linearly": slots_linear,
+             "compiled_steps_by_mesh":
+                 {k: m["compiled_steps"] for k, m in mres.items()},
+         })
+
     save_json("BENCH_serving.json", meta={"suite": "serving"})
+
+
+def _mesh_scaling_child(n_requests: int = 10) -> None:
+    """Subprocess entry for the mesh-scaling row: replays the bench trace
+    through the engine meshless and on (1,1)/(2,1)/(4,1) meshes.  Must run
+    under ``--xla_force_host_platform_device_count=4`` (the parent sets it
+    in the env before this interpreter starts, so it lands before the first
+    jax import)."""
+    import json
+
+    from repro.launch.mesh import make_test_mesh
+    from repro.runtime.paged_cache import pages_for
+
+    base = smoke(get_config(ARCH))
+    cfg = base.replace(tdvmm_plan=PLANS["ffn_unchained"])
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    calib_batch = {"inputs": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)}
+    calib = model.calibrate(params, calib_batch, cfg, max_len=32)
+    trace = make_trace(cfg.vocab_size, n_requests=n_requests)
+    max_len = max(len(r.prompt) + r.max_new_tokens for r in trace)
+    ecfg = EngineConfig(slots=4, page_size=4, num_pages=64, chunk=8,
+                        tile_n=64, max_pages_per_slot=pages_for(max_len, 4))
+
+    def pack(rep):
+        return {
+            "steps": rep.steps, "devices": rep.devices,
+            "total_slots": rep.total_slots,
+            "generated": rep.generated_tokens,
+            "compiled_steps": rep.compiled_steps,
+            "streams": [{"rid": r["rid"], "tokens": r["tokens"],
+                         "finish_reason": r["finish_reason"]}
+                        for r in rep.requests],
+            "finished_steps": [r["finished_step"] for r in rep.requests],
+        }
+
+    out = {"solo": pack(Engine(cfg, params, ecfg, calib=calib).run(trace))}
+    for d, t in ((1, 1), (2, 1), (4, 1)):
+        rep = Engine(cfg, params, ecfg, calib=calib,
+                     mesh=make_test_mesh(d, t)).run(trace)
+        out[f"{d}x{t}"] = pack(rep)
+    print("MESH_RESULTS::" + json.dumps(out))
 
 
 def check_invariants(doc: dict) -> None:
@@ -414,6 +515,14 @@ def check_invariants(doc: dict) -> None:
     assert ts["injected_alerts"] == 1, ts            # exactly one spike
     assert ts["alert_at_injected_step"], ts          # at the right step
     assert ts["compiled_steps"] == 2, ts
+    ms = rows["serving_mesh_scaling"]
+    assert set(ms["meshes"]) == {"1x1", "2x1", "4x1"}, ms
+    assert ms["mesh_1x1_bit_identical"], ms          # (1,1) == no mesh exactly
+    assert ms["per_request_bit_identity"], ms        # streams equal solo
+    assert ms["solo_matches_parent"], ms             # runtime-independent
+    assert ms["slots_scale_linearly"], ms            # DP pool: slots = dp * S
+    for k, c in ms["compiled_steps_by_mesh"].items():
+        assert c == 2, (k, c)                        # two programs per mesh
 
 
 if __name__ == "__main__":

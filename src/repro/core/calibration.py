@@ -242,6 +242,15 @@ def runtime_windows(windows: Optional[dict[str, jax.Array]]):
         _RUNTIME.map = prev
 
 
+def runtime_window_map() -> Optional[dict[str, jax.Array]]:
+    """The full site -> window map currently installed (None outside a
+    ``runtime_windows`` context).  Used by shard_map call sites that must
+    re-install the map *inside* the per-shard body — closures over the
+    outer-trace arrays would capture full ``(E,)`` windows where an
+    expert-parallel shard only owns its ``(E_loc,)`` slice."""
+    return _RUNTIME.map
+
+
 def runtime_window(site: str) -> Optional[jax.Array]:
     """The runtime window array installed for ``site`` (trace-time lookup;
     None outside a ``runtime_windows`` context or for uncovered sites)."""

@@ -172,7 +172,7 @@ def validate_against_paper() -> dict[str, tuple[float, float]]:
 # --------------------------------------------------------------------------
 # Serving-engine energy metering (runtime/engine.py)
 # --------------------------------------------------------------------------
-def serving_energy_model(cfg, tile_n: int = 256) -> dict:
+def serving_energy_model(cfg, tile_n: int = 256, n_devices: int = 1) -> dict:
     """Per-token analog Op/energy table for a model's **enabled** TD-VMM
     sites — the engine's fJ/Op currency.
 
@@ -189,7 +189,17 @@ def serving_energy_model(cfg, tile_n: int = 256) -> dict:
     MAC = mult + add convention); tile energy includes padding waste (a
     partially filled tile burns a full window), so fJ/Op degrades honestly
     when shapes don't divide ``tile_n``.
+
+    ``ops_per_token`` / ``energy_per_token_j`` are AGGREGATE (whole-mesh)
+    per-token columns — what a request is charged and what ``token_cost``
+    reads — and are device-count independent.  ``n_devices > 1`` additionally
+    reports the ``*_per_device`` share of that work: TP splits one token's
+    tiles across devices, DP splits the token population, and either way the
+    expected per-device rate per engine token is the aggregate over
+    ``n_devices``.  ``fj_per_op`` is a ratio, identical at both scopes.
     """
+    if n_devices < 1:
+        raise ValueError(f"need >= 1 device, got {n_devices}")
     from repro.configs.plan import site_linear_shapes
     resolved = cfg.resolved_tdvmm_plan
     shapes = site_linear_shapes(cfg)
@@ -224,8 +234,11 @@ def serving_energy_model(cfg, tile_n: int = 256) -> dict:
         tot_e += site_e
     return {
         "tile_n": tile_n,
+        "n_devices": n_devices,
         "ops_per_token": tot_ops,
         "energy_per_token_j": tot_e,
+        "ops_per_token_per_device": tot_ops / n_devices,
+        "energy_per_token_j_per_device": tot_e / n_devices,
         "fj_per_op": (tot_e / tot_ops * 1e15) if tot_ops else 0.0,
         "per_site": per_site,
     }

@@ -8,7 +8,30 @@ wrapper so the repo runs on both.
 """
 from __future__ import annotations
 
+import inspect
+import logging
+
 import jax
+
+_logger = logging.getLogger(__name__)
+_FALLBACK_WARNED: set = set()
+
+
+def supports_partial_auto() -> bool:
+    """True when this jax has stable partial-auto shard_map (``axis_names``).
+
+    Probed from the signature rather than a version compare: the argument was
+    renamed twice (``auto`` -> ``axis_names``) and only the keyword-stable
+    form is safe to target.  Old jax's ``auto=`` variant is excluded on
+    purpose — see the fallback note in :func:`shard_map`.
+    """
+    if not hasattr(jax, "shard_map"):
+        return False
+    try:
+        params = inspect.signature(jax.shard_map).parameters
+    except (TypeError, ValueError):  # pragma: no cover - C-accelerated stub
+        return False
+    return "axis_names" in params
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True,
@@ -23,12 +46,29 @@ def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True,
     (unmentioned axes are replicated), it only forgoes GSPMD sharding of the
     per-shard body over the would-be-auto axes.
     """
-    if hasattr(jax, "shard_map"):
+    if supports_partial_auto():
         kw = {"check_vma": check_vma}
         if axis_names is not None:
             kw["axis_names"] = axis_names
         return jax.shard_map(
             f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    if axis_names is not None:
+        # One-time log (not warnings.warn: repeated trace-time hits would
+        # spam or get deduped into silence), mirroring the autotune-miss
+        # pattern in kernels/tdvmm/ops.py.
+        key = tuple(sorted(str(a) for a in axis_names))
+        if key not in _FALLBACK_WARNED:
+            _FALLBACK_WARNED.add(key)
+            _logger.warning(
+                "jax %s lacks stable partial-auto shard_map (axis_names=%s); "
+                "falling back to fully-manual mode. Numerically identical, "
+                "but GSPMD won't auto-shard the per-shard body over the "
+                "unmentioned axes.", jax.__version__, sorted(key))
+
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
 
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,

@@ -21,6 +21,29 @@ def make_test_mesh(data: int = 2, model: int = 2):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh(spec: str):
+    """Build a (data, model) mesh from a CLI spec like ``"2x2"`` or ``"4x1"``.
+
+    ``"none"`` / ``""`` return None (meshless engine).  The product must not
+    exceed the visible device count — under CPU CI that count is raised via
+    ``--xla_force_host_platform_device_count`` before jax is imported.
+    """
+    if not spec or spec.lower() == "none":
+        return None
+    try:
+        data, model = (int(p) for p in spec.lower().split("x"))
+    except ValueError as e:
+        raise ValueError(f"mesh spec must look like 'DxT', got {spec!r}") from e
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    n = data * model
+    if n > jax.device_count():
+        raise ValueError(
+            f"mesh {spec!r} needs {n} devices but only {jax.device_count()} "
+            "are visible (set --xla_force_host_platform_device_count)")
+    return make_test_mesh(data, model)
+
+
 def axis_info(mesh) -> dict:
     """dp/tp axis naming convention for a mesh."""
     names = mesh.axis_names

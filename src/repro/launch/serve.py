@@ -213,6 +213,12 @@ def serve_engine(cfg, args, seed: int = 0):
 
     from repro.runtime.engine import Engine, EngineConfig, Request
 
+    from repro.launch.mesh import parse_mesh
+
+    mesh = parse_mesh(args.mesh)
+    if mesh is not None:
+        print(f"[serve] mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}"
+              f" over {mesh.size} devices")
     key = jax.random.PRNGKey(seed)
     params = model.init_params(key, cfg)
     calib = None
@@ -271,13 +277,15 @@ def serve_engine(cfg, args, seed: int = 0):
         calib = CalibrationState(windows={
             k.split("/", 1)[1]: jnp.asarray(v) for k, v in flat.items()
             if k.startswith("windows/")})
-        engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink)
+        engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink,
+                        mesh=mesh)
         engine.restore(flat)
         print(f"[serve] resumed from snapshot step {step} "
               f"({args.snapshot_dir})")
         rep = engine.resume(fc)
     else:
-        engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink)
+        engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink,
+                        mesh=mesh)
         rep = engine.run(reqs, fc)
     if rep.preempted:
         print(f"[serve] PREEMPTED at step {rep.steps}; snapshot: "
@@ -343,6 +351,12 @@ def main():
     # engine knobs
     ap.add_argument("--requests", type=int, default=8,
                     help="engine path: synthetic ragged trace size")
+    ap.add_argument("--mesh", default=None, metavar="DxT",
+                    help="engine path: serve over a (data, model) mesh, e.g. "
+                         "2x2 (needs D*T visible devices — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count). "
+                         "DP multiplies the slot pool: total slots = D * "
+                         "--slots")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--chunk", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=16)

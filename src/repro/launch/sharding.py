@@ -71,17 +71,23 @@ def _path_str(path) -> str:
 
 def param_specs(params_shape: Any, cfg: ModelConfig, mesh: Mesh,
                 dp_axes: tuple[str, ...] | None = None,
-                layer_axis: str | None = None):
+                layer_axis: str | None = None,
+                ep_axes: tuple[str, ...] | None = None):
     """PartitionSpec pytree matching the params pytree.
 
     dp_axes: override the FSDP axes (pipeline parallelism uses 'pod' as the
-    stage axis, so FSDP shrinks to ('data',)).
+    stage axis, so FSDP shrinks to ('data',); the serving engine passes ()
+    to replicate weights over DP — no ZeRO-3 gathers in the step).
     layer_axis: if given, scanned-stack leaves (leading n_layers dim) get this
-    mesh axis on dim 0 — the PP stage layout."""
+    mesh axis on dim 0 — the PP stage layout.
+    ep_axes: override the expert-bank axes independently of FSDP (serving
+    keeps dense weights DP-replicated but still shards expert tables over
+    the DP axes under ``moe.impl='ep'``)."""
     info = axis_info(mesh)
-    fsdp = info["dp_axes"] if dp_axes is None else dp_axes
+    fsdp = (info["dp_axes"] if dp_axes is None else dp_axes) or None
     tp = info["tp_axis"]
-    ep = fsdp if (cfg.moe is not None and cfg.moe.impl == "ep") else None
+    ep_base = fsdp if ep_axes is None else (ep_axes or None)
+    ep = ep_base if (cfg.moe is not None and cfg.moe.impl == "ep") else None
     rules = _rules(fsdp, tp, ep)
 
     def spec_for(path, leaf):
@@ -189,6 +195,53 @@ def cache_specs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh):
         return P(*((None,) * nd))
 
     return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def paged_specs(cache_shape: Any, cfg: ModelConfig, mesh: Mesh):
+    """Paged KV pools: head dims over TP, the page pool itself replicated.
+
+    Paged leaves are (L, pages, page_size, KV, HD) — the leading ``pages``
+    dim is a global pool indexed through host-built block tables, so it must
+    NOT be sharded (every device gathers arbitrary page ids; the DP slot-pool
+    dimension lives in the *block tables*, not the pool).  kv-heads go over
+    TP when divisible, else head_dim — same fallback as ``cache_specs``.
+    Per-position int8 KV scales (L, pages, page_size, KV) follow their pool.
+    """
+    info = axis_info(mesh)
+    tp = info["tp_axis"]
+    tpn = mesh.shape[tp] if tp else 1
+
+    def spec_for(path, leaf):
+        s = _path_str(path)
+        nd = len(leaf.shape)
+        if re.search(r"/(k|v)$", s):          # (L, pages, ps, KV, HD)
+            L, PG, PS, KV, HD = leaf.shape
+            kv_ax = tp if KV % tpn == 0 else None
+            hd_ax = tp if (kv_ax is None and HD % tpn == 0) else None
+            return P(None, None, None, kv_ax, hd_ax)
+        if re.search(r"/(k_scale|v_scale)$", s):   # (L, pages, ps, KV)
+            L, PG, PS, KV = leaf.shape
+            return P(None, None, None, tp if KV % tpn == 0 else None)
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def slot_specs(mesh: Mesh, kind: str):
+    """Engine step-batch layouts for the DP slot-pool dimension.
+
+    decode: batch rows ARE the slots, ordered (dp_rank, local_slot), so the
+    leading dim shards over DP — inputs/block_tables (B, ·), pos/active (B,).
+    prefill: one slot per step (batch 1) — fully replicated.
+    """
+    dp = axis_info(mesh)["dp_axes"] or None
+    if kind == "prefill":
+        return {"inputs": P(None, None), "block_row": P(None),
+                "offset": P(), "valid": P()}
+    if kind != "decode":
+        raise ValueError(f"unknown engine step kind {kind!r}")
+    return {"inputs": P(dp, None), "block_tables": P(dp, None),
+            "pos": P(dp), "active": P(dp)}
 
 
 def to_named(spec_tree: Any, mesh: Mesh):

@@ -381,14 +381,17 @@ class PagedKVCache(NamedTuple):
 
 
 def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                     dtype) -> PagedKVCache:
-    """One attention layer's page pool (+1 trash page).  Honors the same
-    KV_CACHE_INT8 switch as the dense cache."""
+                     dtype, ranks: int = 1) -> PagedKVCache:
+    """One attention layer's page pool (+1 trash page per rank).  Honors the
+    same KV_CACHE_INT8 switch as the dense cache.  ``ranks > 1`` stacks one
+    ``num_pages + 1`` region per DP rank (see ``runtime.paged_cache.PagePool``
+    for the global page-id arithmetic)."""
     if cfg.swa_window is not None:
         raise NotImplementedError(
             "paged KV cache does not support sliding-window archs yet "
             "(the ring buffer already bounds their dense cache)")
-    shape = (num_pages + 1, page_size, cfg.n_kv_heads, cfg.resolved_head_dim)
+    shape = (ranks * (num_pages + 1), page_size, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
     if KV_CACHE_INT8:
         sshape = shape[:-1]
         return PagedKVCache(jnp.zeros(shape, jnp.int8),

@@ -137,7 +137,8 @@ def decode_step(params, batch: dict, caches: dict, cfg: ModelConfig,
 # --------------------------------------------------------------------------
 # Paged serving (continuous-batching engine, runtime/engine.py)
 # --------------------------------------------------------------------------
-def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
+def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int,
+                      ranks: int = 1) -> dict:
     """Page pools for every attention layer (attention families only).
 
     Unlike ``init_caches`` there is no batch/max_len here: capacity is the
@@ -152,7 +153,8 @@ def init_paged_caches(cfg: ModelConfig, num_pages: int, page_size: int) -> dict:
     dtype = common.resolve_dtype(cfg.dtype)
 
     def one_attn():
-        return attention.init_paged_cache(cfg, num_pages, page_size, dtype)
+        return attention.init_paged_cache(cfg, num_pages, page_size, dtype,
+                                          ranks=ranks)
 
     def stack(mk, n):
         return jax.tree.map(lambda *xs: jnp.stack(xs), *[mk() for _ in range(n)])

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import calibration
 from repro.launch import compat, meshctx
 from repro.models import common
 
@@ -238,26 +239,47 @@ def apply(params, x: jax.Array, cfg: ModelConfig, key=None) -> tuple[jax.Array, 
     }
     router_spec = jax.tree.map(lambda _: P(None, None), params["router"])
 
-    def inner(xb, experts, router, *maybe_key):
+    # Calibrated windows for the routed-expert sites ride in as EXPLICIT
+    # shard_map operands, not closures: under impl='ep' a per-expert (E,)
+    # window must arrive as each shard's local (E_loc,) slice — same layout
+    # as the expert bank's leading dim — and a closure would capture the
+    # full outer array on every shard.
+    win_map = calibration.runtime_window_map() or {}
+    expert_wins = {s: win_map[s] for s in ("moe.expert.in", "moe.expert.out")
+                   if s in win_map}
+
+    def _win_spec(w):
+        nd = getattr(w, "ndim", 0)
+        if e_ax is not None and nd == 1:    # (E,) sliced with the expert dim
+            return P(e_ax)
+        return P(*((None,) * nd))
+
+    win_specs = {k: _win_spec(v) for k, v in expert_wins.items()}
+
+    def inner(xb, experts, router, wins, *maybe_key):
         p = {"experts": experts, "router": router}
         kk = maybe_key[0] if maybe_key else None
         flat = xb.reshape(-1, d)
-        if m.impl == "ep":
-            if kk is not None:
-                # Each dp shard owns a *different* expert slice: fold the
-                # shard index in so experts draw independent noise.  (Local
-                # mode must NOT fold — experts there are replicated and all
-                # shards need bitwise-identical noise.)
-                for a in dp:
-                    kk = jax.random.fold_in(kk, jax.lax.axis_index(a))
-            y, aux = _moe_ep(p, flat, cfg, tp, dp, dp_size, key=kk)
-        else:
-            y, aux = _moe_local(p, flat, cfg, tp, key=kk)
+        # Re-install the expert windows from the per-shard operands so the
+        # TD-VMM sites resolved inside this body see local slices (the outer
+        # runtime_windows context still holds the unsharded arrays).
+        with calibration.runtime_windows(wins if wins else None):
+            if m.impl == "ep":
+                if kk is not None:
+                    # Each dp shard owns a *different* expert slice: fold the
+                    # shard index in so experts draw independent noise.  (Local
+                    # mode must NOT fold — experts there are replicated and all
+                    # shards need bitwise-identical noise.)
+                    for a in dp:
+                        kk = jax.random.fold_in(kk, jax.lax.axis_index(a))
+                y, aux = _moe_ep(p, flat, cfg, tp, dp, dp_size, key=kk)
+            else:
+                y, aux = _moe_local(p, flat, cfg, tp, key=kk)
         aux = jax.tree.map(lambda v: jax.lax.pmean(v, dp), aux)
         return y.reshape(xb.shape), aux
 
-    in_specs = (batch_spec, expert_spec, router_spec)
-    args = (x, params["experts"], params["router"])
+    in_specs = (batch_spec, expert_spec, router_spec, win_specs)
+    args = (x, params["experts"], params["router"], expert_wins)
     if k_routed is not None:
         in_specs += (P(),)          # noise key: replicated across the mesh
         args += (k_routed,)

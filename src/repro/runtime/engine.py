@@ -67,6 +67,19 @@ admission, deadline/joule admission control, and mid-stream ``over_budget``
 enforcement.  Both are host-side bookkeeping between the two compiled
 steps (``compiled_steps == 2`` holds), both ride in ``snapshot()``, and
 with both disabled every existing trace replays bit-identically.
+
+Mesh-sharded serving: pass ``mesh=`` (axes ``data`` x ``model``) and the two
+compiled steps run tensor/expert/data-parallel — params take the training
+``launch/sharding._rules`` TP layout (DP replicated: no ZeRO gathers at
+inference), paged pools shard their head dims over ``model``
+(``sharding.paged_specs``) while the page dim stays replicated, and the DP
+axes multiply the slot pool: ``total_slots = dp * ecfg.slots`` with slot id
+``dp_rank * ecfg.slots + local_slot`` and one page region per rank
+(``PagePool(ranks=dp)``).  The scheduler stays host-side and deterministic;
+admission walks free slots in ``slot_order`` and draws pages from the slot's
+rank region.  A (1, 1) mesh is bit-identical to no mesh; snapshots are
+device_get on save and re-sharded on restore, so the kill-at-any-step
+bit-identity contract survives under a mesh.
 """
 from __future__ import annotations
 
@@ -83,6 +96,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import energy as energy_model
 from repro.core.calibration import CalibrationState, apply_calibration
+from repro.launch import meshctx
+from repro.launch import sharding as shardlib
+from repro.launch.mesh import axis_info
 from repro.models import model
 from repro.runtime import fault
 from repro.runtime import sla as sla_policy
@@ -196,6 +212,9 @@ class EngineReport:
     deadline_misses: int = 0
     alerts: int = 0
     telemetry: Optional[dict] = None
+    # --- mesh-sharded serving (PR 9) --------------------------------------
+    devices: int = 1              # mesh size (1 = meshless engine)
+    total_slots: int = 0          # dp_size * ecfg.slots aggregate decode width
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -249,7 +268,8 @@ class Engine:
                  engine_cfg: EngineConfig = EngineConfig(),
                  calib: Optional[CalibrationState] = None,
                  sla: Optional[sla_policy.SlaConfig] = None,
-                 sink: Optional[Any] = None):
+                 sink: Optional[Any] = None,
+                 mesh: Optional[Any] = None):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise NotImplementedError(
                 f"engine supports attention families, not {cfg.family!r} "
@@ -260,36 +280,89 @@ class Engine:
             raise NotImplementedError(
                 "engine + sliding-window attention not supported yet")
         self.cfg = cfg
-        self.params = params
         self.ecfg = engine_cfg
         self.calib = calib
         self.sla = sla
         self.sink = sink
+
+        # --- mesh: TP shards each step's math, DP multiplies the slot pool.
+        # The scheduler stays host-side and meshless — slot id =
+        # dp_rank * ecfg.slots + local_slot, and every rank's page region
+        # mirrors the single-device layout, so a (1,1) mesh is bit-identical
+        # to no mesh at all.
+        self.mesh = mesh
+        if mesh is not None:
+            info = axis_info(mesh)
+            self._dp_axes = info["dp_axes"]
+            self._tp_axis = info["tp_axis"]
+            self.dp = shardlib._dp_size(mesh, self._dp_axes)
+        else:
+            self._dp_axes, self._tp_axis, self.dp = (), None, 1
+        self.total_slots = self.dp * engine_cfg.slots
+
         self.cfg_serving = apply_calibration(cfg, calib)
         self._check_pinned_windows()
         self.energy = energy_model.serving_energy_model(
-            self.cfg_serving, engine_cfg.tile_n)
+            self.cfg_serving, engine_cfg.tile_n,
+            n_devices=(mesh.size if mesh is not None else 1))
+
+        # Params: TP layout from the training _rules (heads / ffn-hidden /
+        # vocab over 'model'); dp_axes=() replicates over DP — serving never
+        # wants ZeRO-3 gathers in the step — while expert banks still shard
+        # over DP under moe.impl='ep'.
+        if mesh is not None:
+            p_specs = shardlib.param_specs(
+                params, cfg, mesh, dp_axes=(), ep_axes=self._dp_axes)
+            params = jax.device_put(params, shardlib.to_named(p_specs, mesh))
+        self.params = params
 
         # Windows as runtime operands: the jits trace over the window dict
         # (same sites + shapes -> same executable), never bake the values.
-        self._windows = calib.as_arrays() if calib is not None else {}
+        self._windows = self._place_windows(
+            calib.as_arrays() if calib is not None else {})
+
+        # Per-page HBM bytes across all layers (for the high-water stat) and
+        # the paged-pool shardings the two steps are pinned to.
+        shapes = jax.eval_shape(lambda: model.init_paged_caches(
+            cfg, engine_cfg.num_pages, engine_cfg.page_size, ranks=self.dp))
+        total = sum(np.prod(leaf.shape) * leaf.dtype.itemsize
+                    for leaf in jax.tree.leaves(shapes))
+        self.page_bytes = int(
+            total // (self.dp * (engine_cfg.num_pages + 1)))
+        self._cache_sh = None
+        self._batch_sh = {}
+        jit_kw: dict[str, Any] = {}
+        if mesh is not None:
+            self._cache_sh = shardlib.to_named(
+                shardlib.paged_specs(shapes, cfg, mesh), mesh)
+            self._batch_sh = {
+                kind: shardlib.to_named(shardlib.slot_specs(mesh, kind), mesh)
+                for kind in ("prefill", "decode")}
+            # Pinning the cache output sharding to the input sharding is what
+            # keeps compiled_steps == 2: a drifting output layout would make
+            # the next call's donated input a new signature.
+            jit_kw["out_shardings"] = (None, self._cache_sh)
         self._prefill = jax.jit(
             lambda p, b, c, w: model.prefill_chunk(p, b, c, cfg, windows=w),
-            donate_argnums=(2,))
+            donate_argnums=(2,), **jit_kw)
         self._decode = jax.jit(
             lambda p, b, c, w: model.decode_slots(p, b, c, cfg, windows=w),
-            donate_argnums=(2,))
+            donate_argnums=(2,), **jit_kw)
 
         self._st: Optional[RunState] = None
         self._fault: Optional[FaultConfig] = None
         self._guard: Optional[fault.PreemptionGuard] = None
 
-        # Per-page HBM bytes across all layers (for the high-water stat).
-        shapes = jax.eval_shape(lambda: model.init_paged_caches(
-            cfg, engine_cfg.num_pages, engine_cfg.page_size))
-        total = sum(np.prod(leaf.shape) * leaf.dtype.itemsize
-                    for leaf in jax.tree.leaves(shapes))
-        self.page_bytes = int(total // (engine_cfg.num_pages + 1))
+    def _place_windows(self, windows: dict) -> dict:
+        """Replicate the window operands across the mesh (meshless: as-is).
+        Expert-parallel (E,) slicing happens inside the MoE shard_map, which
+        takes these as explicit operands — see models/moe.py."""
+        if self.mesh is None or not windows:
+            return dict(windows)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(self.mesh, P())
+        return {site: jax.device_put(jnp.asarray(v), rep)
+                for site, v in windows.items()}
 
     def _check_pinned_windows(self):
         for site, sc in self.cfg_serving.resolved_tdvmm_plan.sites:
@@ -328,7 +401,7 @@ class Engine:
                 raise ValueError(
                     f"hot-swap window for site {site!r} has shape "
                     f"{arr.shape}, pinned is {self._windows[site].shape}")
-        self._windows = new
+        self._windows = self._place_windows(new)
         self.calib = calib
 
     def pinned_calibration(self) -> CalibrationState:
@@ -351,9 +424,9 @@ class Engine:
     def _make_sched(self) -> SlotScheduler:
         ecfg = self.ecfg
         if self.sla is not None:
-            return sla_policy.SlaScheduler(ecfg.slots, ecfg.slot_order,
+            return sla_policy.SlaScheduler(self.total_slots, ecfg.slot_order,
                                            self.sla)
-        return SlotScheduler(ecfg.slots, ecfg.slot_order)
+        return SlotScheduler(self.total_slots, ecfg.slot_order)
 
     def start(self, requests: list[Request]) -> None:
         """Initialize a fresh run over a trace (allocates pools/caches)."""
@@ -363,13 +436,16 @@ class Engine:
         ecfg = self.ecfg
         sched = self._make_sched()
         sched.add(requests)
+        caches = model.init_paged_caches(
+            self.cfg, ecfg.num_pages, ecfg.page_size, ranks=self.dp)
+        if self._cache_sh is not None:
+            caches = jax.device_put(caches, self._cache_sh)
         self._st = RunState(
             requests=list(requests),
             records={r.rid: RequestRecord(r) for r in requests},
             sched=sched,
-            pool=PagePool(ecfg.num_pages, ecfg.page_size),
-            caches=model.init_paged_caches(
-                self.cfg, ecfg.num_pages, ecfg.page_size),
+            pool=PagePool(ecfg.num_pages, ecfg.page_size, ranks=self.dp),
+            caches=caches,
         )
 
     def run(self, requests: list[Request],
@@ -515,11 +591,17 @@ class Engine:
                 rec.finish_reason = "evicted"
                 st.evictions += 1
                 continue
-            sid = st.sched.free_slot_id()
+            # Walk free slots in slot_order; a slot's DP rank decides which
+            # page region serves it (slot id = dp_rank * slots + local), so
+            # admission tries each rank's pool until one fits.  With dp=1
+            # this is exactly the legacy free_slot_id + alloc sequence.
+            sid = pages = None
+            for cand in st.sched.free_slot_ids():
+                got = st.pool.alloc(need, rank=cand // self.ecfg.slots)
+                if got is not None:
+                    sid, pages = cand, got
+                    break
             if sid is None:
-                break
-            pages = st.pool.alloc(need)
-            if pages is None:
                 break
             st.sched.pop_head()
             rec = st.records[req.rid]
@@ -579,6 +661,13 @@ class Engine:
         def call():
             if fc is not None and fc.injector is not None:
                 fc.injector.check(kind, st.steps)
+            if self.mesh is not None:
+                # Model code reads the mesh context at trace time (shard_map
+                # in moe/common); only the first call per step kind traces,
+                # later ones hit the executable cache.
+                with meshctx.use_mesh(self.mesh, self._dp_axes,
+                                      self._tp_axis):
+                    return fn(*args)
             return fn(*args)
 
         if fc is None:
@@ -608,6 +697,8 @@ class Engine:
         batch = {"inputs": jnp.asarray(tokens),
                  "block_row": jnp.asarray(row),
                  "offset": jnp.int32(start), "valid": jnp.int32(n)}
+        if self.mesh is not None:
+            batch = jax.device_put(batch, self._batch_sh["prefill"])
         try:
             logits, caches = self._run_compiled(
                 "prefill", self._prefill, self.params, batch, st.caches,
@@ -644,14 +735,15 @@ class Engine:
         for slot in decoding:
             if slot.pos >= len(slot.pages) * ps:
                 if len(slot.pages) >= cap_pages or \
-                        (new := st.pool.alloc(1)) is None:
+                        (new := st.pool.alloc(
+                            1, rank=slot.sid // ecfg.slots)) is None:
                     self._finish(slot, "evicted")
                     continue
                 slot.pages.extend(new)
             runnable.append(slot)
         if not runnable:
             return                # state changed (evictions); re-plan
-        b = ecfg.slots
+        b = self.total_slots
         tokens = np.zeros((b, 1), np.int32)
         pos = np.zeros((b,), np.int32)
         tables = np.full((b, cap_pages), st.pool.trash_page, np.int32)
@@ -665,6 +757,8 @@ class Engine:
                  "block_tables": jnp.asarray(tables),
                  "pos": jnp.asarray(pos),
                  "active": jnp.asarray(active)}
+        if self.mesh is not None:
+            batch = jax.device_put(batch, self._batch_sh["decode"])
         try:
             logits, caches = self._run_compiled(
                 "decode", self._decode, self.params, batch, st.caches,
@@ -744,7 +838,8 @@ class Engine:
         if st is None:
             raise RuntimeError("no run state to snapshot")
         meta = {
-            "version": 2,
+            "version": 3,
+            "dp": self.dp,
             "ecfg": dataclasses.asdict(self.ecfg),
             "model": {"vocab_size": self.cfg.vocab_size,
                       "n_layers": self.cfg.n_layers,
@@ -783,7 +878,7 @@ class Engine:
                         "prefill_done": s.prefill_done,
                         "cur_token": s.cur_token,
                     } for s in st.sched.slots]},
-            "pool": {"free": list(st.pool._free),
+            "pool": {"free": st.pool.free_lists(),
                      "high_water": st.pool.high_water},
             "counters": {
                 "steps": st.steps, "prefill_steps": st.prefill_steps,
@@ -830,6 +925,12 @@ class Engine:
                 f"engine snapshot was taken with EngineConfig "
                 f"{meta['ecfg']}, this engine has {mine} — the config pins "
                 "the compiled step shapes and cannot change across resume")
+        snap_dp = meta.get("dp", 1)
+        if snap_dp != self.dp:
+            raise ValueError(
+                f"engine snapshot was taken with data-parallel size "
+                f"{snap_dp}, this engine has {self.dp} — the DP slot-pool "
+                "dimension pins the decode batch and page-pool layout")
         model_id = {"vocab_size": self.cfg.vocab_size,
                     "n_layers": self.cfg.n_layers,
                     "d_model": self.cfg.d_model, "family": self.cfg.family}
@@ -869,13 +970,15 @@ class Engine:
                     f"snapshot window {site!r} shape {arr.shape} != "
                     f"{self._windows[site].shape}")
             restored[site] = jnp.asarray(arr)
-        self._windows = restored
+        self._windows = self._place_windows(restored)
         self.calib = CalibrationState(windows=dict(restored))
 
-        # --- device caches ------------------------------------------------
+        # --- device caches (re-sharded onto the mesh when one is set) -----
         ecfg = self.ecfg
         shapes = jax.eval_shape(lambda: model.init_paged_caches(
-            self.cfg, ecfg.num_pages, ecfg.page_size))
+            self.cfg, ecfg.num_pages, ecfg.page_size, ranks=self.dp))
+        sh_flat = dict(ckpt.leaf_paths(self._cache_sh)) \
+            if self._cache_sh is not None else {}
         leaves = []
         for name, sh in ckpt.leaf_paths(shapes):
             arr = flat.get(f"caches/{name}")
@@ -886,7 +989,10 @@ class Engine:
                 raise ValueError(
                     f"cache leaf {name}: snapshot {arr.shape}/{arr.dtype} "
                     f"!= expected {sh.shape}/{sh.dtype}")
-            leaves.append(jnp.asarray(arr))
+            if name in sh_flat:
+                leaves.append(jax.device_put(np.asarray(arr), sh_flat[name]))
+            else:
+                leaves.append(jnp.asarray(arr))
         caches = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(shapes), leaves)
 
@@ -923,8 +1029,11 @@ class Engine:
                         pos=sd["pos"], prefill_done=sd["prefill_done"],
                         cur_token=sd["cur_token"])
             sched.slots[sd["sid"]] = slot
-        pool = PagePool(ecfg.num_pages, ecfg.page_size)
-        pool._free = list(meta["pool"]["free"])
+        pool = PagePool(ecfg.num_pages, ecfg.page_size, ranks=self.dp)
+        free = meta["pool"]["free"]
+        if meta["version"] < 3:       # v2: one flat free list (dp == 1)
+            free = [free]
+        pool.restore_free(free)
         pool.high_water = meta["pool"]["high_water"]
 
         c = meta["counters"]
@@ -1008,4 +1117,6 @@ class Engine:
             alerts=(len(self.sink.alerts) if self.sink is not None else 0),
             telemetry=(self.sink.summary()
                        if self.sink is not None else None),
+            devices=(self.mesh.size if self.mesh is not None else 1),
+            total_slots=self.total_slots,
         )

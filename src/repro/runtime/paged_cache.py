@@ -26,6 +26,11 @@ compiled step has no data-dependent control flow.  The trash page is never
 read (no block-table row references it as a *valid* position), so its
 nondeterministic contents never touch logits.
 
+Under a data-parallel mesh the pool grows a leading rank dimension
+(``PagePool(..., ranks=dp)``): the device layout stacks ``ranks`` copies of
+the ``num_pages + 1`` region and the global trash page is the last row of the
+last rank — see the ``PagePool`` docstring for the id arithmetic.
+
 Host side, ``PagePool`` is a deterministic free-list allocator (lowest free
 id first) that tracks the in-use high-water mark — the paged counterpart of
 the dense path's ``batch * max_len`` footprint, asserted smaller on ragged
@@ -71,39 +76,69 @@ class PagePool:
     Determinism matters: the scheduler invariant is that the same trace +
     seed produces identical per-request streams regardless of slot
     assignment order, and page ids feed the compiled steps' block tables.
+
+    With ``ranks > 1`` (the DP slot-pool dimension) the pool is partitioned
+    into per-rank regions: rank ``r`` owns global page ids
+    ``[r*(num_pages+1), r*(num_pages+1) + num_pages)`` — each rank's region
+    mirrors the single-rank device layout of ``num_pages`` real pages plus
+    one trash row, so rank 0's ids (and thus block tables, and thus streams)
+    are bit-identical to the ``ranks=1`` pool.  Allocation is per-rank
+    (``alloc(n, rank=r)``); a slot's pages never cross ranks.  Per-rank
+    trash rows below the last rank exist in the device layout but are
+    unused — only the single *global* trash page is ever written.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, ranks: int = 1):
         if num_pages < 1 or page_size < 1:
             raise ValueError(f"need >= 1 page of >= 1 token, got "
                              f"{num_pages} x {page_size}")
+        if ranks < 1:
+            raise ValueError(f"need >= 1 rank, got {ranks}")
         self.num_pages = num_pages
         self.page_size = page_size
-        self._free = list(range(num_pages))      # kept sorted ascending
+        self.ranks = ranks
+        self._stride = num_pages + 1
+        # Per-rank free lists, each kept sorted ascending (global ids).
+        self._free = [list(range(r * self._stride, r * self._stride + num_pages))
+                      for r in range(ranks)]
         self.high_water = 0
 
     @property
     def trash_page(self) -> int:
-        """Id of the write-sink page (allocated on device as page
-        ``num_pages``, beyond the pool)."""
-        return self.num_pages
+        """Id of the write-sink page: the LAST device row across all ranks
+        (``num_pages`` when ranks == 1, matching the legacy layout)."""
+        return self.ranks * self._stride - 1
+
+    @property
+    def total_pages(self) -> int:
+        """Aggregate real (non-trash) pages across all ranks."""
+        return self.ranks * self.num_pages
 
     @property
     def in_use(self) -> int:
-        return self.num_pages - len(self._free)
+        return self.total_pages - self.free_pages
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
 
-    def alloc(self, n: int) -> Optional[list[int]]:
-        """Take the n lowest free page ids, or None (nothing taken) if the
-        pool can't satisfy the request."""
+    def _rank_of(self, page: int) -> int:
+        rank = page // self._stride
+        if not (0 <= rank < self.ranks) or page % self._stride >= self.num_pages:
+            raise ValueError(f"free of out-of-range page {page}")
+        return rank
+
+    def alloc(self, n: int, rank: int = 0) -> Optional[list[int]]:
+        """Take the n lowest free page ids of ``rank``, or None (nothing
+        taken) if that rank's region can't satisfy the request."""
         if n < 0:
             raise ValueError(f"alloc({n})")
-        if n > len(self._free):
+        if not (0 <= rank < self.ranks):
+            raise ValueError(f"alloc on rank {rank} of {self.ranks}")
+        free = self._free[rank]
+        if n > len(free):
             return None
-        pages, self._free = self._free[:n], self._free[n:]
+        pages, self._free[rank] = free[:n], free[n:]
         self.high_water = max(self.high_water, self.in_use)
         return pages
 
@@ -111,11 +146,24 @@ class PagePool:
         if len(set(pages)) != len(pages):
             raise ValueError(f"duplicate page ids in free: {pages}")
         for p in pages:
-            if not (0 <= p < self.num_pages):
-                raise ValueError(f"free of out-of-range page {p}")
-            if p in self._free:
+            rank = self._rank_of(p)
+            if p in self._free[rank]:
                 raise ValueError(f"double free of page {p}")
-        self._free = sorted(self._free + list(pages))
+        for p in pages:
+            self._free[self._rank_of(p)].append(p)
+        for f in self._free:
+            f.sort()
+
+    def free_lists(self) -> list[list[int]]:
+        """Snapshot of the per-rank free lists (copies, for checkpointing)."""
+        return [list(f) for f in self._free]
+
+    def restore_free(self, lists: list[list[int]]) -> None:
+        """Restore free lists from a snapshot (inverse of ``free_lists``)."""
+        if len(lists) != self.ranks:
+            raise ValueError(f"snapshot has {len(lists)} rank free-lists, "
+                             f"pool has {self.ranks}")
+        self._free = [sorted(int(p) for p in f) for f in lists]
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:

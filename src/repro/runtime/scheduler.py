@@ -191,12 +191,15 @@ class SlotScheduler:
         return req
 
     def free_slot_id(self) -> Optional[int]:
+        return next(self.free_slot_ids(), None)
+
+    def free_slot_ids(self):
+        """All free slot ids in ``slot_order`` order.  Rank-partitioned
+        admission (DP slot pools) walks this until it finds a slot whose
+        rank's page region can satisfy the request."""
         order = range(self.n_slots) if self.slot_order == "fifo" \
             else range(self.n_slots - 1, -1, -1)
-        for sid in order:
-            if self.slots[sid] is None:
-                return sid
-        return None
+        return (sid for sid in order if self.slots[sid] is None)
 
     def place(self, sid: int, record: RequestRecord, pages: list[int]) -> Slot:
         assert self.slots[sid] is None

@@ -331,3 +331,67 @@ def test_page_pool_deterministic_alloc_free():
     with pytest.raises(ValueError):
         pool.free([3, 3])
     assert pool.trash_page == 6
+
+
+def test_page_pool_dp_ranks_partition_and_snapshot():
+    """ranks=dp partitions the pool: rank r owns ids offset by r*(P+1),
+    rank 0 is bit-identical to the ranks=1 pool, and only the single global
+    trash page exists (last device row)."""
+    pool = PagePool(num_pages=6, page_size=4, ranks=2)
+    assert pool.total_pages == 12 and pool.trash_page == 13
+    # rank 0 mirrors the single-rank layout exactly
+    assert pool.alloc(3, rank=0) == [0, 1, 2]
+    # rank 1's region starts beyond rank 0's trash row (id 6)
+    b = pool.alloc(2, rank=1)
+    assert b == [7, 8] and pool.in_use == 5
+    # per-rank exhaustion: rank 1 has 4 pages left, rank 0 has 3
+    assert pool.alloc(4, rank=0) is None
+    assert pool.alloc(4, rank=1) == [9, 10, 11, 12]
+    # free() infers the rank from the id; cross-region ids are rejected
+    pool.free(b)
+    assert pool.alloc(2, rank=1) == [7, 8]
+    with pytest.raises(ValueError, match="out-of-range"):
+        pool.free([6])                      # rank 0's trash row: not a page
+    with pytest.raises(ValueError):
+        pool.alloc(1, rank=2)
+    # free-list snapshot round-trips (what Engine.snapshot carries)
+    lists = pool.free_lists()
+    pool2 = PagePool(num_pages=6, page_size=4, ranks=2)
+    pool2.restore_free(lists)
+    assert pool2.free_lists() == lists
+    assert pool2.in_use == pool.in_use
+    with pytest.raises(ValueError, match="rank free-lists"):
+        PagePool(num_pages=6, page_size=4).restore_free(lists)
+
+
+# --------------------------------------------------------------------------
+# Acceptance (PR 9): mesh-sharded engine, (1,1) mesh == no mesh exactly
+# --------------------------------------------------------------------------
+def test_mesh_1x1_engine_bit_identical_to_meshless(served):
+    """The sharded engine on a trivial (1,1) mesh replays the fixed-seed
+    ragged trace bit-identically to the meshless engine — streams, finish
+    reasons, finish steps — with compiled_steps == 2 through the sharded
+    path (shard_map over size-1 axes, device_put'ed params/pools/batches)."""
+    from repro.launch.mesh import make_test_mesh
+
+    cfg, params, calib = served
+    reqs = _trace(cfg.vocab_size, n=6, seed=5, prompt=(3, 12), gen=(2, 7),
+                  max_gap=1)
+    ecfg = EngineConfig(slots=3, page_size=4, num_pages=32, chunk=4)
+    base = Engine(cfg, params, ecfg, calib=calib).run(reqs)
+    meshed_eng = Engine(cfg, params, ecfg, calib=calib,
+                        mesh=make_test_mesh(1, 1))
+    meshed = meshed_eng.run(reqs)
+    assert meshed.compiled_steps == 2
+    assert meshed.devices == 1 and meshed.total_slots == ecfg.slots
+    assert meshed.steps == base.steps
+    assert meshed.page_high_water == base.page_high_water
+    for a, b in zip(base.requests, meshed.requests):
+        assert a["tokens"] == b["tokens"], (a, b)
+        assert a["finish_reason"] == b["finish_reason"]
+        assert a["finished_step"] == b["finished_step"]
+    # snapshot layout is the meshless v3 layout (dp=1, one free list)
+    snap = meshed_eng.snapshot()
+    import json as _json
+    meta = _json.loads(np.asarray(snap["meta"], np.uint8).tobytes())
+    assert meta["dp"] == 1 and len(meta["pool"]["free"]) == 1

@@ -523,3 +523,137 @@ def test_restore_telemetry_without_sink_raises(served, baseline):
                 sink=MetricsSink(emitters=[MemoryEmitter()]))
     e2.restore(snap)
     assert e2.sink.snapshot() == e1.sink.snapshot()
+
+
+# --------------------------------------------------------------------------
+# PR 9 acceptance: the kill+restore contract survives mesh sharding.
+# Runs in a subprocess with 4 forced host devices (the main test process
+# keeps its single-device jax runtime).
+# --------------------------------------------------------------------------
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax
+import numpy as np
+
+from repro.configs import TDVMMPlan, get_config, smoke, tdvmm_rule
+from repro.launch.mesh import make_test_mesh
+from repro.models import model
+from repro.runtime import faultinject as fi
+from repro.runtime.engine import Engine, EngineConfig, FaultConfig, Request
+from repro.runtime.sla import SlaConfig
+from repro.runtime.telemetry import MetricsSink
+
+cfg = smoke(get_config("qwen1.5-0.5b")).replace(tdvmm_plan=TDVMMPlan(
+    rules=(tdvmm_rule("ffn.*", enabled=True, backend="jnp"),)))
+params = model.init_params(jax.random.PRNGKey(0), cfg)
+batch = {"inputs": jax.random.randint(
+    jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)}
+calib = model.calibrate(params, batch, cfg, max_len=48)
+
+# slots >= max concurrency of the trace: the DP pool's extra slots then never
+# change admission, so solo and meshed runs schedule identically and every
+# deterministic telemetry series must be bit-equal.
+ecfg = EngineConfig(slots=6, page_size=4, num_pages=32, chunk=4)
+sla = SlaConfig(aging_steps=8)
+
+rng = np.random.default_rng(0)
+reqs, arrival = [], 0
+for rid in range(4):
+    reqs.append(Request(
+        rid=rid,
+        prompt=tuple(int(t) for t in rng.integers(
+            0, cfg.vocab_size, rng.integers(3, 11))),
+        max_new_tokens=int(rng.integers(2, 6)),
+        arrival_step=arrival, priority=rid % 3))
+    arrival += int(rng.integers(0, 2))
+e_tok = Engine(cfg, params, ecfg, calib=calib).energy["energy_per_token_j"]
+reqs.append(Request(rid=900, prompt=tuple(range(1, 9)), max_new_tokens=20,
+                    deadline_steps=1, arrival_step=1))
+reqs.append(Request(rid=901, prompt=tuple(range(9, 15)), max_new_tokens=6,
+                    arrival_step=2, joule_budget=(6 + 2.5) * e_tok))
+
+
+def strip_latency(snap):
+    # step_latency_s is wall clock — the only nondeterministic series
+    snap = dict(snap)
+    snap["series"] = {k: v for k, v in snap["series"].items()
+                     if k != "step_latency_s"}
+    return snap
+
+
+def kill_restore(mesh, k):
+    base = Engine(cfg, params, ecfg, calib=calib, sla=sla,
+                  sink=MetricsSink(), mesh=mesh).run(reqs)
+    victim = Engine(cfg, params, ecfg, calib=calib, sla=sla,
+                    sink=MetricsSink(), mesh=mesh)
+    rep = victim.run(reqs, FaultConfig(
+        injector=fi.FaultInjector([fi.PreemptAt(k)])))
+    assert rep.preempted and rep.steps == k
+    survivor = Engine(cfg, params, ecfg, calib=calib, sla=sla,
+                      sink=MetricsSink(), mesh=mesh)
+    survivor.restore(victim.snapshot())
+    sink_at_restore = strip_latency(survivor.sink.snapshot())
+    resumed = survivor.resume()
+
+    def streams(r):
+        return [{"rid": q["rid"], "tokens": q["tokens"],
+                 "finish_reason": q["finish_reason"],
+                 "finished_step": q["finished_step"]} for q in r.requests]
+    return {
+        "base": streams(base), "resumed": streams(resumed),
+        "base_steps": base.steps, "resumed_steps": resumed.steps,
+        "rejected": resumed.rejected, "over_budget": resumed.over_budget,
+        "sink_at_restore": sink_at_restore,
+        "compiled": survivor.compiled_steps(),
+        "devices": resumed.devices, "total_slots": resumed.total_slots,
+    }
+
+
+probe = Engine(cfg, params, ecfg, calib=calib, sla=sla,
+               sink=MetricsSink()).run(reqs)
+k = probe.steps // 2
+out = {"solo": kill_restore(None, k),
+       "mesh": kill_restore(make_test_mesh(2, 2), k)}
+print("RESULTS::" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_2x2_kill_restore_matches_unsharded_restore():
+    """An engine killed mid-trace on a (2,2) mesh and restored from its
+    snapshot resumes bit-identically — and its streams, SLA queue outcomes,
+    and deterministic telemetry series are bit-equal to the *unsharded*
+    kill+restore of the same trace."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULTS::")][0]
+    res = __import__("json").loads(line.split("::", 1)[1])
+    solo, mesh = res["solo"], res["mesh"]
+    # restore contract holds on each layout independently
+    for r in (solo, mesh):
+        assert r["resumed"] == r["base"]
+        assert r["resumed_steps"] == r["base_steps"]
+        assert r["compiled"] == 2
+        assert r["rejected"] == 1 and r["over_budget"] == 1
+        by_rid = {q["rid"]: q for q in r["resumed"]}
+        assert by_rid[900]["finish_reason"] == "rejected"
+        assert by_rid[901]["finish_reason"] == "over_budget"
+    # ... and the meshed restore is bit-equal to the unsharded restore:
+    # streams, step count, SLA outcomes, telemetry series at restore point
+    assert mesh["resumed"] == solo["resumed"]
+    assert mesh["resumed_steps"] == solo["resumed_steps"]
+    assert mesh["sink_at_restore"] == solo["sink_at_restore"]
+    assert mesh["devices"] == 4 and mesh["total_slots"] == 12
+    assert solo["devices"] == 1 and solo["total_slots"] == 6
