@@ -30,7 +30,16 @@ Invariants (asserted by ``check_invariants`` in CI and ``benchmarks/run.py``):
   * telemetry (``serving_telemetry_spike``): an injected straggler step
     raises exactly one rolling-median spike alert at the injected step,
     with zero false positives on the clean warm trace (metrics stream to
-    ``BENCH_serving_metrics.jsonl``).
+    ``BENCH_serving_metrics.jsonl``);
+  * tracing (``serving_trace``): a traced replay streams bit-identically
+    to the untraced reference, its Chrome trace validates (balanced B/E
+    spans, monotonic timestamps per thread) with span boundaries matching
+    the report's finish steps, and the per-site attribution table sums
+    **bit-exactly** to the aggregate analog-ops / energy / fJ/Op counters
+    (the chained plan's saved inter-site I/O is explicit per site);
+  * tracing overhead (``serving_trace_overhead``): median tick latency
+    with tracing on <= 1.05x tracing off — span bookkeeping is host-side
+    and never touches the two compiled step programs.
 
 Wall timings route through ``benchmarks.common`` (warmup + median of
 repeats, spread recorded per row) so serving numbers carry the same
@@ -373,6 +382,98 @@ def run(n_requests: int = 10):
              "compiled_steps": rep5.compiled_steps,
          })
 
+    # --- tracing & per-site attribution: a traced replay must be
+    # bit-identical to the untraced reference, produce a schema-valid
+    # Chrome trace whose request span boundaries match the report's finish
+    # steps, and carry a per-site attribution table that sums bit-exactly
+    # (left-to-right in table order) to the aggregate energy counters.
+    from repro.runtime.trace import Tracer, validate_chrome_trace
+
+    e6 = Engine(cfg_u, params, ecfg, calib=calib_u, tracer=Tracer())
+    r6 = e6.run(trace)
+    traced_streams_match = all(
+        a["tokens"] == b["tokens"]
+        and a["finish_reason"] == b["finish_reason"]
+        and a["finished_step"] == b["finished_step"]
+        for a, b in zip(ref.requests, r6.requests))
+    counts = validate_chrome_trace(e6.tracer.chrome_trace())  # raises if bad
+    summ = r6.trace_summary
+    spans_match_report = all(
+        summ["requests"][str(r["rid"])]["finished_step"]
+        == r["finished_step"] for r in r6.requests)
+    attr = r6.site_attribution
+    ops_sum = e_sum = 0.0
+    for srow in attr["per_site"].values():       # left-to-right, table order
+        ops_sum += srow["ops"]
+        e_sum += srow["energy_j"]
+    site_sums_bit_exact = (
+        ops_sum == r6.analog_ops and e_sum == r6.analog_energy_j
+        and attr["fj_per_op"] == r6.fj_per_op
+        and attr["tokens"] == r6.tokens_priced)
+    attr_c = ch.site_attribution        # chained run: saved I/O per site
+    emit("serving_trace", 0.0,
+         f"{counts.get('B', 0)}B/{counts.get('E', 0)}E spans"
+         f"|site_sums_exact={site_sums_bit_exact}",
+         data={
+             "traced_streams_match": traced_streams_match,
+             "trace_event_counts": counts,
+             "trace_ticks": summ["ticks"],
+             "spans_match_report": spans_match_report,
+             "site_sums_bit_exact": site_sums_bit_exact,
+             "tokens_priced": r6.tokens_priced,
+             "fj_per_op_by_site": {s: v["fj_per_op"]
+                                   for s, v in attr["per_site"].items()},
+             "chained_io_saved_j": attr_c["io_saved_j"],
+             "chained_chains": attr_c["chains"],
+             "compiled_steps": r6.compiled_steps,
+         })
+
+    # --- trace overhead: the span bookkeeping is pure host-side work, so
+    # the traced engine's median tick must stay within 5% of untraced.
+    # The engine is deterministic, so tick i of every replay does identical
+    # work; each replay records its per-tick latencies through the engine's
+    # own MetricsSink series (both engines carry a sink, so the comparison
+    # isolates the tracer).  Runs alternate ABBA to cancel machine drift,
+    # and the per-tick-index MIN across replays filters scheduler/GC spikes
+    # before the medians are compared — a sequential A-then-B wall-clock
+    # timing would book both noise sources as tracing cost.
+    eng_off = Engine(cfg_u, params, ecfg, calib=calib_u, sink=MetricsSink())
+    eng_on = Engine(cfg_u, params, ecfg, calib=calib_u, sink=MetricsSink(),
+                    tracer=Tracer())
+    eng_off.run(trace)
+    eng_on.run(trace)                  # warm both jit caches
+
+    def _tick_latencies(eng) -> np.ndarray:
+        eng.sink = MetricsSink()       # fresh series per replay
+        eng.run(trace)
+        return np.asarray(list(eng.sink.series["step_latency_s"].values))
+
+    pairs = 5
+    offs, ons = [], []
+    for i in range(pairs):             # ABBA: off/on order flips each pair
+        order = (eng_off, eng_on) if i % 2 == 0 else (eng_on, eng_off)
+        for eng in order:
+            (offs if eng is eng_off else ons).append(_tick_latencies(eng))
+    n_ticks = min(min(map(len, offs)), min(map(len, ons)))
+    off_best = np.min([t[:n_ticks] for t in offs], axis=0)
+    on_best = np.min([t[:n_ticks] for t in ons], axis=0)
+    tick_off = float(np.median(off_best)) * 1e6
+    tick_on = float(np.median(on_best)) * 1e6
+    overhead_ratio = tick_on / max(tick_off, 1e-9)
+    spread_on = float(np.ptp(on_best)) * 1e6
+    emit("serving_trace_overhead",
+         Timing(tick_on, pairs, spread_on),
+         f"tick {tick_on:.1f}us traced vs {tick_off:.1f}us untraced "
+         f"(x{overhead_ratio:.3f} over {n_ticks} paired ticks)",
+         data={
+             "tick_us_tracing_off": tick_off,
+             "tick_us_tracing_on": tick_on,
+             "pairs": pairs,
+             "paired_ticks": n_ticks,
+             "overhead_ratio": overhead_ratio,
+             "overhead_bound": 1.05,
+         })
+
     # --- mesh scaling: DP slot-pool linearity + per-request bit-identity.
     # Runs in a subprocess with 4 forced host devices so this process keeps
     # its single-device jax runtime (same pattern as the multidev tests).
@@ -432,7 +533,10 @@ def run(n_requests: int = 10):
                  {k: m["compiled_steps"] for k, m in mres.items()},
          })
 
-    save_json("BENCH_serving.json", meta={"suite": "serving"})
+    from repro.kernels.tdvmm import ops as tdvmm_ops
+    save_json("BENCH_serving.json",
+              meta={"suite": "serving",
+                    "autotune": tdvmm_ops.autotune_report()})
 
 
 def _mesh_scaling_child(n_requests: int = 10) -> None:
@@ -515,6 +619,17 @@ def check_invariants(doc: dict) -> None:
     assert ts["injected_alerts"] == 1, ts            # exactly one spike
     assert ts["alert_at_injected_step"], ts          # at the right step
     assert ts["compiled_steps"] == 2, ts
+    tr = rows["serving_trace"]
+    assert tr["traced_streams_match"], tr            # tracing is pure
+    assert tr["spans_match_report"], tr              # spans == finish steps
+    assert tr["site_sums_bit_exact"], tr             # table sums == aggregate
+    assert tr["chained_io_saved_j"] > 0.0, tr        # chain savings explicit
+    assert tr["compiled_steps"] == 2, tr
+    ov = rows["serving_trace_overhead"]
+    assert ov["overhead_ratio"] <= ov["overhead_bound"], ov
+    assert ov.get("pairs", 0) >= 5, ov               # ABBA replay pairs
+    assert ov.get("paired_ticks", 0) >= 20, ov       # per-tick sample depth
+    assert doc.get("autotune", {}).get("platform"), doc.get("autotune")
     ms = rows["serving_mesh_scaling"]
     assert set(ms["meshes"]) == {"1x1", "2x1", "4x1"}, ms
     assert ms["mesh_1x1_bit_identical"], ms          # (1,1) == no mesh exactly

@@ -172,6 +172,16 @@ def clip_rates(clips: dict[str, np.ndarray]) -> dict[str, float]:
     return {site: float(v[0] / max(v[1], 1.0)) for site, v in clips.items()}
 
 
+def clip_rate_metrics(rates: dict[str, float]) -> dict[str, float]:
+    """Per-site clip rates as ``MetricsSink`` series names
+    (``clip_rate.<site>``), in sorted site order so the observation
+    sequence is deterministic — the naming contract between the engine's
+    live clip observation, ``AlertRule(metric="clip_rate.ffn.out", ...)``
+    wiring, and ``launch/serve.py --alert-on``."""
+    return {f"clip_rate.{site}": float(v)
+            for site, v in sorted(rates.items())}
+
+
 @contextlib.contextmanager
 def collect(pinned: Optional[dict[str, np.ndarray]] = None,
             ) -> Iterator[dict[str, np.ndarray]]:

@@ -229,6 +229,11 @@ def serving_energy_model(cfg, tile_n: int = 256, n_devices: int = 1) -> dict:
             "tiles_per_token": tiles * layers,
             "bits": sc.bits,
             "io_factor": io_factor,
+            # I/O conversion energy the chain removed at this site (the
+            # skipped ADC readout or DAC re-encode), made explicit so
+            # per-site attribution can show where the chained joules went.
+            "io_saved_per_token_j":
+                (1.0 - io_factor) * c.e_io_j * tiles * layers,
         }
         tot_ops += site_ops
         tot_e += site_e
@@ -241,6 +246,7 @@ def serving_energy_model(cfg, tile_n: int = 256, n_devices: int = 1) -> dict:
         "energy_per_token_j_per_device": tot_e / n_devices,
         "fj_per_op": (tot_e / tot_ops * 1e15) if tot_ops else 0.0,
         "per_site": per_site,
+        "chains": [list(pair) for pair in resolved.chains],
     }
 
 
@@ -251,6 +257,53 @@ def token_cost(energy: dict, n_tokens: int = 1) -> tuple[float, float]:
     ``joule_budget``.  ``energy`` is a ``serving_energy_model`` table."""
     return (energy["ops_per_token"] * n_tokens,
             energy["energy_per_token_j"] * n_tokens)
+
+
+def site_attribution(energy: dict, tokens: int) -> dict:
+    """Break ``tokens`` priced tokens down **by plan site** from a
+    ``serving_energy_model`` table — the ``EngineReport.site_attribution``
+    payload.
+
+    The engine accumulates one exact integer — ``tokens_priced``, the
+    number of tokens that went through ``token_cost`` — and this function
+    expands it into the per-site table.  The aggregate row is the plain
+    left-to-right float sum over ``per_site`` in table (resolved-plan)
+    order, so summing the site table reproduces the aggregate
+    **bit-exactly**: ``sum(per_site[*]["energy_j"])`` equals
+    ``energy_j`` with zero float slack, and the same for ``ops`` (which
+    are exact integers in f64 anyway: 2 * d_in * d_out * layers * tokens).
+    ``io_saved_j`` makes the time-domain chain's removed I/O conversions
+    explicit per chained site (0 everywhere on an unchained plan).
+    """
+    if tokens < 0:
+        raise ValueError(f"tokens must be >= 0, got {tokens}")
+    per_site: dict[str, dict] = {}
+    tot_ops = tot_e = tot_io = 0.0
+    for site, row in energy["per_site"].items():
+        ops = row["ops_per_token"] * tokens
+        e_j = row["energy_per_token_j"] * tokens
+        io_saved = row.get("io_saved_per_token_j", 0.0) * tokens
+        per_site[site] = {
+            "ops": ops,
+            "energy_j": e_j,
+            "fj_per_op": (e_j / ops * 1e15) if ops else 0.0,
+            "tiles": row["tiles_per_token"] * tokens,
+            "bits": row["bits"],
+            "io_factor": row["io_factor"],
+            "io_saved_j": io_saved,
+        }
+        tot_ops += ops
+        tot_e += e_j
+        tot_io += io_saved
+    return {
+        "tokens": int(tokens),
+        "ops": tot_ops,
+        "energy_j": tot_e,
+        "fj_per_op": (tot_e / tot_ops * 1e15) if tot_ops else 0.0,
+        "io_saved_j": tot_io,
+        "chains": [list(pair) for pair in energy.get("chains", [])],
+        "per_site": per_site,
+    }
 
 
 def request_energy_bounds(energy: dict, prompt_len: int,

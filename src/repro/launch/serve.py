@@ -183,15 +183,18 @@ def _fault_config(args, probe_batch=None, sink=None):
     if args.slow_at is not None:
         events.append(fi.SlowStep(args.slow_at, sleep_s=args.slow_sleep))
     drift = None
-    if args.drift_check_every > 0:
+    if args.drift_check_every > 0 or args.clip_observe_every > 0:
         if probe_batch is None:
-            raise SystemExit("--drift-check-every requires --calibrate "
-                             "(the probe compares against the pinned "
-                             "calibration windows)")
+            raise SystemExit("--drift-check-every/--clip-observe-every "
+                             "require --calibrate (the probe compares "
+                             "against the pinned calibration windows)")
         drift = DriftConfig(probe_batch=probe_batch,
-                            check_every=args.drift_check_every,
+                            # observe-only wiring leaves the full check
+                            # effectively off (clip alerts still stream)
+                            check_every=args.drift_check_every or 10**9,
                             clip_threshold=args.drift_clip,
-                            window_tol=args.drift_tol)
+                            window_tol=args.drift_tol,
+                            observe_every=args.clip_observe_every)
     hb = (fault.Heartbeat(args.heartbeat, args.heartbeat_every, sink=sink)
           if args.heartbeat else None)
     if not (events or drift or hb or args.snapshot_dir):
@@ -237,6 +240,10 @@ def serve_engine(cfg, args, seed: int = 0):
         from repro.runtime.sla import SlaConfig
         sla = SlaConfig(aging_steps=args.aging_steps)
     sink = _make_sink(args)
+    tracer = None
+    if args.trace_out:
+        from repro.runtime.trace import Tracer
+        tracer = Tracer()
 
     rng = np.random.default_rng(seed)
     lo, hi = max(1, args.prompt_len // 4), args.prompt_len + 1
@@ -278,14 +285,14 @@ def serve_engine(cfg, args, seed: int = 0):
             k.split("/", 1)[1]: jnp.asarray(v) for k, v in flat.items()
             if k.startswith("windows/")})
         engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink,
-                        mesh=mesh)
+                        mesh=mesh, tracer=tracer)
         engine.restore(flat)
         print(f"[serve] resumed from snapshot step {step} "
               f"({args.snapshot_dir})")
         rep = engine.resume(fc)
     else:
         engine = Engine(cfg, params, ecfg, calib=calib, sla=sla, sink=sink,
-                        mesh=mesh)
+                        mesh=mesh, tracer=tracer)
         rep = engine.run(reqs, fc)
     if rep.preempted:
         print(f"[serve] PREEMPTED at step {rep.steps}; snapshot: "
@@ -321,6 +328,17 @@ def serve_engine(cfg, args, seed: int = 0):
             print(f"[serve] metrics streamed to {args.metrics_jsonl}")
         for em in sink.emitters:
             em.close()
+    if tracer is not None:
+        import json
+        from pathlib import Path
+        doc = tracer.chrome_trace()
+        Path(args.trace_out).write_text(json.dumps(doc))
+        summ = rep.trace_summary or {}
+        pct = (summ.get("percentiles") or {}).get("total_us", {})
+        print(f"[serve] trace: {len(doc['traceEvents'])} events over "
+              f"{summ.get('ticks', 0)} ticks -> {args.trace_out} "
+              f"(request total p50 {pct.get('p50', 0.0):.0f} us / "
+              f"p95 {pct.get('p95', 0.0):.0f} us; open in Perfetto)")
     for r in rep.requests[:4]:
         print(f"[serve]   req {r['rid']}: {r['finish_reason']} "
               f"tokens={r['tokens'][:8]}")
@@ -420,12 +438,34 @@ def main():
                     help="max |log window ratio| before recalibrating")
     ap.add_argument("--drift-clip", type=float, default=0.01,
                     help="max readout clip rate before recalibrating")
+    ap.add_argument("--clip-observe-every", type=int, default=0,
+                    help="stream per-site readout clip rates into the "
+                         "telemetry sink every N engine steps as "
+                         "clip_rate.<site> series (0 = off; requires "
+                         "--calibrate and analog sites, e.g. "
+                         "--tdvmm 'ffn.*'; pair with --alert-on "
+                         "'clip_rate.ffn.out:threshold:limit=0.01')")
+    ap.add_argument("--tdvmm", default=None, metavar="PATTERN",
+                    help="enable analog TD-VMM at the plan sites matching "
+                         "PATTERN (e.g. 'ffn.*'); stock arch configs ship "
+                         "all-digital, so clip_rate series and per-site "
+                         "attribution need this (jnp backend: bit-exact "
+                         "with pallas, no interpret-mode slowdown on CPU)")
+    ap.add_argument("--trace-out", default=None,
+                    help="engine path: write a Chrome-trace/Perfetto JSON "
+                         "of the whole request lifecycle here (spans ride "
+                         "engine snapshots, so a --resume run continues "
+                         "the same trace)")
     ap.add_argument("--report-json", default=None,
                     help="engine path: write the full EngineReport here")
     args = ap.parse_args()
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_cfg(cfg)
+    if args.tdvmm:
+        from repro.configs import TDVMMPlan, tdvmm_rule
+        cfg = cfg.replace(tdvmm_plan=TDVMMPlan(rules=(
+            tdvmm_rule(args.tdvmm, enabled=True, backend="jnp"),)))
     if args.kv_int8:
         from repro.models import attention
         attention.set_kv_cache_int8(True)

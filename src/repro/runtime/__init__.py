@@ -1,2 +1,7 @@
 """Serving/runtime subsystem: fault tolerance, paged KV cache, slot
-scheduler, and the continuous-batching engine."""
+scheduler, telemetry, request-level tracing, and the continuous-batching
+engine."""
+
+from repro.runtime.trace import Tracer, validate_chrome_trace
+
+__all__ = ["Tracer", "validate_chrome_trace"]

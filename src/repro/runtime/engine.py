@@ -68,6 +68,20 @@ enforcement.  Both are host-side bookkeeping between the two compiled
 steps (``compiled_steps == 2`` holds), both ride in ``snapshot()``, and
 with both disabled every existing trace replays bit-identically.
 
+Tracing & per-site attribution (``runtime/trace.py`` / PR 10): pass
+``tracer=`` to record the whole request lifecycle as Chrome-trace spans
+(requests as threads, engine ticks as slices, counter tracks) stamped on a
+cumulative engine clock that rides ``snapshot()`` (meta v4) — a killed,
+restored engine continues the SAME trace file seamlessly.  Every report
+carries ``site_attribution``: the run's priced tokens broken down by plan
+site from ``core.energy.site_attribution``, whose per-site table sums
+bit-exactly to the aggregate ``analog_ops``/``analog_energy_j``/``fj_per_op``
+columns, with chained sites' skipped I/O conversions shown explicitly.
+With ``DriftConfig.observe_every`` and a sink, per-site readout clip rates
+stream as live ``clip_rate.<site>`` series for ``AlertRule`` wiring.  All
+of it is host-side, between the two compiled steps: traced runs are
+bit-identical to untraced and ``compiled_steps == 2`` holds.
+
 Mesh-sharded serving: pass ``mesh=`` (axes ``data`` x ``model``) and the two
 compiled steps run tensor/expert/data-parallel — params take the training
 ``launch/sharding._rules`` TP layout (DP replicated: no ZeRO gathers at
@@ -95,7 +109,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import energy as energy_model
-from repro.core.calibration import CalibrationState, apply_calibration
+from repro.core.calibration import (CalibrationState, apply_calibration,
+                                    clip_rate_metrics)
+from repro.kernels.tdvmm import ops as tdvmm_ops
 from repro.launch import meshctx
 from repro.launch import sharding as shardlib
 from repro.launch.mesh import axis_info
@@ -141,13 +157,21 @@ class DriftConfig:
     Drift is declared when any site clips more than ``clip_threshold`` of
     its |z| mass against its pinned window, or any window moved by more than
     ``window_tol`` in |log ratio|; with ``recalibrate`` the fresh
-    ``CalibrationState`` is hot-swapped in between steps (no recompile)."""
+    ``CalibrationState`` is hot-swapped in between steps (no recompile).
+
+    ``observe_every`` > 0 additionally streams per-site readout clip rates
+    into the engine's ``MetricsSink`` as ``clip_rate.<site>`` series every
+    that many steps (same eager probe, never a third compiled program) —
+    typically much more often than ``check_every``, so an ``AlertRule`` on
+    a single site's clip rate fires minutes before the full drift check
+    would recalibrate."""
     probe_batch: dict
     check_every: int = 16
     clip_threshold: float = 0.01
     window_tol: float = 0.25
     max_len: int = 0
     recalibrate: bool = True
+    observe_every: int = 0
 
 
 @dataclasses.dataclass
@@ -215,6 +239,11 @@ class EngineReport:
     # --- mesh-sharded serving (PR 9) --------------------------------------
     devices: int = 1              # mesh size (1 = meshless engine)
     total_slots: int = 0          # dp_size * ecfg.slots aggregate decode width
+    # --- tracing & per-site attribution (PR 10) ---------------------------
+    tokens_priced: int = 0        # exact token count behind the energy totals
+    site_attribution: Optional[dict] = None   # energy.site_attribution table
+    trace_summary: Optional[dict] = None      # Tracer.summary() when tracing
+    autotune: Optional[dict] = None           # kernels.tdvmm autotune report
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -242,9 +271,11 @@ class RunState:
     over_budget: int = 0
     analog_ops: float = 0.0       # running totals (order-exact for the
     analog_energy_j: float = 0.0  # fj_per_op telemetry stream)
+    tokens_priced: int = 0        # exact count of tokens through _account
     step_retries: int = 0
     recalibrations: int = 0
     last_drift_check: int = 0
+    last_clip_obs: int = 0
     wall_s: float = 0.0
     util_samples: list = dataclasses.field(default_factory=list)
     drift_events: list = dataclasses.field(default_factory=list)
@@ -269,7 +300,8 @@ class Engine:
                  calib: Optional[CalibrationState] = None,
                  sla: Optional[sla_policy.SlaConfig] = None,
                  sink: Optional[Any] = None,
-                 mesh: Optional[Any] = None):
+                 mesh: Optional[Any] = None,
+                 tracer: Optional[Any] = None):
         if cfg.family not in ("dense", "moe", "vlm", "audio"):
             raise NotImplementedError(
                 f"engine supports attention families, not {cfg.family!r} "
@@ -284,6 +316,7 @@ class Engine:
         self.calib = calib
         self.sla = sla
         self.sink = sink
+        self.tracer = tracer
 
         # --- mesh: TP shards each step's math, DP multiplies the slot pool.
         # The scheduler stays host-side and meshless — slot id =
@@ -440,6 +473,8 @@ class Engine:
             self.cfg, ecfg.num_pages, ecfg.page_size, ranks=self.dp)
         if self._cache_sh is not None:
             caches = jax.device_put(caches, self._cache_sh)
+        if self.tracer is not None:
+            self.tracer.attach(requests)
         self._st = RunState(
             requests=list(requests),
             records={r.rid: RequestRecord(r) for r in requests},
@@ -482,6 +517,14 @@ class Engine:
                 t1 = time.time()
                 alive = self.tick()
                 dt = time.time() - t1
+                if self.tracer is not None:
+                    self.tracer.tick_done(st.steps, dt, {
+                        "queue_depth": len(st.sched.pending),
+                        "active_slots": len(st.sched.occupied()),
+                        "pages_in_use": st.pool.in_use,
+                        "fj_per_op": (st.analog_energy_j / st.analog_ops
+                                      * 1e15) if st.analog_ops else 0.0,
+                    })
                 if self.sink is not None:
                     self._observe_tick(dt)
                 if fc is not None:
@@ -489,6 +532,11 @@ class Engine:
                         fc.monitor.record(st.steps, dt)
                     if fc.heartbeat is not None:
                         fc.heartbeat.beat(st.steps)
+                    if (fc.drift is not None and fc.drift.observe_every
+                            and self.sink is not None and st.steps -
+                            st.last_clip_obs >= fc.drift.observe_every):
+                        st.last_clip_obs = st.steps
+                        self._observe_clips(fc.drift)
                     if (fc.drift is not None and st.steps -
                             st.last_drift_check >= fc.drift.check_every):
                         st.last_drift_check = st.steps
@@ -498,6 +546,8 @@ class Engine:
         except fault.Preempted:
             st.preempted = True
             st.wall_s += time.time() - t0
+            if self.sink is not None:
+                self.sink.flush()        # metrics land before the snapshot
             if fc is not None and fc.snapshot_dir is not None:
                 from repro.checkpoint import checkpoint as ckpt
                 path = ckpt.save_engine_snapshot(
@@ -538,6 +588,10 @@ class Engine:
         ecfg = self.ecfg
         if st.steps > ecfg.max_steps:
             raise RuntimeError(f"engine exceeded max_steps={ecfg.max_steps}")
+        if self.tracer is not None:
+            for req in st.sched.pending:     # open `queued` spans (idempotent)
+                if req.arrival_step <= st.steps:
+                    self.tracer.note_arrival(req.rid, st.steps)
         self._admit()
         occupied = st.sched.occupied()
         prefilling = [s for s in occupied if s.prefilling]
@@ -554,6 +608,8 @@ class Engine:
                 raise RuntimeError(
                     "scheduler stall: pending request cannot be admitted "
                     "into an empty engine (page budget inconsistency)")
+            if self.tracer is not None:
+                self.tracer.mark_idle(st.steps, nxt)
             st.idle_steps += nxt - st.steps
             st.steps = nxt
             return True
@@ -581,6 +637,8 @@ class Engine:
                     rec.finish_reason = "rejected"
                     rec.reject_reason = verdict
                     st.rejected += 1
+                    if self.tracer is not None:
+                        self.tracer.finished(req.rid, st.steps, "rejected")
                     continue
             need = pages_for(len(req.prompt), ecfg.page_size)
             if need > cap_pages:
@@ -590,6 +648,8 @@ class Engine:
                 rec.admitted_step = rec.finished_step = st.steps
                 rec.finish_reason = "evicted"
                 st.evictions += 1
+                if self.tracer is not None:
+                    self.tracer.finished(req.rid, st.steps, "evicted")
                 continue
             # Walk free slots in slot_order; a slot's DP rank decides which
             # page region serves it (slot id = dp_rank * slots + local), so
@@ -607,11 +667,16 @@ class Engine:
             rec = st.records[req.rid]
             rec.admitted_step = st.steps
             st.sched.place(sid, rec, pages)
+            if self.tracer is not None:
+                self.tracer.admitted(req.rid, st.steps, sid,
+                                     sid // self.ecfg.slots, len(pages))
 
     def _finish(self, slot: Slot, reason: str) -> None:
         st = self._st
         slot.record.finish_reason = reason
         slot.record.finished_step = st.steps
+        if self.tracer is not None:
+            self.tracer.finished(slot.record.request.rid, st.steps, reason)
         if reason == "evicted":
             st.evictions += 1
         elif reason == "failed":
@@ -650,6 +715,7 @@ class Engine:
         rec.analog_energy_j += e_j
         st.analog_ops += ops
         st.analog_energy_j += e_j
+        st.tokens_priced += n         # exact int behind site_attribution
 
     def _run_compiled(self, kind: str, fn, *args):
         """The retry boundary around one compiled step.  Injected faults
@@ -715,6 +781,10 @@ class Engine:
         slot.pos += n
         st.prompt_tokens += n
         self._account(slot.record, n)
+        if self.tracer is not None:
+            self.tracer.mark_chunk(
+                slot.record.request.rid, start // ecfg.chunk, n,
+                done=not slot.prefilling, step=st.steps)
         if not slot.prefilling:
             row_logits = logits[0, 0]
             tok = int(jnp.argmax(row_logits[:vocab]))
@@ -777,6 +847,9 @@ class Engine:
             return
         st.caches = caches
         st.decode_steps += 1
+        if self.tracer is not None:
+            self.tracer.mark_decode(
+                [s.record.request.rid for s in runnable], st.steps)
         st.util_samples.append(len(runnable) / b)
         toks = np.asarray(jnp.argmax(logits[:, 0, :vocab], axis=-1))
         nans = np.asarray(jnp.isnan(logits[:, 0]).any(axis=-1))
@@ -791,6 +864,20 @@ class Engine:
     # ------------------------------------------------------------------
     # Drift detection + online recalibration
     # ------------------------------------------------------------------
+    def _observe_clips(self, dc: DriftConfig) -> None:
+        """Stream per-site readout clip rates into the sink as live
+        ``clip_rate.<site>`` series (``DriftConfig.observe_every``).  Same
+        eager ``drift_probe`` capture as the full drift check — host-side,
+        never a third compiled program — but run far more often and with
+        no recalibration decision attached, so a per-site ``AlertRule``
+        sees a rising clip rate well before ``check_every`` comes due."""
+        st = self._st
+        _, clips = model.drift_probe(
+            self.params, dc.probe_batch, self.cfg,
+            self.pinned_calibration(), dc.max_len)
+        for name, v in clip_rate_metrics(clips).items():
+            self.sink.observe(name, v, st.steps)
+
     def _drift_check(self, dc: DriftConfig) -> None:
         st = self._st
         pinned = self.pinned_calibration()
@@ -805,6 +892,8 @@ class Engine:
                               st.steps)
             self.sink.observe("drift_max_log_ratio", float(max_dev),
                               st.steps)
+            for name, v in clip_rate_metrics(clips).items():
+                self.sink.observe(name, v, st.steps)
         drifted = max_clip > dc.clip_threshold or max_dev > dc.window_tol
         if not drifted:
             return
@@ -838,7 +927,7 @@ class Engine:
         if st is None:
             raise RuntimeError("no run state to snapshot")
         meta = {
-            "version": 3,
+            "version": 4,
             "dp": self.dp,
             "ecfg": dataclasses.asdict(self.ecfg),
             "model": {"vocab_size": self.cfg.vocab_size,
@@ -849,6 +938,8 @@ class Engine:
                     if self.sla is not None else None),
             "telemetry": (self.sink.snapshot()
                           if self.sink is not None else None),
+            "trace": (self.tracer.snapshot()
+                      if self.tracer is not None else None),
             "requests": [
                 {"rid": r.rid, "prompt": list(r.prompt),
                  "max_new_tokens": r.max_new_tokens,
@@ -891,9 +982,11 @@ class Engine:
                 "over_budget": st.over_budget,
                 "analog_ops": st.analog_ops,
                 "analog_energy_j": st.analog_energy_j,
+                "tokens_priced": st.tokens_priced,
                 "step_retries": st.step_retries,
                 "recalibrations": st.recalibrations,
                 "last_drift_check": st.last_drift_check,
+                "last_clip_obs": st.last_clip_obs,
                 "wall_s": st.wall_s,
                 "util_samples": [float(u) for u in st.util_samples],
                 "drift_events": st.drift_events,
@@ -953,6 +1046,14 @@ class Engine:
                     "engine has no sink — construct it with sink= to "
                     "resume the metric series and alert history")
             self.sink.restore(snap_telemetry)
+        snap_trace = meta.get("trace")
+        if snap_trace is not None:
+            if self.tracer is None:
+                raise ValueError(
+                    "engine snapshot carries trace state but this engine "
+                    "has no tracer — construct it with tracer= to resume "
+                    "the span stream as one continuous trace")
+            self.tracer.restore(snap_trace)
 
         # --- windows (the pinned state at snapshot time, which may be a
         # recalibrated one — restoring it is what keeps resume bit-exact) ---
@@ -1037,6 +1138,14 @@ class Engine:
         pool.high_water = meta["pool"]["high_water"]
 
         c = meta["counters"]
+        # tokens_priced landed in meta v4; older snapshots reconstruct it
+        # exactly from the (integer-valued) op totals.
+        opt = self.energy["ops_per_token"]
+        tokens_priced = c.get("tokens_priced")
+        if tokens_priced is None:
+            ops_total = c.get("analog_ops",
+                              sum(r.analog_ops for r in records.values()))
+            tokens_priced = int(round(ops_total / opt)) if opt else 0
         self._st = RunState(
             requests=requests, records=records, sched=sched, pool=pool,
             caches=caches, steps=c["steps"],
@@ -1052,9 +1161,11 @@ class Engine:
             analog_energy_j=c.get(
                 "analog_energy_j",
                 sum(r.analog_energy_j for r in records.values())),
+            tokens_priced=tokens_priced,
             step_retries=c["step_retries"],
             recalibrations=c["recalibrations"],
-            last_drift_check=c["last_drift_check"], wall_s=c["wall_s"],
+            last_drift_check=c["last_drift_check"],
+            last_clip_obs=c.get("last_clip_obs", 0), wall_s=c["wall_s"],
             util_samples=list(c["util_samples"]),
             drift_events=list(c["drift_events"]),
         )
@@ -1068,8 +1179,14 @@ class Engine:
             raise RuntimeError("no run state to report")
         fc = self._fault
         records, requests = st.records, st.requests
-        tot_ops = sum(r.analog_ops for r in records.values())
-        tot_e = sum(r.analog_energy_j for r in records.values())
+        if self.sink is not None:
+            self.sink.flush()     # buffered emitters reach disk with report
+        # Aggregates are DERIVED from the per-site attribution table (the
+        # same exact tokens_priced count expanded per site), so the site
+        # table sums bit-exactly to analog_ops/analog_energy_j/fj_per_op.
+        attr = energy_model.site_attribution(self.energy, st.tokens_priced)
+        tot_ops = attr["ops"]
+        tot_e = attr["energy_j"]
         # Deadline outcomes over ADMITTED finished requests: a rejection is
         # admission control working (counted in `rejected`), not a miss.
         hits = [r.deadline_hit for r in records.values()
@@ -1119,4 +1236,9 @@ class Engine:
                        if self.sink is not None else None),
             devices=(self.mesh.size if self.mesh is not None else 1),
             total_slots=self.total_slots,
+            tokens_priced=st.tokens_priced,
+            site_attribution=attr,
+            trace_summary=(self.tracer.summary()
+                           if self.tracer is not None else None),
+            autotune=tdvmm_ops.autotune_report(),
         )

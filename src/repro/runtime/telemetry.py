@@ -36,6 +36,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import json
+import os
 from collections import deque
 from pathlib import Path
 from typing import Optional
@@ -196,6 +197,9 @@ class MemoryEmitter:
     def on_alert(self, alert: Alert) -> None:
         self.alerts.append(alert)
 
+    def flush(self) -> None:
+        pass
+
     def close(self) -> None:
         pass
 
@@ -224,6 +228,15 @@ class JsonlEmitter:
         fh.write(json.dumps({"t": "alert", **alert.to_json()}) + "\n")
         fh.flush()                       # alerts are worth a flush
 
+    def flush(self) -> None:
+        """Durability point: flush + fsync so the last tick's metrics
+        survive a SIGKILL right after a preemption snapshot (the engine
+        calls this from ``report()`` and from the snapshot-and-exit
+        path)."""
+        if self._fh is not None:
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+
     def close(self) -> None:
         if self._fh is not None:
             self._fh.close()
@@ -243,6 +256,9 @@ class StdoutEmitter:
         print(f"{self.prefix} ALERT {alert.kind} {alert.metric} "
               f"step={alert.step}: value {alert.value:.4g} > "
               f"limit {alert.limit:.4g}")
+
+    def flush(self) -> None:
+        pass
 
     def close(self) -> None:
         pass
@@ -299,6 +315,16 @@ class MetricsSink:
             for em in self.emitters:
                 em.on_alert(alert)
         return fired
+
+    def flush(self) -> None:
+        """Push buffered emitter output to durable storage (fsync for
+        ``JsonlEmitter``).  Called by the engine on every ``report()`` and
+        on the preemption snapshot-and-exit path, so the final tick's
+        metrics are never lost to a buffered file handle on SIGTERM."""
+        for em in self.emitters:
+            fn = getattr(em, "flush", None)
+            if fn is not None:
+                fn()
 
     def alerts_for(self, metric: str, kind: Optional[str] = None
                    ) -> list[Alert]:

@@ -1,0 +1,425 @@
+"""Request-level tracing & per-site analog attribution.
+
+Hard contracts under test:
+
+  * a traced engine run is **bit-identical** to an untraced one (streams,
+    finish reasons, finish steps) with ``compiled_steps == 2`` — tracing is
+    pure host-side bookkeeping between the two compiled programs;
+  * the exported Chrome trace is schema-valid (balanced stack-disciplined
+    ``B``/``E`` spans, monotonic timestamps per (pid, tid), int pid/tid)
+    and its span boundaries / finish markers carry exactly the engine step
+    ids ``EngineReport`` reports;
+  * ``EngineReport.site_attribution`` sums **bit-exactly**: the plain
+    left-to-right sum over the per-site table reproduces ``analog_ops`` /
+    ``analog_energy_j`` / ``fj_per_op`` with zero float slack, and a
+    chained plan's saved inter-site I/O is explicit per site;
+  * the tracer's span/clock state rides ``Engine.snapshot()`` (meta v4):
+    kill + restore + resume yields ONE continuous schema-valid trace;
+  * ``DriftConfig.observe_every`` streams per-site ``clip_rate.<site>``
+    series into the sink, so a threshold ``AlertRule`` fires on injected
+    drift BEFORE any recalibration runs — and stays quiet on a clean run;
+  * ``JsonlEmitter`` durability: ``report()`` and the preemption
+    snapshot-and-exit path flush+fsync, so the JSONL is complete on disk
+    without ``close()``.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import TDVMMPlan, get_config, smoke, tdvmm_rule
+from repro.core import energy as energy_model
+from repro.models import model
+from repro.runtime import faultinject as fi
+from repro.runtime.engine import (DriftConfig, Engine, EngineConfig,
+                                  FaultConfig, Request)
+from repro.runtime.telemetry import AlertRule, JsonlEmitter, MetricsSink
+from repro.runtime.trace import (ENGINE_PID, REQUEST_PID, Tracer,
+                                 validate_chrome_trace)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _f32_mode():
+    # test_tdcore flips jax_enable_x64 process-wide at import time, and
+    # pytest collection imports every module before any test runs — so in
+    # a full-suite run this module would execute under x64.  The drift
+    # clip-rate constants below are calibrated against the engine's
+    # default-f32 numerics; pin the flag for this module and restore.
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", False)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+def _cfg():
+    return smoke(get_config("qwen1.5-0.5b")).replace(tdvmm_plan=TDVMMPlan(
+        rules=(tdvmm_rule("ffn.*", enabled=True, backend="jnp"),)))
+
+
+ECFG = EngineConfig(slots=3, page_size=4, num_pages=32, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = _cfg()
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"inputs": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)}
+    calib = model.calibrate(params, batch, cfg, max_len=48)
+    return cfg, params, calib, batch
+
+
+def _trace(vocab, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs, arrival = [], 0
+    for rid in range(n):
+        reqs.append(Request(
+            rid=rid,
+            prompt=tuple(int(t) for t in rng.integers(
+                0, vocab, rng.integers(3, 11))),
+            max_new_tokens=int(rng.integers(2, 6)),
+            arrival_step=arrival))
+        arrival += int(rng.integers(0, 2))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def traced(served):
+    """(requests, untraced report, traced report, the tracer)."""
+    cfg, params, calib, _ = served
+    reqs = _trace(cfg.vocab_size)
+    plain = Engine(cfg, params, ECFG, calib=calib).run(reqs)
+    tr = Tracer()
+    rep = Engine(cfg, params, ECFG, calib=calib, tracer=tr).run(reqs)
+    return reqs, plain, rep, tr
+
+
+def _same_streams(a, b):
+    for ra, rb in zip(a.requests, b.requests):
+        assert ra["tokens"] == rb["tokens"], (ra, rb)
+        assert ra["finish_reason"] == rb["finish_reason"], (ra, rb)
+        assert ra["finished_step"] == rb["finished_step"], (ra, rb)
+    assert a.steps == b.steps
+
+
+# ==========================================================================
+# validate_chrome_trace: schema rejection cases (pure unit)
+# ==========================================================================
+def test_validator_rejects_malformed_documents():
+    ok = {"ph": "X", "name": "t", "pid": 0, "tid": 0, "ts": 1.0, "dur": 2.0}
+    with pytest.raises(ValueError, match="no traceEvents"):
+        validate_chrome_trace({"traceEvents": []})
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_chrome_trace([{**ok, "ph": "Z"}])
+    with pytest.raises(ValueError, match="pid/tid must be ints"):
+        validate_chrome_trace([{**ok, "tid": "r0"}])
+    with pytest.raises(ValueError, match="pid/tid must be ints"):
+        validate_chrome_trace([{**ok, "pid": True}])
+    with pytest.raises(ValueError, match="ts must be numeric"):
+        validate_chrome_trace([{**ok, "ts": None}])
+    with pytest.raises(ValueError, match="regresses"):
+        validate_chrome_trace([ok, {**ok, "ts": 0.5}])
+    with pytest.raises(ValueError, match="needs dur"):
+        validate_chrome_trace([{**ok, "dur": -1.0}])
+    b = {"ph": "B", "name": "s", "pid": 1, "tid": 7, "ts": 0}
+    with pytest.raises(ValueError, match="E without open B"):
+        validate_chrome_trace([{**b, "ph": "E"}])
+    with pytest.raises(ValueError, match="does not match open B"):
+        validate_chrome_trace([b, {**b, "ph": "E", "name": "other",
+                                   "ts": 1}])
+    with pytest.raises(ValueError, match="unbalanced B spans"):
+        validate_chrome_trace([b])
+    # distinct tids are independent tracks: same names, interleaved, fine
+    counts = validate_chrome_trace([
+        b, {**b, "tid": 8}, {**b, "tid": 8, "ph": "E", "ts": 1},
+        {**b, "ph": "E", "ts": 2}])
+    assert counts == {"B": 2, "E": 2}
+
+
+def test_tracer_soft_cap_drops_only_droppable_events():
+    tr = Tracer(max_events=4)          # 3 metadata events pre-fill it
+    tr.note_arrival(0, step=0)         # span boundaries always land
+    tr.admitted(0, step=0, sid=0, dp_rank=0, pages=1)
+    tr.mark_chunk(0, index=0, tokens=4, done=True, step=0)
+    tr.tick_done(0, dt=0.01, counters={"queue_depth": 0.0})
+    tr.finished(0, step=1, reason="completed")
+    tr.tick_done(1, dt=0.01)
+    assert tr.dropped >= 2             # the X slice + the counter sample
+    counts = validate_chrome_trace(tr.chrome_trace())
+    assert counts["B"] == counts["E"] == 3 and "X" not in counts
+    with pytest.raises(ValueError, match="max_events"):
+        Tracer(max_events=0)
+
+
+def test_tracer_snapshot_json_round_trip_and_restore_guard():
+    a = Tracer()
+    a.note_arrival(3, step=0)
+    a.admitted(3, step=1, sid=0, dp_rank=0, pages=2)
+    a.tick_done(1, dt=0.5)
+    b = Tracer()
+    b.restore(json.loads(json.dumps(a.snapshot())))   # plain-JSON payload
+    assert b.events == a.events and b.clock_us == a.clock_us
+    # the restored tracer continues the SAME open span stack
+    b.finished(3, step=2, reason="completed")
+    assert validate_chrome_trace(b.chrome_trace())["E"] == \
+        validate_chrome_trace(a.chrome_trace())["E"]
+    with pytest.raises(ValueError, match="not a Tracer snapshot"):
+        Tracer().restore({"bogus": 1})
+
+
+# ==========================================================================
+# Traced engine run: purity, schema, span/report cross-checks
+# ==========================================================================
+def test_traced_run_bit_identical_with_two_compiled_steps(traced):
+    _, plain, rep, _ = traced
+    _same_streams(plain, rep)
+    assert rep.compiled_steps == 2
+    assert plain.trace_summary is None and rep.trace_summary is not None
+
+
+def test_trace_schema_valid_and_spans_match_report(traced):
+    _, _, rep, tr = traced
+    doc = tr.chrome_trace()
+    counts = validate_chrome_trace(doc)
+    assert counts["B"] == counts["E"] > 0
+    # finish markers carry exactly the report's finish steps
+    finish = {e["tid"]: (e["name"], e["args"]["step"])
+              for e in doc["traceEvents"]
+              if e.get("pid") == REQUEST_PID and e.get("ph") == "i"}
+    for r in rep.requests:
+        name, step = finish[r["rid"]]
+        assert name == f"finish:{r['finish_reason']}", (r, name)
+        assert step == r["finished_step"], (r, step)
+    # (almost) every engine tick produced an X slice — the final drain
+    # tick may legitimately run nothing — and none were dropped
+    slices = [e for e in doc["traceEvents"]
+              if e.get("pid") == ENGINE_PID and e.get("ph") == "X"]
+    assert rep.steps - 1 <= len(slices) <= rep.steps and tr.dropped == 0
+    assert all(e["dur"] >= 0 for e in slices)
+
+
+def test_trace_summary_waterfall_is_consistent(traced):
+    _, _, rep, _ = traced
+    summ = rep.trace_summary
+    # the final drain tick (tick() returns not-alive) is traced but not a
+    # counted engine step
+    assert rep.steps <= summ["ticks"] <= rep.steps + 1
+    assert set(summ["requests"]) == {str(r["rid"]) for r in rep.requests}
+    for r in rep.requests:
+        row = summ["requests"][str(r["rid"])]
+        assert row["finished_step"] == r["finished_step"]
+        assert row["reason"] == r["finish_reason"]
+        assert row["chunks"] >= 1                  # everyone prefilled
+        # waterfall segments are non-negative and sum to the total
+        segs = [row["queue_wait_us"], row["prefill_us"], row["decode_us"]]
+        assert all(s is not None and s >= 0 for s in segs), row
+        assert row["total_us"] == pytest.approx(sum(segs))
+    pct = summ["percentiles"]["total_us"]
+    assert pct["n"] == len(rep.requests) and pct["p99"] >= pct["p50"]
+
+
+# ==========================================================================
+# Per-site attribution: bit-exact sums, chained I/O savings
+# ==========================================================================
+def test_site_attribution_sums_bit_exactly(traced):
+    _, plain, rep, _ = traced
+    for r in (plain, rep):                # attribution never needs a tracer
+        attr = r.site_attribution
+        assert attr["tokens"] == r.tokens_priced > 0
+        ops = e_j = 0.0
+        for row in attr["per_site"].values():   # left-to-right, table order
+            ops += row["ops"]
+            e_j += row["energy_j"]
+        assert ops == r.analog_ops              # bit-exact, no approx
+        assert e_j == r.analog_energy_j
+        assert attr["fj_per_op"] == r.fj_per_op
+    # traced and untraced runs price identically
+    assert rep.site_attribution == plain.site_attribution
+
+
+def test_chained_attribution_exposes_saved_io():
+    base = _cfg()
+    chained = base.replace(tdvmm_plan=TDVMMPlan(rules=(
+        tdvmm_rule("ffn.*", enabled=True, backend="jnp"),
+        tdvmm_rule("ffn.in", chain=True))))
+    a_un = energy_model.site_attribution(
+        energy_model.serving_energy_model(base, tile_n=64), tokens=100)
+    a_ch = energy_model.site_attribution(
+        energy_model.serving_energy_model(chained, tile_n=64), tokens=100)
+    assert a_un["io_saved_j"] == 0.0 and a_un["chains"] == []
+    assert a_ch["chains"] == [["ffn.in", "ffn.out"]]
+    assert a_ch["io_saved_j"] > 0.0
+    # both ends of the chained pair show their removed conversion
+    for site in ("ffn.in", "ffn.out"):
+        assert a_ch["per_site"][site]["io_saved_j"] > 0.0, site
+        assert a_ch["per_site"][site]["io_factor"] < 1.0, site
+    assert a_ch["energy_j"] < a_un["energy_j"]
+    with pytest.raises(ValueError, match=">= 0"):
+        energy_model.site_attribution(
+            energy_model.serving_energy_model(base, tile_n=64), tokens=-1)
+
+
+# ==========================================================================
+# Tentpole invariant: the trace rides the snapshot (kill + restore = one
+# continuous schema-valid span stream)
+# ==========================================================================
+def test_trace_rides_snapshot_and_resumes_continuously(served, traced):
+    cfg, params, calib, _ = served
+    reqs, plain, _, base_tr = traced
+    e1 = Engine(cfg, params, ECFG, calib=calib, tracer=Tracer())
+    r1 = e1.run(reqs, FaultConfig(
+        injector=fi.FaultInjector([fi.PreemptAt(plain.steps // 2)])))
+    assert r1.preempted
+    pre_doc = e1.tracer.chrome_trace()
+    validate_chrome_trace(pre_doc)     # auto-closes open spans on the COPY
+    snap = e1.snapshot()
+    e2 = Engine(cfg, params, ECFG, calib=calib, tracer=Tracer())
+    e2.restore(snap)
+    r2 = e2.resume()
+    _same_streams(plain, r2)
+    doc = e2.tracer.chrome_trace()
+    counts = validate_chrome_trace(doc)
+    assert counts["B"] == counts["E"]
+    # continuity: resumed doc contains the pre-kill events plus the rest,
+    # and matches the uninterrupted tracer's span population exactly
+    assert len(doc["traceEvents"]) > len(pre_doc["traceEvents"]) - len(
+        [e for e in pre_doc["traceEvents"]
+         if e.get("args", {}).get("auto_closed")])
+    base_counts = validate_chrome_trace(base_tr.chrome_trace())
+    assert counts["B"] == base_counts["B"]
+    assert counts["i"] == base_counts["i"]
+    assert e2.tracer.ticks == base_tr.ticks
+    # energy bookkeeping survived the kill too
+    assert r2.analog_ops == plain.analog_ops
+    assert r2.tokens_priced == plain.tokens_priced
+    assert r2.site_attribution == plain.site_attribution
+
+
+def test_restore_trace_without_tracer_raises(served, traced):
+    cfg, params, calib, _ = served
+    reqs, plain, _, _ = traced
+    e1 = Engine(cfg, params, ECFG, calib=calib, tracer=Tracer())
+    e1.run(reqs, FaultConfig(
+        injector=fi.FaultInjector([fi.PreemptAt(2)])))
+    bare = Engine(cfg, params, ECFG, calib=calib)
+    with pytest.raises(ValueError, match="tracer"):
+        bare.restore(e1.snapshot())
+
+
+# ==========================================================================
+# Live per-site clip-rate series -> AlertRule (satellite: drift observable
+# before any recalibration runs)
+# ==========================================================================
+def _clip_rules(calib, limit=1e-4):
+    return [AlertRule(f"clip_rate.{s}", kind="threshold", limit=limit)
+            for s in calib.sites()]
+
+
+def test_clip_rate_alert_fires_before_recalibration(served):
+    # Moderate tuning drift moves the live max|z| randomly around the
+    # pinned window; for this (seed, sigma) it lands ABOVE it, so |z| mass
+    # clips and the per-site series rises.  (A huge sigma instead SHRINKS
+    # the latch-normalized z — decorrelation — which the window-ratio
+    # check catches; clip rate is the early-warning side of the pair.)
+    cfg, params, calib, batch = served
+    reqs = _trace(cfg.vocab_size)
+    sink = MetricsSink(rules=_clip_rules(calib))
+    eng = Engine(cfg, params, ECFG, calib=calib, sink=sink)
+    rep = eng.run(reqs, FaultConfig(
+        injector=fi.FaultInjector(
+            [fi.DriftAt(step=4, sigma=0.05, seed=2, repeats=1)]),
+        drift=DriftConfig(probe_batch=batch, observe_every=2,
+                          check_every=10**9, max_len=48)))  # observe only
+    # the alert fired with ZERO recalibrations: the per-site series sees
+    # the drift strictly before any drift_probe recalibration reacts
+    assert rep.recalibrations == 0 and rep.drift_events == []
+    clip_alerts = [a for a in sink.alerts
+                   if a.metric.startswith("clip_rate.")]
+    assert len(clip_alerts) >= 1, sink.alerts
+    assert min(a.step for a in clip_alerts) >= 4  # post-injection only
+    assert rep.compiled_steps == 2                # probe stays eager
+    # the series exist per site and carry the post-drift elevation
+    for s in calib.sites():
+        assert f"clip_rate.{s}" in sink.series
+    assert max(a.value for a in clip_alerts) > 1e-4
+
+
+def test_clip_rate_clean_run_stays_quiet(served):
+    cfg, params, calib, batch = served
+    reqs = _trace(cfg.vocab_size)
+    sink = MetricsSink(rules=_clip_rules(calib))
+    rep = Engine(cfg, params, ECFG, calib=calib, sink=sink).run(
+        reqs, FaultConfig(drift=DriftConfig(
+            probe_batch=batch, observe_every=2, check_every=10**9,
+            max_len=48)))
+    assert [a for a in sink.alerts if a.metric.startswith("clip_rate.")] \
+        == []
+    assert any(k.startswith("clip_rate.") for k in sink.series)
+    assert rep.compiled_steps == 2
+
+
+# ==========================================================================
+# JsonlEmitter durability: flushed on report() and on preemption exit
+# ==========================================================================
+def test_jsonl_flushed_on_report_without_close(served, tmp_path):
+    cfg, params, calib, _ = served
+    reqs = _trace(cfg.vocab_size)
+    path = tmp_path / "metrics.jsonl"
+    sink = MetricsSink(emitters=[JsonlEmitter(path)])
+    Engine(cfg, params, ECFG, calib=calib, sink=sink).run(reqs)
+    # no close(): report() flush+fsync already landed every line
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len([ln for ln in lines if ln["t"] == "metric"]) \
+        == sink.observations > 0
+
+
+def test_jsonl_flushed_on_preemption_exit(served, tmp_path):
+    cfg, params, calib, _ = served
+    reqs = _trace(cfg.vocab_size)
+    path = tmp_path / "metrics.jsonl"
+    sink = MetricsSink(emitters=[JsonlEmitter(path)])
+    rep = Engine(cfg, params, ECFG, calib=calib, sink=sink).run(
+        reqs, FaultConfig(injector=fi.FaultInjector([fi.PreemptAt(3)]),
+                          snapshot_dir=tmp_path))
+    assert rep.preempted
+    lines = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len([ln for ln in lines if ln["t"] == "metric"]) \
+        == sink.observations > 0
+
+
+# ==========================================================================
+# Report plumbing: autotune table + JSON round trip; trace_report.py CLI
+# ==========================================================================
+def test_report_carries_autotune_and_serializes(traced):
+    _, _, rep, _ = traced
+    assert set(rep.autotune) >= {"platform", "entries", "misses"}
+    doc = json.loads(json.dumps(rep.to_json()))
+    assert doc["tokens_priced"] == rep.tokens_priced
+    assert doc["site_attribution"]["per_site"] == \
+        rep.site_attribution["per_site"]
+    assert doc["trace_summary"]["ticks"] >= rep.steps
+
+
+def test_trace_report_script_renders_markdown(traced, tmp_path):
+    _, _, rep, tr = traced
+    trace_path = tmp_path / "trace.json"
+    trace_path.write_text(json.dumps(tr.chrome_trace()))
+    out = tmp_path / "report.md"
+    repo = Path(__file__).resolve().parent.parent
+    run = subprocess.run(
+        [sys.executable, str(repo / "scripts" / "trace_report.py"),
+         str(trace_path), "-o", str(out)],
+        capture_output=True, text=True, timeout=120)
+    assert run.returncode == 0, run.stderr
+    md = out.read_text()
+    assert "## Per-request latency waterfall" in md
+    assert "## Percentiles across requests" in md
+    assert "## Engine ticks by phase" in md
+    # one waterfall row per request, each showing its finish step
+    for r in rep.requests:
+        assert f"| {r['rid']} | {r['finish_reason']} " \
+               f"| {r['finished_step']} |" in md
